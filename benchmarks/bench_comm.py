@@ -1,0 +1,56 @@
+"""Paper's communication-cost panels + the production gossip cost table.
+
+Two views:
+  1. algorithmic: bytes shipped per client per round for each topology at the
+     paper's model sizes (degree x model bytes) — the paper's bar panels;
+  2. compiled: per-device wire bytes of the *lowered production gossip* for a
+     mid-size LM on the single-pod mesh, dense-mixing vs ppermute vs
+     int8-quantized ppermute (from the dry-run JSONs when present).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core import topology
+from repro.core.mixing import chow_matrix
+
+
+def algorithmic(n: int = 100, model_bytes: int = 4 * 10**6) -> None:
+    entries = {
+        "ring": 2.0,
+        "expander-d3": 3.0,
+        "expander-d4": 4.0,
+        "erdos-renyi": float(topology.erdos_renyi_adjacency(n, seed=0).sum() / n),
+        "complete": float(n - 1),
+    }
+    for name, deg in entries.items():
+        emit(f"comm/algorithmic/{name}/n{n}", 0.0,
+             f"bytes_per_client_per_round={int(deg * model_bytes)};degree={deg:.1f}")
+
+
+def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*train_4k*.json"))):
+        rec = json.load(open(path))
+        if rec.get("skipped"):
+            continue
+        r = rec["roofline"]
+        emit(f"comm/compiled/{rec['arch']}/{rec['mesh']}"
+             + (f"/{rec['label']}" if rec.get("label") else ""),
+             0.0,
+             f"wire_MB_per_dev={r['wire_bytes']/2**20:.1f};"
+             f"permute_MB={r['collectives']['collective-permute']/2**20:.1f};"
+             f"allreduce_MB={r['collectives']['all-reduce']/2**20:.1f};"
+             f"allgather_MB={r['collectives']['all-gather']/2**20:.1f};"
+             f"gossip={rec.get('gossip_impl')}")
+
+
+def main() -> None:
+    algorithmic()
+    compiled()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfedavg, failures as failures_lib, gossip
+from repro.core.topology import (Overlay, complete_adjacency,
+                                 erdos_renyi_adjacency, expander_overlay,
+                                 ring_overlay)
+from repro.core.mixing import chow_matrix
+
+
+def time_call(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (CPU)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def topology_suite(n: int, degree: int = 3, seed: int = 0):
+    """The paper's §5 topology set: ring / expander / ER / complete.
+
+    Returns {name: (mix_fn, bytes_sent_per_client_per_round_weight)} where the
+    mix function acts on a client-stacked pytree, and the comm weight is the
+    number of neighbors each client ships its model to (paper's comm-cost
+    metric: cost = degree x model_bytes).
+    """
+    out = {}
+    ring = ring_overlay(n)
+    out["ring"] = (gossip.make_gossip_spec(ring), 2)
+    exp = expander_overlay(n, degree, seed=seed)
+    out[f"expander-d{degree}"] = (gossip.make_gossip_spec(exp), degree)
+    er = erdos_renyi_adjacency(n, seed=seed)
+    out["erdos-renyi"] = (chow_matrix(er), float(er.sum() / n))
+    comp = complete_adjacency(n)
+    out["complete"] = (chow_matrix(comp), n - 1)
+    return out
+
+
+def mix_with(params, mixer):
+    if isinstance(mixer, gossip.GossipSpec):
+        return gossip.mix_schedules(params, mixer)
+    return gossip.mix_dense(params, jnp.asarray(mixer, jnp.float32))
+
+
+def run_dfl(params, loss_fn, batch_fn, mixer, rounds: int, dcfg,
+            eval_fn=None, lr: float | None = None,
+            failure_plan: failures_lib.FailurePlan | None = None,
+            base_spec: gossip.GossipSpec | None = None):
+    """Generic DFL loop over a client-stacked state (benchmark harness)."""
+
+    @jax.jit
+    def local_phase(params, batches, lr_val):
+        def client(p, b):
+            v = jax.tree.map(jnp.zeros_like, p)
+            p, _, loss = dfedavg.local_round(p, v, b, loss_fn, dcfg, lr=lr_val)
+            return p, loss
+        return jax.vmap(client, in_axes=(0, 0))(params, batches)
+
+    history = []
+    for rnd in range(rounds):
+        batches = batch_fn(rnd)
+        params, losses = local_phase(params, batches,
+                                     jnp.asarray(lr or dcfg.lr, jnp.float32))
+        cur = mixer
+        if failure_plan is not None:
+            mask = failure_plan.alive_mask(rnd)
+            if isinstance(mixer, gossip.GossipSpec):
+                cur = failures_lib.alive_adjusted_spec(mixer, mask)
+            else:
+                from repro.core.gossip import mix_dense_masked
+                params = mix_dense_masked(params, jnp.asarray(mixer), mask)
+                cur = None
+        if cur is not None:
+            params = mix_with(params, cur)
+        rec = {"round": rnd, "train_loss": float(jnp.mean(losses))}
+        if eval_fn is not None:
+            rec.update(eval_fn(params, failure_plan.alive_mask(rnd)
+                               if failure_plan else None))
+        history.append(rec)
+    return params, history
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The required CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,126 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+        [--label ""] [--what dryrun|roofline|candidates]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.roofline import hw
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["stablelm-12b", "gemma2-2b", "qwen2-72b", "qwen2.5-3b",
+              "grok-1-314b", "kimi-k2-1t-a32b", "musicgen-medium",
+              "rwkv6-1.6b", "internvl2-1b", "zamba2-2.7b"]
+
+
+def load(dir_: str, label: str = "") -> list[dict]:
+    recs = []
+    seen_skips = set()
+    for path in glob.glob(os.path.join(dir_, "*.json")):
+        rec = json.load(open(path))
+        if rec.get("skipped"):
+            key = (rec["arch"], rec["shape"], rec["mesh"])
+            if key in seen_skips:
+                continue
+            seen_skips.add(key)
+        elif rec.get("label", "") != label:
+            continue
+        recs.append(rec)
+    recs.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"]), r["mesh"]))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dominant_fraction(r: dict) -> float:
+    """useful-time / dominant-term: how close the dominant term is to the
+    analytic lower bound for that term. For compute-dominated cells this is
+    MFU-at-the-bound; for others it is the fraction of the dominant term that
+    is 'useful' compute."""
+    roof = r["roofline"]
+    dom = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+    useful_s = r["model_flops_per_chip"] / hw.PEAK_FLOPS_BF16
+    return useful_s / dom if dom else 0.0
+
+
+def table_dryrun(recs):
+    print("| arch | shape | mesh | peak GiB/chip | fits 16G | lower s | compile s | clients | gossip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — | SKIP: {r['skipped'][:40]}… |")
+            continue
+        m = r["memory"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_bytes(m['peak_bytes'])} | {'Y' if m['fits_16g'] else 'N'} "
+              f"| {r['seconds_lower']} | {r['seconds_compile']} "
+              f"| {r.get('n_clients', '—')} | {r.get('gossip_impl', '—')} |")
+
+
+def table_roofline(recs, mesh="single"):
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_TF/chip | HLO_TF/chip | useful ratio | frac of roofline | one-liner |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("skipped") or r["mesh"] != mesh:
+            continue
+        roof = r["roofline"]
+        frac = dominant_fraction(r)
+        hint = {
+            "compute": "cut redundant FLOPs (remat/mask waste) or shard wider",
+            "memory": "raise arithmetic intensity: fuse, larger tiles, bf16",
+            "collective": "reshard to kill all-gathers / overlap gossip",
+        }[roof["dominant"]]
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {roof['compute_s']:.3f} | {roof['memory_s']:.3f} "
+              f"| {roof['collective_s']:.3f} | **{roof['dominant']}** "
+              f"| {r['model_flops_per_chip']/1e12:.2f} | {roof['flops']/1e12:.2f} "
+              f"| {r['useful_flop_ratio']:.3f} | {frac:.3f} | {hint} |")
+
+
+def candidates(recs):
+    live = [r for r in recs if not r.get("skipped") and r["mesh"] == "single"]
+    by_coll = max(live, key=lambda r: r["roofline"]["collective_s"]
+                  / max(sum([r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                             r["roofline"]["collective_s"]]), 1e-12))
+    by_frac = min(live, key=dominant_fraction)
+    print("most collective-bound:", by_coll["arch"], by_coll["shape"],
+          by_coll["roofline"]["collective_s"])
+    print("worst roofline fraction:", by_frac["arch"], by_frac["shape"],
+          dominant_fraction(by_frac))
+    over = [(r["arch"], r["shape"], r["mesh"],
+             round(r["memory"]["peak_bytes"] / 2**30, 1))
+            for r in recs if not r.get("skipped")
+            and not r["memory"]["fits_16g"]]
+    print("cells over 16GiB:", len(over))
+    for o in over:
+        print("   ", o)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--label", default="")
+    ap.add_argument("--what", default="candidates",
+                    choices=["dryrun", "roofline", "candidates"])
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir, args.label)
+    if args.what == "dryrun":
+        table_dryrun(recs)
+    elif args.what == "roofline":
+        table_roofline(recs, args.mesh)
+    else:
+        candidates(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+Mapping to the paper:
+  bench_spectral  -> §3 connectivity theory comparison (Fig. 2 + bounds)
+  bench_mnist     -> Figs. 4 (IID) and 5 (non-IID)
+  bench_lm        -> Fig. 6 (Shakespeare LM)
+  bench_failures  -> Figs. 7 & 8 (10%/20% client failures)
+  bench_comm      -> communication-cost panels (+ compiled gossip bytes)
+  bench_kernels   -> Pallas kernel traffic models (TPU target)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer rounds (CI-sized)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_comm, bench_failures, bench_kernels,
+                            bench_lm, bench_mnist, bench_spectral)
+
+    rounds = 6 if args.fast else 10
+    suite = [
+        ("spectral", lambda: bench_spectral.main()),
+        ("kernels", lambda: bench_kernels.main()),
+        ("comm", lambda: bench_comm.main()),
+        ("mnist", lambda: bench_mnist.main(rounds=rounds)),
+        ("lm", lambda: bench_lm.main(rounds=rounds + 4)),
+        ("failures", lambda: bench_failures.main(rounds=rounds)),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suite:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

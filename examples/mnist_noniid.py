@@ -1,0 +1,75 @@
+"""Paper §5 'MNIST Non-IID' experiment: each client holds ONE digit class.
+
+    PYTHONPATH=src python examples/mnist_noniid.py [--rounds 10]
+
+Reproduces the qualitative result of Fig. 5: the expander graph converges
+much faster than the Ring under extreme label skew, at one third of the
+fully-connected graph's communication cost.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfedavg, gossip, topology
+from repro.core.mixing import chow_matrix
+from repro.data import federated, mnist, pipeline
+from repro.models import mlp
+from repro.models.params import init_params
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=10)
+ap.add_argument("--clients", type=int, default=10)
+args = ap.parse_args()
+
+train, test = mnist.make_mnist_like(4000, 800, seed=0)
+parts = federated.label_shard_split(train.y, args.clients, seed=0)
+batcher = pipeline.ClientBatcher(train.x, train.y, parts, batch_size=20,
+                                 local_steps=3, seed=0)
+cfg = dfedavg.DFedAvgMConfig(local_steps=3, lr=0.05, momentum=0.9)
+struct = mlp.param_struct()
+init = jax.vmap(lambda i: init_params(struct, jax.random.key(0)))(
+    jnp.arange(args.clients))
+tex, tey = jnp.asarray(test.x), jnp.asarray(test.y)
+
+MODEL_BYTES = sum(int(jnp.ones(1).size) for _ in [0]) or 0
+MODEL_BYTES = (784 * 200 + 200 + 200 * 10 + 10) * 4
+
+mixers = {
+    "ring (deg 2)": gossip.make_gossip_spec(topology.ring_overlay(args.clients)),
+    "expander d=3": gossip.make_gossip_spec(
+        topology.expander_overlay(args.clients, 3, seed=0)),
+    "complete": jnp.asarray(
+        chow_matrix(topology.complete_adjacency(args.clients)), jnp.float32),
+}
+
+
+@jax.jit
+def local_phase(params, batches):
+    def client(p, b):
+        v = jax.tree.map(jnp.zeros_like, p)
+        p, _, loss = dfedavg.local_round(p, v, b, lambda pp, bb: mlp.loss_fn(pp, bb), cfg)
+        return p, loss
+    return jax.vmap(client)(params, batches)
+
+
+for name, mixer in mixers.items():
+    params = init
+    accs = []
+    for rnd in range(args.rounds):
+        b = batcher.round_batches(rnd)
+        params, _ = local_phase(params, {"x": jnp.asarray(b["x"]),
+                                         "y": jnp.asarray(b["y"])})
+        if isinstance(mixer, gossip.GossipSpec):
+            params = gossip.mix_schedules(params, mixer)
+        else:
+            params = gossip.mix_dense(params, mixer)
+        p0 = jax.tree.map(lambda x: x[0], params)
+        _, aux = mlp.loss_fn(p0, {"x": tex, "y": tey})
+        accs.append(float(aux["acc"]))
+    deg = (mixer.degree if isinstance(mixer, gossip.GossipSpec)
+           else args.clients - 1)
+    comm = deg * MODEL_BYTES / 1e6
+    print(f"{name:14s} acc/round: "
+          + " ".join(f"{a:.2f}" for a in accs)
+          + f"   comm={comm:.1f} MB/client/round")

@@ -1,0 +1,58 @@
+"""Quickstart: decentralized federated learning on an expander overlay in
+~40 lines of public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+16 clients with *different* local optima collaboratively find the average
+optimum without any server — first over a Ring (slow mixing), then over the
+paper's d-regular expander (fast mixing).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfedavg, gossip, topology
+
+N_CLIENTS, DIM, ROUNDS = 16, 8, 20
+
+rng = np.random.default_rng(0)
+targets = jnp.asarray(rng.standard_normal((N_CLIENTS, DIM)) * 3, jnp.float32)
+consensus_opt = jnp.mean(targets, 0)
+
+
+def loss_fn(params, batch):
+    return jnp.mean(jnp.square(params["w"] - batch["target"])), {}
+
+
+cfg = dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.5)
+
+
+def train(overlay) -> list[float]:
+    spec = gossip.make_gossip_spec(overlay)
+    print(f"  {overlay.name}: degree={overlay.degree} "
+          f"lambda={spec.lam:.3f} (lower mixes faster)")
+    params = {"w": jnp.zeros((N_CLIENTS, DIM))}
+    errs = []
+    for _ in range(ROUNDS):
+        def client(p, tgt):
+            v = jax.tree.map(jnp.zeros_like, p)
+            batches = {"target": jnp.broadcast_to(tgt, (cfg.local_steps, DIM))}
+            p, _, _ = dfedavg.local_round(p, v, batches, loss_fn, cfg)
+            return p
+        params = jax.vmap(client)(params, targets)      # local training
+        params = gossip.mix_schedules(params, spec)     # gossip w/ neighbors
+        errs.append(float(jnp.sqrt(jnp.mean(
+            jnp.square(params["w"] - consensus_opt[None])))))
+    return errs
+
+
+print("DFedAvgM: 16 clients, heterogeneous objectives, no server\n")
+ring_errs = train(topology.ring_overlay(N_CLIENTS))
+exp_errs = train(topology.expander_overlay(N_CLIENTS, 4, seed=0))
+
+print(f"\n{'round':>5} {'ring err':>10} {'expander err':>13}")
+for i in range(0, ROUNDS, 4):
+    print(f"{i:>5} {ring_errs[i]:>10.4f} {exp_errs[i]:>13.4f}")
+print(f"\nfinal: ring={ring_errs[-1]:.4f}  expander={exp_errs[-1]:.4f} "
+      f"({ring_errs[-1] / max(exp_errs[-1], 1e-9):.1f}x closer to consensus)")
+assert exp_errs[-1] < ring_errs[-1]

@@ -1,0 +1,3 @@
+"""Checkpoint substrate: atomic sharded npz store + rotation/elastic manager."""
+from repro.checkpoint.manager import CheckpointManager, reshard_clients  # noqa: F401
+from repro.checkpoint.store import available_steps, load, save  # noqa: F401

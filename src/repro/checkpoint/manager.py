@@ -1,0 +1,57 @@
+"""Checkpoint manager: rotation, resume, and elastic client-set resharding."""
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    save_every: int = 10   # rounds
+
+    def maybe_save(self, rnd: int, tree: PyTree, metadata: dict | None = None
+                   ) -> str | None:
+        if rnd % self.save_every != 0:
+            return None
+        path = store.save(self.directory, rnd, tree, metadata)
+        self._rotate()
+        return path
+
+    def _rotate(self) -> None:
+        steps = store.available_steps(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def restore(self, tree_like: PyTree, step: int | None = None
+                ) -> tuple[PyTree, dict] | None:
+        try:
+            return store.load(self.directory, tree_like, step)
+        except FileNotFoundError:
+            return None
+
+    def latest_step(self) -> int | None:
+        steps = store.available_steps(self.directory)
+        return steps[-1] if steps else None
+
+
+def reshard_clients(stacked: PyTree, old2new: np.ndarray) -> PyTree:
+    """Elastic restart: drop dead clients' rows from a client-stacked state.
+
+    old2new[old_client] = new index or -1 (dead) — produced by the overlay's
+    splice repair. Used when resuming a checkpoint written before a failure.
+    """
+    alive = np.asarray([i for i, m in enumerate(old2new) if m >= 0])
+    return jax.tree.map(lambda x: jnp.take(jnp.asarray(x), alive, axis=0), stacked)

@@ -1,0 +1,3 @@
+"""Config system: schema (`base`) + the assigned-architecture registry."""
+from repro.configs import base, registry  # noqa: F401
+from repro.configs.registry import ARCHS, ARCH_IDS, get, parallel_for, reduced, shapes_for  # noqa: F401

@@ -1,0 +1,200 @@
+"""Config schema: model architecture, input shapes, parallelism, DFL settings.
+
+Everything is a frozen dataclass so configs are hashable and can be closed
+over by jitted functions / used as static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = [
+    "MoEConfig",
+    "SSMConfig",
+    "RWKVConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "ParallelConfig",
+    "DFLConfig",
+    "LM_SHAPES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    n_shared_experts: int = 0      # always-on experts (kimi-style)
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block settings."""
+
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2                # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256               # SSD chunk length
+    attn_every: int = 6            # zamba2: shared attention after every k blocks
+    n_groups: int = 1              # B/C groups
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV6 "Finch" settings."""
+
+    head_dim: int = 64
+    decay_lora: int = 64           # rank of the data-dependent decay LoRA
+    mix_lora: int = 32             # rank of the token-shift mix LoRA
+    # chunked WKV evaluation length; kept short so |LOG_W_MIN|*chunk stays
+    # inside the f32 exp range (see models/rwkv.py numerical-safety note)
+    chunk: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["transformer", "rwkv", "zamba", "mlp", "lstm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None            # default: d_model // n_heads
+    act: Literal["silu", "gelu"] = "silu"
+    norm: Literal["rms", "layer"] = "rms"
+    qkv_bias: bool = False
+    pos_emb: Literal["rope", "sinusoidal", "none"] = "rope"
+    rope_theta: float = 10_000.0
+    attn_softcap: float | None = None      # gemma2: 50.0
+    final_softcap: float | None = None     # gemma2: 30.0
+    local_window: int | None = None        # gemma2: 4096
+    layer_pattern: Literal["global", "local_global"] = "global"
+    tie_embeddings: bool = False
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rwkv: RWKVConfig | None = None
+    frontend: Literal["none", "audio_stub", "vision_stub"] = "none"
+    stub_prefix: int = 0                   # precomputed frontend embeddings prepended
+    post_norm: bool = False                # gemma2: post-attn/post-ffn norms
+    scale_embeddings: bool = False         # gemma2: x *= sqrt(d_model)
+    norm_plus_one: bool = False            # gemma2: rmsnorm scale = (1 + w)
+    dtype: str = "bfloat16"
+    attn_q_chunk: int = 1024               # query-chunked prefill attention
+    ce_chunk: int = 512                    # seq chunk for the fused CE loss
+    # set True only for sub-quadratic families; gates the long_500k shape
+    supports_500k: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 128 so the TP axis always divides it
+        (standard practice; pad logits are masked to -inf in the loss/decoder)."""
+        return (self.vocab + 127) // 128 * 128
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), used for rooflines."""
+        d, v = self.d_model, self.vocab
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d  # output head
+        hd = self.resolved_head_dim
+        qd, kvd = self.n_heads * hd, self.n_kv_heads * hd
+        if self.family == "rwkv":
+            assert self.rwkv is not None
+            r = self.rwkv
+            per = (5 * d * d                    # r,k,v,g,o (time-mix projections)
+                   + 2 * d * r.decay_lora       # decay LoRA
+                   + 5 * 2 * d * r.mix_lora     # per-projection mix LoRAs
+                   + d * self.d_ff + self.d_ff * d  # channel mix
+                   + 2 * d)                     # norms
+            return total + self.n_layers * per
+        if self.family == "zamba":
+            assert self.ssm is not None
+            s = self.ssm
+            d_in = s.expand * d
+            per_mamba = (d * (2 * d_in + 2 * s.n_groups * s.d_state + d_in // s.head_dim)
+                         + d_in * s.conv_width + d_in * d + 2 * d + d_in)
+            n_attn = self.n_layers // s.attn_every
+            shared = (d * (qd + 2 * kvd) + qd * d + 3 * d * self.d_ff + 2 * d)
+            return total + self.n_layers * per_mamba + shared  # shared counted once
+        # transformer
+        attn = d * (qd + 2 * kvd) + qd * d
+        if self.qkv_bias:
+            attn += qd + 2 * kvd
+        if self.moe is not None:
+            m = self.moe
+            ffn = (m.n_experts + m.n_shared_experts) * 3 * d * m.d_ff + d * m.n_experts
+        else:
+            ffn = 3 * d * self.d_ff
+        per = attn + ffn + 2 * d
+        return total + self.n_layers * per
+
+    def active_param_count(self) -> int:
+        """Active params per token (= param_count for dense; routed subset for MoE)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        dense_ffn_per_layer = (m.top_k + m.n_shared_experts) * 3 * d * m.d_ff + d * m.n_experts
+        full_ffn_per_layer = (m.n_experts + m.n_shared_experts) * 3 * d * m.d_ff + d * m.n_experts
+        return self.param_count() - self.n_layers * (full_ffn_per_layer - dense_ffn_per_layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+# the assigned LM shape set (identical across the 10 archs)
+LM_SHAPES: tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How one (arch x mesh) cell factorizes the device grid.
+
+    The production mesh is fixed at (16,16)=(data,model) or (2,16,16)=
+    (pod,data,model); `clients_per_pod` coarsens the DFL client axis by
+    regrouping data rows into (client, fsdp): data=16 -> client=clients_per_pod,
+    fsdp=16/clients_per_pod. fsdp does ZeRO sharding of each client's
+    params/momentum AND data-parallelism of the client's local batch.
+    """
+
+    clients_per_pod: int = 16
+    remat: Literal["none", "block"] = "block"
+    attn_mode: Literal["heads", "sequence"] = "heads"  # TP choice for attention
+    gossip_impl: Literal["dense", "ppermute", "ppermute_quant"] = "ppermute"
+    local_steps: int = 2          # K inside the lowered round (scan)
+    use_fused_sgdm: bool = True
+    grad_accum: int = 4           # microbatches per local step (memory knob)
+    zero3: bool = True            # shard weights over fsdp (ZeRO-3) vs replicate
+    seq_parallel: bool = False    # Megatron-SP residual sharding over TP axis
+    tp: int | None = None         # TP width (None = full model axis = 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class DFLConfig:
+    """Overlay settings for the DFL round."""
+
+    topology: Literal["expander", "ring", "complete"] = "expander"
+    degree: int = 4
+    seed: int = 0
+    lr: float = 0.01
+    momentum: float = 0.9

@@ -1,0 +1,22 @@
+"""Core contribution of the paper: expander-graph overlay networks + DFedAvgM.
+
+Public API:
+
+* `topology` — overlay builders (ring / ER / complete / d-regular expander via
+  virtual ring spaces), join + two-hop failure repair.
+* `spectral` — Laplacian spectra, kappa(L), theta*, lambda(M), C_lambda.
+* `mixing`   — mixing matrices for arbitrary adjacencies + validity checks.
+* `gossip`   — the three gossip executors (dense / gather / ppermute).
+* `dfedavg`  — the DFedAvgM local solver (paper eq. 2.1).
+* `failures` — failure plans, straggler weight-renormalization, splice repair.
+* `compression` — int8 / top-k payload compression (beyond-paper).
+"""
+from repro.core import (  # noqa: F401
+    compression,
+    dfedavg,
+    failures,
+    gossip,
+    mixing,
+    spectral,
+    topology,
+)

@@ -1,0 +1,89 @@
+"""Gossip-payload / gradient compression (distributed-optimization substrate).
+
+The paper deliberately runs *without* compression ("no tuned optimization and
+data compression algorithms are used") — so compression is OFF in the
+paper-faithful configuration and exercised only in the beyond-paper perf
+configurations and tests.
+
+Provided:
+* symmetric per-tensor int8 quantization (used by the quantized gossip path;
+  the Pallas kernel in `kernels/quant_gossip` is the TPU implementation, this
+  module is the jnp substrate + error-feedback bookkeeping);
+* top-k sparsification with error feedback (Stich et al. style) for gradient
+  exchange experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "topk_sparsify",
+    "ErrorFeedbackState",
+    "ef_compress",
+]
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: q = round(x/s), s = max|x|/127."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_sparsify(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Keep the k largest-magnitude entries (flat); returns (values, flat idx)."""
+    flat = x.reshape(-1)
+    k = min(k, flat.shape[0])
+    _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+    return flat[idx], idx
+
+
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    """Residual memory for biased compressors (top-k)."""
+
+    residual: PyTree
+
+    @staticmethod
+    def init(tree: PyTree) -> "ErrorFeedbackState":
+        return ErrorFeedbackState(jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), tree))
+
+
+def ef_compress(tree: PyTree, state: ErrorFeedbackState, k_fraction: float
+                ) -> tuple[PyTree, ErrorFeedbackState]:
+    """Error-feedback top-k: compress (x + residual), remember what was dropped.
+
+    Returns the *dense decompressed* payload (what the receiver reconstructs)
+    and the updated residual state — the dense form keeps the simulator simple
+    while preserving the exact algorithmic semantics.
+    """
+
+    def one(x, r):
+        y = x.astype(jnp.float32) + r
+        k = max(1, int(k_fraction * y.size))
+        vals, idx = topk_sparsify(y, k)
+        dense = jnp.zeros(y.size, dtype=jnp.float32).at[idx].set(vals)
+        dense = dense.reshape(y.shape)
+        return dense.astype(x.dtype), y - dense
+
+    flat_x, treedef = jax.tree.flatten(tree)
+    flat_r = jax.tree.leaves(state.residual)
+    outs = [one(x, r) for x, r in zip(flat_x, flat_r)]
+    payload = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    resid = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return payload, ErrorFeedbackState(resid)

@@ -1,0 +1,142 @@
+"""Client-failure modeling, straggler mitigation, and overlay repair (paper §4.1, §5.2).
+
+Two layers of resilience, matching the paper's protocol:
+
+1. *Transient* (per-round) failures / stragglers: a client misses one gossip
+   round. Surviving neighbors renormalize their mixing weights over the alive
+   in-neighborhood (`mix_dense_masked`, or `alive_adjusted_spec` for the
+   schedule path). No topology change.
+2. *Permanent* failures: the two-hop splice repair (`Overlay.remove_nodes`)
+   rebuilds the schedules; `repair_and_remap` additionally remaps any stacked
+   client state so training resumes with the survivors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip as gossip_lib
+from repro.core.topology import Overlay
+
+__all__ = [
+    "FailurePlan",
+    "sample_failures",
+    "alive_adjusted_spec",
+    "repair_and_remap",
+    "HealthTracker",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Deterministic failure script for experiments: round -> dead client ids."""
+
+    n_clients: int
+    events: tuple[tuple[int, tuple[int, ...]], ...]  # (round, dead ids) sorted
+
+    def dead_at(self, rnd: int) -> set[int]:
+        dead: set[int] = set()
+        for r, ids in self.events:
+            if r <= rnd:
+                dead.update(ids)
+        return dead
+
+    def alive_mask(self, rnd: int) -> np.ndarray:
+        mask = np.ones(self.n_clients, dtype=np.float32)
+        for i in self.dead_at(rnd):
+            mask[i] = 0.0
+        return mask
+
+
+def sample_failures(n_clients: int, drop_fraction: float, at_round: int,
+                    seed: int = 0) -> FailurePlan:
+    """Paper §5.2: drop `drop_fraction` of clients at a given round."""
+    rng = np.random.default_rng(seed)
+    k = int(round(drop_fraction * n_clients))
+    dead = tuple(int(x) for x in rng.choice(n_clients, size=k, replace=False))
+    return FailurePlan(n_clients=n_clients, events=((at_round, dead),))
+
+
+def alive_adjusted_spec(spec: gossip_lib.GossipSpec,
+                        alive: np.ndarray) -> gossip_lib.GossipSpec:
+    """Rebuild a GossipSpec for one round with some clients down (straggler path).
+
+    Dead clients are turned into fixed points of every schedule (they neither
+    send nor receive); each surviving client renormalizes its weights over its
+    alive in-neighborhood so rows still sum to 1. Symmetry is preserved because
+    schedules stay closed under inverse after fixing the same points.
+    """
+    alive = np.asarray(alive).astype(bool)
+    n = spec.n_clients
+    new_perms = []
+    new_recv = []
+    in_weight = np.full(n, 0.0)
+    for rf in spec.recv_from:
+        rf = np.asarray(rf)
+        keep = alive & alive[rf] & (rf != np.arange(n))
+        pairs = tuple((int(rf[i]), int(i)) for i in range(n) if keep[i])
+        new_perms.append(pairs)
+        new_recv.append(tuple(int(rf[i]) if keep[i] else int(i) for i in range(n)))
+        in_weight += keep.astype(np.float64) * spec.edge_weight
+    base_self = np.asarray(spec.self_weights)
+    # lost weight folded into self; then renormalize (rows already sum to 1 by
+    # construction, but folding keeps it explicit and robust to fixed points)
+    new_self = 1.0 - in_weight
+    new_self = np.where(alive, new_self, 1.0)
+    return gossip_lib.GossipSpec(
+        n_clients=n,
+        perms=tuple(new_perms),
+        recv_from=tuple(new_recv),
+        self_weights=tuple(float(x) for x in new_self),
+        edge_weight=spec.edge_weight,
+        lam=spec.lam,  # stale; exact lam of the masked matrix is reported offline
+    )
+
+
+def repair_and_remap(overlay: Overlay, dead: list[int],
+                     stacked_state: PyTree | None = None
+                     ) -> tuple[Overlay, gossip_lib.GossipSpec, PyTree | None]:
+    """Permanent failure: two-hop splice + state remap for the survivors."""
+    repaired, old2new = overlay.remove_nodes(dead)
+    spec = gossip_lib.make_gossip_spec(repaired)
+    new_state = None
+    if stacked_state is not None:
+        alive_idx = np.asarray([i for i in range(overlay.n) if old2new[i] >= 0])
+        new_state = jax.tree.map(lambda x: jnp.take(x, alive_idx, axis=0),
+                                 stacked_state)
+    return repaired, spec, new_state
+
+
+class HealthTracker:
+    """Minimal heartbeat bookkeeping for the elastic runtime.
+
+    Production semantics: each client group posts a heartbeat per round; a
+    client missing `straggler_rounds` rounds is treated as a straggler (weight
+    renormalization), and one missing `failure_rounds` rounds is declared dead
+    (triggering splice repair + re-jit). In the simulator the heartbeats come
+    from the FailurePlan.
+    """
+
+    def __init__(self, n_clients: int, straggler_rounds: int = 1,
+                 failure_rounds: int = 3):
+        self.n = n_clients
+        self.straggler_rounds = straggler_rounds
+        self.failure_rounds = failure_rounds
+        self.missed = np.zeros(n_clients, dtype=np.int64)
+
+    def observe(self, alive_mask: np.ndarray) -> None:
+        alive = np.asarray(alive_mask).astype(bool)
+        self.missed = np.where(alive, 0, self.missed + 1)
+
+    def stragglers(self) -> np.ndarray:
+        return np.nonzero((self.missed >= self.straggler_rounds)
+                          & (self.missed < self.failure_rounds))[0]
+
+    def dead(self) -> np.ndarray:
+        return np.nonzero(self.missed >= self.failure_rounds)[0]

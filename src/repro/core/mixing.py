@@ -1,0 +1,85 @@
+"""Mixing matrices (paper Definition 2.1) for arbitrary overlay adjacencies.
+
+Schedule-decomposable overlays (ring / expander) should prefer
+``Overlay.mixing_matrix`` / ``Overlay.chow_weights``; the builders here work on
+any adjacency matrix and cover the paper's ER and fully-connected baselines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import spectral
+
+__all__ = [
+    "chow_matrix",
+    "metropolis_hastings_matrix",
+    "max_degree_matrix",
+    "uniform_average_matrix",
+    "validate_mixing_matrix",
+]
+
+
+def chow_matrix(adj: np.ndarray, theta: float | None = None) -> np.ndarray:
+    """M = I - 2/((1+theta) lam_max(L)) L with theta defaulting to theta* = 1/kappa."""
+    lap = spectral.laplacian(adj)
+    ev = np.linalg.eigvalsh(lap)
+    lam2, lam_max = float(ev[1]), float(ev[-1])
+    if lam2 <= 1e-12:
+        raise ValueError("graph is disconnected")
+    if theta is None:
+        theta = spectral.theta_star(lam_max / lam2)
+    c = 2.0 / ((1.0 + theta) * lam_max)
+    return np.eye(adj.shape[0]) - c * lap
+
+
+def metropolis_hastings_matrix(adj: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings weights: m_ij = 1/(1+max(d_i,d_j)) on edges."""
+    adj = np.asarray(adj, dtype=np.float64)
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    m = np.zeros((n, n))
+    ii, jj = np.nonzero(adj)
+    m[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    np.fill_diagonal(m, 1.0 - m.sum(axis=1))
+    return m
+
+
+def max_degree_matrix(adj: np.ndarray) -> np.ndarray:
+    """Maximum-degree weights: m_ij = 1/(1+d_max) on edges."""
+    adj = np.asarray(adj, dtype=np.float64)
+    n = adj.shape[0]
+    dmax = adj.sum(axis=1).max()
+    m = adj / (1.0 + dmax)
+    np.fill_diagonal(m, 1.0 - m.sum(axis=1))
+    return m
+
+
+def uniform_average_matrix(n: int) -> np.ndarray:
+    """The fully-connected FedAvg aggregator: M = 11^T / N."""
+    return np.full((n, n), 1.0 / n)
+
+
+def validate_mixing_matrix(m: np.ndarray, adj: np.ndarray | None = None,
+                           tol: float = 1e-8) -> None:
+    """Assert Definition 2.1: graph pattern, symmetry, null space, spectrum.
+
+    Raises AssertionError with a description on the first violated property.
+    """
+    m = np.asarray(m, dtype=np.float64)
+    n = m.shape[0]
+    assert m.shape == (n, n), "mixing matrix must be square"
+    assert np.allclose(m, m.T, atol=tol), "mixing matrix must be symmetric"
+    if adj is not None:
+        off = ~np.eye(n, dtype=bool)
+        zero_pat = (np.asarray(adj) == 0) & off
+        assert np.all(np.abs(m[zero_pat]) <= tol), \
+            "m_ij must be 0 off the edge set"
+        edge_pat = (np.asarray(adj) > 0) & off
+        assert np.all(m[edge_pat] > -tol), "m_ij must be >= 0 on edges"
+    row = m.sum(axis=1)
+    assert np.allclose(row, 1.0, atol=1e-6), "rows must sum to 1 (null-space prop)"
+    ev = np.linalg.eigvalsh(m)
+    assert ev[-1] <= 1.0 + 1e-6, "I - M must be PSD (eigenvalues <= 1)"
+    assert ev[0] > -1.0 - 1e-9, "M + I must be PD (eigenvalues > -1)"
+    # null{I-M} = span{1}: eigenvalue 1 must be simple for connected graphs
+    assert np.sum(np.abs(ev - 1.0) < 1e-9) == 1, "eigenvalue 1 must be simple"

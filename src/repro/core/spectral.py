@@ -1,0 +1,188 @@
+"""Spectral graph analysis for overlay-network design (paper §2-§3).
+
+Everything here runs on the *host* (numpy) at topology-construction time; the
+resulting mixing weights are baked into jitted train steps as constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "laplacian",
+    "laplacian_spectrum",
+    "kappa",
+    "theta_star",
+    "chow_lambda",
+    "mixing_lambda",
+    "c_lambda",
+    "ramanujan_bound",
+    "ring_kappa_lower_bound",
+    "is_connected",
+    "SpectralReport",
+    "analyze",
+]
+
+
+def laplacian(adj: np.ndarray) -> np.ndarray:
+    """Graph Laplacian L = D - A for a 0/1 symmetric adjacency matrix."""
+    adj = np.asarray(adj, dtype=np.float64)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if not np.allclose(adj, adj.T):
+        raise ValueError("adjacency must be symmetric (undirected graph)")
+    if np.any(np.diag(adj) != 0):
+        raise ValueError("adjacency must have zero diagonal (no self-loops)")
+    deg = adj.sum(axis=1)
+    return np.diag(deg) - adj
+
+
+def laplacian_spectrum(adj: np.ndarray) -> np.ndarray:
+    """Sorted (ascending) eigenvalues of the graph Laplacian."""
+    return np.linalg.eigvalsh(laplacian(adj))
+
+
+def is_connected(adj: np.ndarray, tol: float = 1e-9) -> bool:
+    """Connected iff the second-smallest Laplacian eigenvalue (Fiedler) > 0."""
+    ev = laplacian_spectrum(adj)
+    return bool(ev[1] > tol) if len(ev) > 1 else True
+
+
+def kappa(adj: np.ndarray) -> float:
+    """Reduced condition number kappa(L) = lambda_N(L) / lambda_2(L)  (eq. 3.1)."""
+    ev = laplacian_spectrum(adj)
+    lam2, lamN = float(ev[1]), float(ev[-1])
+    if lam2 <= 1e-12:
+        return float("inf")  # disconnected graph
+    return lamN / lam2
+
+
+def theta_star(kappa_val: float) -> float:
+    """Optimal theta for the Chow mixing matrix: theta* = 1/kappa(L)  (paper §3)."""
+    if not (kappa_val >= 1.0):
+        raise ValueError(f"kappa must be >= 1, got {kappa_val}")
+    return 1.0 / kappa_val
+
+
+def chow_lambda(kappa_val: float, theta: float | None = None) -> float:
+    """lambda(M) for the Chow matrix as a function of kappa(L) and theta.
+
+    lambda = max(|1+theta-2/kappa|, 1-theta) / (1+theta); minimized at
+    theta* = 1/kappa, where lambda* = (1 - 1/kappa) / (1 + 1/kappa)
+           = (kappa - 1) / (kappa + 1).
+    """
+    if theta is None:
+        theta = theta_star(kappa_val)
+    if math.isinf(kappa_val):
+        return 1.0
+    a = abs(1.0 + theta - 2.0 / kappa_val)
+    b = 1.0 - theta
+    return max(a, b) / (1.0 + theta)
+
+
+def mixing_lambda(mix: np.ndarray, tol: float = 1e-9) -> float:
+    """lambda(M) = max(|lambda_2(M)|, |lambda_N(M)|) for a given mixing matrix."""
+    ev = np.linalg.eigvalsh(np.asarray(mix, dtype=np.float64))
+    # eigvalsh returns ascending; lambda_1(M)=1 is the largest.
+    if abs(ev[-1] - 1.0) > 1e-6:
+        raise ValueError(f"top eigenvalue of a mixing matrix must be 1, got {ev[-1]}")
+    second = ev[-2] if len(ev) > 1 else 0.0
+    bottom = ev[0]
+    return float(max(abs(second), abs(bottom)))
+
+
+def c_lambda(lam: float) -> float:
+    """C_lambda from Theorem 2.5: the topology-dependent generalization constant.
+
+    C_lambda = 2*lam^2 + 4*lam^2*ln(1/lam) + 2*lam + 2/ln(1/lam).
+
+    Increasing in lam on (0,1); diverges as lam -> 1 (poorly-connected graphs
+    generalize worse).
+    """
+    if not (0.0 < lam < 1.0):
+        if lam <= 0.0:
+            return 0.0
+        return float("inf")
+    log_inv = math.log(1.0 / lam)
+    return 2 * lam * lam + 4 * lam * lam * log_inv + 2 * lam + 2.0 / log_inv
+
+
+def ramanujan_bound(d: int) -> float:
+    """Upper bound (3.2) on kappa(L) for a d-regular Ramanujan graph."""
+    if d < 3:
+        raise ValueError("Ramanujan bound needs d >= 3")
+    s = 2.0 * math.sqrt(d - 1.0)
+    return (d + s) / (d - s)
+
+
+def ring_kappa_lower_bound(n: int) -> float:
+    """Paper §3.1: kappa(L_ring) >= N^2 / pi^2 — quadratic blowup for rings."""
+    return n * n / (math.pi * math.pi)
+
+
+def mixing_time(lam: float, eps: float = 1e-3) -> float:
+    """Rounds for gossip error contraction lam^t <= eps: t = ln(1/eps)/ln(1/lam)."""
+    if lam <= 0:
+        return 1.0
+    if lam >= 1:
+        return float("inf")
+    return math.log(1.0 / eps) / math.log(1.0 / lam)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpectralReport:
+    """Everything the paper's theory says about one topology."""
+
+    n: int
+    degree_min: int
+    degree_max: int
+    n_edges: int
+    connected: bool
+    kappa: float
+    theta_star: float
+    lam: float            # lambda(M) of the Chow matrix at theta*
+    c_lambda: float       # Thm 2.5 generalization constant
+    mixing_time_1e3: float
+    is_ramanujan: bool | None  # only meaningful for regular graphs
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(adj: np.ndarray) -> SpectralReport:
+    """Full spectral report for an adjacency matrix."""
+    adj = np.asarray(adj, dtype=np.float64)
+    n = adj.shape[0]
+    deg = adj.sum(axis=1).astype(int)
+    ev_l = laplacian_spectrum(adj)
+    connected = bool(ev_l[1] > 1e-9) if n > 1 else True
+    if connected:
+        kap = float(ev_l[-1] / ev_l[1])
+        th = theta_star(kap)
+        lam = chow_lambda(kap, th)
+    else:
+        kap, th, lam = float("inf"), 0.0, 1.0
+
+    is_ram: bool | None = None
+    if n > 2 and deg.min() == deg.max():
+        d = int(deg[0])
+        # adjacency eigenvalues: lambda_1(A) is the largest nontrivial one
+        ev_a = np.linalg.eigvalsh(adj)
+        nontrivial = max(abs(ev_a[0]), abs(ev_a[-2]))
+        is_ram = bool(nontrivial <= 2.0 * math.sqrt(max(d - 1, 1)) + 1e-9)
+
+    return SpectralReport(
+        n=n,
+        degree_min=int(deg.min()) if n else 0,
+        degree_max=int(deg.max()) if n else 0,
+        n_edges=int(adj.sum() // 2),
+        connected=connected,
+        kappa=kap,
+        theta_star=th,
+        lam=lam,
+        c_lambda=c_lambda(lam),
+        mixing_time_1e3=mixing_time(lam),
+        is_ramanujan=is_ram,
+    )

@@ -1,0 +1,367 @@
+"""Overlay-network topologies for decentralized federated learning (paper §3-§4).
+
+The central object is :class:`Overlay`: a set of N clients plus a list of
+*permutation schedules*. A permutation schedule is a bijection pi on [N] such
+that client i exchanges parameters with pi(i) (a fixed point pi(i) == i means
+"client i sits this schedule out"). This is exactly the form a TPU
+``collective-permute`` wants, and it is exactly what the paper's §4 virtual
+ring-space construction produces:
+
+* each of the L = d/2 virtual ring spaces is one random Hamiltonian cycle,
+  i.e. TWO directed permutation schedules (successor and predecessor);
+* an optional random perfect matching (the paper's "extra edge on top of the
+  Ring graph" used for the d=3 Ramanujan experiments) is ONE self-inverse
+  schedule.
+
+With S schedules, define ``L' = S*I - sum_s P_s``. For fixed-point-free
+schedules the union is an S-regular multigraph and L' is its Laplacian; with
+fixed points L' is still exactly the Laplacian of the off-diagonal multigraph.
+The Chow mixing matrix ``M = I - c L'`` therefore decomposes as
+
+    M = (1 - c*S) I + c * sum_s P_s,   c = 2 / ((1+theta) * lam_max(L'))
+
+— a weighted sum of ppermutes with a single uniform edge weight. That
+decomposition is what `core.gossip` lowers to hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import spectral
+
+__all__ = [
+    "Overlay",
+    "ring_overlay",
+    "expander_overlay",
+    "matching_schedule",
+    "erdos_renyi_adjacency",
+    "complete_adjacency",
+    "overlay_from_rings",
+    "ChowWeights",
+]
+
+
+def _ring_schedules_from_order(order: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Given node ids in ring order, return (successor, predecessor) permutations."""
+    n = len(order)
+    succ = np.empty(n, dtype=np.int64)
+    pred = np.empty(n, dtype=np.int64)
+    for pos in range(n):
+        a = order[pos]
+        b = order[(pos + 1) % n]
+        succ[a] = b
+        pred[b] = a
+    return succ, pred
+
+
+def _is_permutation(pi: np.ndarray) -> bool:
+    return bool(np.array_equal(np.sort(pi), np.arange(len(pi))))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChowWeights:
+    """Decomposed Chow mixing weights: M = self_weight*I + edge_weight*sum_s P_s."""
+
+    self_weight: float
+    edge_weight: float
+    theta: float
+    lam: float  # lambda(M)
+    kappa: float
+
+
+@dataclasses.dataclass
+class Overlay:
+    """A client overlay: permutation schedules over n clients.
+
+    Attributes:
+      n: number of clients.
+      schedules: list of int64 permutations of [n], closed under inverse
+        (an involution is its own inverse). Fixed points are allowed and mean
+        "no exchange for this client in this schedule".
+      coords: [n, L] virtual ring coordinates (None for non-§4 constructions).
+      name: topology family name for reports.
+    """
+
+    n: int
+    schedules: list[np.ndarray]
+    coords: np.ndarray | None = None
+    name: str = "overlay"
+
+    def __post_init__(self) -> None:
+        self.schedules = [np.asarray(s, dtype=np.int64) for s in self.schedules]
+        keys = {tuple(s.tolist()) for s in self.schedules}
+        for s in self.schedules:
+            if len(s) != self.n or not _is_permutation(s):
+                raise ValueError("each schedule must be a permutation of [n]")
+            if tuple(np.argsort(s).tolist()) not in keys:
+                raise ValueError("schedule set must be closed under inverse")
+
+    # ---------------------------------------------------------------- graphs
+    @property
+    def degree(self) -> int:
+        """Nominal degree = number of schedules (max per-node degree)."""
+        return len(self.schedules)
+
+    def multigraph_adjacency(self) -> np.ndarray:
+        """A[i,j] = number of schedules sending i -> j, for i != j (symmetric)."""
+        a = np.zeros((self.n, self.n), dtype=np.float64)
+        idx = np.arange(self.n)
+        for s in self.schedules:
+            mask = s != idx
+            a[idx[mask], s[mask]] += 1.0
+        return a
+
+    def simple_adjacency(self) -> np.ndarray:
+        """0/1 union adjacency (collapses multi-edges)."""
+        return (self.multigraph_adjacency() > 0).astype(np.float64)
+
+    def neighbor_lists(self) -> list[list[int]]:
+        adj = self.simple_adjacency()
+        return [list(map(int, np.nonzero(adj[i])[0])) for i in range(self.n)]
+
+    def laplacian(self) -> np.ndarray:
+        a = self.multigraph_adjacency()
+        return np.diag(a.sum(axis=1)) - a
+
+    # ---------------------------------------------------------------- theory
+    def spectral_report(self) -> spectral.SpectralReport:
+        return spectral.analyze(self.simple_adjacency())
+
+    def chow_weights(self, theta: float | None = None) -> ChowWeights:
+        """Chow mixing weights on the schedule multigraph (see module docstring)."""
+        lap = self.laplacian()
+        ev = np.linalg.eigvalsh(lap)
+        lam2, lam_max = float(ev[1]), float(ev[-1])
+        if lam2 <= 1e-12:
+            raise ValueError("overlay graph is disconnected; cannot build mixing matrix")
+        kap = lam_max / lam2
+        if theta is None:
+            theta = spectral.theta_star(kap)
+        c = 2.0 / ((1.0 + theta) * lam_max)
+        w0 = 1.0 - c * self.degree
+        # lam from the *actual* mixing matrix spectrum (exact, incl. fixed points)
+        lam_vals = 1.0 - c * ev
+        lam = float(max(abs(lam_vals[1:]).max(), 0.0)) if self.n > 1 else 0.0
+        return ChowWeights(self_weight=w0, edge_weight=c, theta=theta, lam=lam, kappa=kap)
+
+    def mixing_matrix(self, theta: float | None = None) -> np.ndarray:
+        """Dense N x N Chow mixing matrix (the reference for gossip executors)."""
+        w = self.chow_weights(theta)
+        m = w.self_weight * np.eye(self.n)
+        idx = np.arange(self.n)
+        for s in self.schedules:
+            m[idx, s] += w.edge_weight
+        return m
+
+    # ------------------------------------------------------------- dynamics
+    def remove_nodes(self, dead: list[int] | np.ndarray) -> tuple["Overlay", np.ndarray]:
+        """Two-hop splice repair (paper §4.1).
+
+        In each ring schedule, each dead node x is spliced out by connecting
+        pred(x) -> succ(x) (skipping runs of dead nodes). Matching schedules
+        lose the dead nodes' edges; orphaned partners are re-matched among
+        themselves; an odd leftover keeps a fixed point (degree deficit of 1,
+        exactly what the paper's local repair yields before the next rebuild).
+
+        Returns (repaired overlay on surviving nodes, old->new index map where
+        map[old] = new index or -1 if dead).
+        """
+        dead_set = {int(x) for x in np.asarray(dead, dtype=np.int64).ravel()}
+        alive = [i for i in range(self.n) if i not in dead_set]
+        if len(alive) < 2:
+            raise ValueError("fewer than 2 surviving clients")
+        old2new = -np.ones(self.n, dtype=np.int64)
+        for new, old in enumerate(alive):
+            old2new[old] = new
+        m = len(alive)
+
+        new_schedules: list[np.ndarray] = []
+        handled: set[int] = set()
+        for idx, s in enumerate(self.schedules):
+            if idx in handled:
+                continue
+            inv = np.argsort(s)
+            if np.array_equal(inv, s):
+                # involution (matching): keep surviving pairs, re-pair orphans
+                new_s = np.arange(m, dtype=np.int64)
+                orphans: list[int] = []
+                for i in alive:
+                    j = int(s[i])
+                    if j == i:
+                        continue  # already a fixed point
+                    if j in dead_set:
+                        orphans.append(int(old2new[i]))
+                    else:
+                        new_s[old2new[i]] = old2new[j]
+                for a, b in zip(orphans[0::2], orphans[1::2]):
+                    new_s[a], new_s[b] = b, a
+                new_schedules.append(new_s)
+                handled.add(idx)
+            else:
+                # ring schedule: splice dead nodes out of the cycle
+                succ = np.empty(m, dtype=np.int64)
+                for i in alive:
+                    j = int(s[i])
+                    hops = 0
+                    while j in dead_set:
+                        j = int(s[j])
+                        hops += 1
+                        if hops > self.n:
+                            raise RuntimeError("cycle splice failed")
+                    succ[old2new[i]] = old2new[j]
+                new_schedules.append(succ)
+                new_schedules.append(np.argsort(succ))
+                handled.add(idx)
+                # mark the paired predecessor schedule as handled
+                for jdx, s2 in enumerate(self.schedules):
+                    if jdx not in handled and np.array_equal(inv, s2):
+                        handled.add(jdx)
+                        break
+
+        coords = self.coords[alive] if self.coords is not None else None
+        return (
+            Overlay(n=m, schedules=new_schedules, coords=coords, name=self.name + "+repair"),
+            old2new,
+        )
+
+    def add_node(self, rng: np.random.Generator | None = None) -> "Overlay":
+        """Join protocol (paper §4): the new node draws coordinates and splices
+        itself into each virtual ring between its two ring-closest nodes.
+        Matching schedules give the new node a fixed point until the next
+        matching rebuild (degree deficit of 1, as in the real protocol)."""
+        if self.coords is None:
+            raise ValueError("join protocol requires virtual ring coordinates")
+        rng = rng or np.random.default_rng()
+        n = self.n
+        n_rings = self.coords.shape[1]
+        coords = np.concatenate([self.coords, rng.random((1, n_rings))], axis=0)
+
+        schedules: list[np.ndarray] = []
+        handled: set[int] = set()
+        ring_idx = 0
+        for idx, s in enumerate(self.schedules):
+            if idx in handled:
+                continue
+            inv = np.argsort(s)
+            if np.array_equal(inv, s):
+                schedules.append(np.concatenate([s, np.array([n], dtype=np.int64)]))
+                handled.add(idx)
+            else:
+                order = np.argsort(coords[:, ring_idx], kind="stable")
+                succ, pred = _ring_schedules_from_order(order)
+                schedules.append(succ)
+                schedules.append(pred)
+                handled.add(idx)
+                ring_idx += 1
+                for jdx, s2 in enumerate(self.schedules):
+                    if jdx not in handled and np.array_equal(inv, s2):
+                        handled.add(jdx)
+                        break
+        return Overlay(n=n + 1, schedules=schedules, coords=coords, name=self.name)
+
+
+# ------------------------------------------------------------------ builders
+def ring_overlay(n: int) -> Overlay:
+    """The Ring baseline (2-regular): one cycle in natural order."""
+    if n < 3:
+        raise ValueError("ring needs n >= 3")
+    succ, pred = _ring_schedules_from_order(np.arange(n))
+    return Overlay(n=n, schedules=[succ, pred], name="ring")
+
+
+def overlay_from_rings(coords: np.ndarray, name: str = "expander") -> Overlay:
+    """Build an overlay from explicit virtual-ring coordinates [n, L] (paper §4)."""
+    coords = np.asarray(coords, dtype=np.float64)
+    n, n_rings = coords.shape
+    schedules: list[np.ndarray] = []
+    for r in range(n_rings):
+        order = np.argsort(coords[:, r], kind="stable")
+        succ, pred = _ring_schedules_from_order(order)
+        schedules.append(succ)
+        schedules.append(pred)
+    return Overlay(n=n, schedules=schedules, coords=coords, name=name)
+
+
+def matching_schedule(n: int, rng: np.random.Generator) -> np.ndarray:
+    """A uniformly random perfect matching as an involution schedule (n even)."""
+    if n % 2 != 0:
+        raise ValueError("perfect matching needs even n")
+    perm = rng.permutation(n)
+    s = np.empty(n, dtype=np.int64)
+    for a, b in zip(perm[0::2], perm[1::2]):
+        s[a], s[b] = b, a
+    return s
+
+
+def expander_overlay(
+    n: int,
+    d: int,
+    seed: int = 0,
+    include_base_ring: bool = True,
+    max_tries: int = 32,
+) -> Overlay:
+    """d-regular expander via virtual ring spaces (paper §4) + optional matching.
+
+    * d even: L = d/2 ring spaces. If ``include_base_ring`` the first "space" is
+      the natural-order ring (the paper's construction adds expander edges on
+      top of the Ring graph), and the remaining L-1 spaces use random coords.
+    * d odd: (d-1)/2 ring spaces + one random perfect matching (needs even n).
+      d=3 with include_base_ring reproduces the paper's "Ring + extra edge"
+      Ramanujan setup.
+
+    Retries the random draw until the union multigraph is connected (w.h.p.
+    the first draw works).
+    """
+    if d < 2:
+        raise ValueError("expander needs d >= 2")
+    if d % 2 == 1 and n % 2 == 1:
+        raise ValueError("odd degree requires even n (perfect matching)")
+    n_rings = d // 2
+    use_matching = d % 2 == 1
+
+    rng = np.random.default_rng(seed)
+    last_err: Exception | None = None
+    for _ in range(max_tries):
+        if n_rings > 0:
+            coords = rng.random((n, n_rings))
+            if include_base_ring:
+                coords[:, 0] = np.arange(n) / n  # natural ring as space 0
+            ov = overlay_from_rings(coords, name=f"expander-d{d}")
+            schedules = list(ov.schedules)
+        else:
+            coords = np.zeros((n, 0))
+            schedules = []
+        if use_matching:
+            schedules.append(matching_schedule(n, rng))
+        try:
+            ov = Overlay(n=n, schedules=schedules, coords=coords, name=f"expander-d{d}")
+            if not ov.spectral_report().connected:
+                raise ValueError("disconnected draw")
+            return ov
+        except (ValueError, RuntimeError) as e:  # retry the random draw
+            last_err = e
+    raise RuntimeError(f"could not draw a connected {d}-regular overlay: {last_err}")
+
+
+def erdos_renyi_adjacency(n: int, p: float | None = None, seed: int = 0,
+                          max_tries: int = 64) -> np.ndarray:
+    """Erdos-Renyi G(n, p) adjacency, p defaults to ln(N)/N (paper §5); retried
+    until connected."""
+    if p is None:
+        p = math.log(n) / n
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        u = rng.random((n, n))
+        a = np.triu((u < p).astype(np.float64), k=1)
+        adj = a + a.T
+        if spectral.is_connected(adj):
+            return adj
+    raise RuntimeError(f"could not draw a connected ER graph with p={p}")
+
+
+def complete_adjacency(n: int) -> np.ndarray:
+    """Fully-connected baseline."""
+    return np.ones((n, n)) - np.eye(n)

@@ -1,0 +1,2 @@
+"""Data substrate: offline datasets + federated partitioners + batchers."""
+from repro.data import federated, mnist, pipeline, shakespeare  # noqa: F401

@@ -1,0 +1,64 @@
+"""Federated partitioners: how the global dataset is split across clients.
+
+Mirrors the paper's two regimes:
+  * IID          — uniform random split (paper's "MNIST IID");
+  * label-shard  — each client holds a *single* label (paper's "MNIST
+                   Non-IID", "extremely unfavorable");
+  * dirichlet    — standard Dirichlet(alpha) label-skew interpolation;
+  * span         — contiguous overlapping text spans (paper's Shakespeare).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def iid_split(n_samples: int, n_clients: int, seed: int = 0) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n_samples)
+    return [np.sort(s) for s in np.array_split(perm, n_clients)]
+
+
+def label_shard_split(labels: np.ndarray, n_clients: int, seed: int = 0
+                      ) -> list[np.ndarray]:
+    """Client i gets only label (i mod n_classes) — the paper's non-IID MNIST."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    out: list[np.ndarray] = []
+    per_class = {int(c): rng.permutation(np.nonzero(labels == c)[0]) for c in classes}
+    counters = {int(c): 0 for c in classes}
+    owners = [int(classes[i % len(classes)]) for i in range(n_clients)]
+    n_owners = {c: max(1, owners.count(c)) for c in set(owners)}
+    for i in range(n_clients):
+        c = owners[i]
+        pool = per_class[c]
+        share = len(pool) // n_owners[c]
+        k = counters[c]
+        out.append(np.sort(pool[k * share:(k + 1) * share]))
+        counters[c] += 1
+    return out
+
+
+def dirichlet_split(labels: np.ndarray, n_clients: int, alpha: float = 0.5,
+                    seed: int = 0) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    idx_by_class = [rng.permutation(np.nonzero(labels == c)[0]) for c in classes]
+    client_idx: list[list[int]] = [[] for _ in range(n_clients)]
+    for idx_c in idx_by_class:
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idx_c, cuts)):
+            client_idx[i].extend(part.tolist())
+    return [np.sort(np.asarray(ix, dtype=np.int64)) for ix in client_idx]
+
+
+def span_split(n_tokens: int, n_clients: int, overlap: float = 0.2,
+               seed: int = 0) -> list[tuple[int, int]]:
+    """Contiguous overlapping token spans (paper's Shakespeare protocol)."""
+    span = int(n_tokens / (n_clients * (1 - overlap) + overlap))
+    stride = int(span * (1 - overlap))
+    out = []
+    for i in range(n_clients):
+        start = min(i * stride, max(n_tokens - span, 0))
+        out.append((start, min(start + span, n_tokens)))
+    return out

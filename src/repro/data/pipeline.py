@@ -1,0 +1,82 @@
+"""Batching pipelines: per-client local-step batches for DFL rounds.
+
+`ClientBatcher` yields, per round, a pytree whose leaves are
+(n_clients, local_steps, batch, ...) — exactly what the vmapped/shard_mapped
+DFedAvgM round consumes. Deterministic per (client, round): restart-safe
+(the checkpoint only needs the round counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ClientBatcher:
+    """Classification data (x, y) split by client index lists."""
+
+    x: np.ndarray
+    y: np.ndarray
+    client_indices: list[np.ndarray]
+    batch_size: int
+    local_steps: int
+    seed: int = 0
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_indices)
+
+    def round_batches(self, rnd: int) -> dict[str, np.ndarray]:
+        xs, ys = [], []
+        for c, idx in enumerate(self.client_indices):
+            rng = np.random.default_rng((self.seed, c, rnd))
+            take = rng.choice(idx, size=(self.local_steps, self.batch_size),
+                              replace=len(idx) < self.local_steps * self.batch_size)
+            xs.append(self.x[take])
+            ys.append(self.y[take])
+        return {"x": np.stack(xs), "y": np.stack(ys)}
+
+
+@dataclasses.dataclass
+class TokenBatcher:
+    """LM data: contiguous next-token windows from per-client token spans."""
+
+    tokens: np.ndarray                 # (n_tokens,) int32
+    spans: list[tuple[int, int]]       # per-client [start, end)
+    batch_size: int
+    seq_len: int
+    local_steps: int
+    seed: int = 0
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.spans)
+
+    def round_batches(self, rnd: int) -> dict[str, np.ndarray]:
+        toks, labs = [], []
+        for c, (lo, hi) in enumerate(self.spans):
+            rng = np.random.default_rng((self.seed, c, rnd))
+            max_start = hi - self.seq_len - 1
+            starts = rng.integers(lo, max(max_start, lo + 1),
+                                  size=(self.local_steps, self.batch_size))
+            window = starts[..., None] + np.arange(self.seq_len + 1)
+            window = np.minimum(window, len(self.tokens) - 1)
+            chunk = self.tokens[window]
+            toks.append(chunk[..., :-1])
+            labs.append(chunk[..., 1:])
+        return {"tokens": np.stack(toks).astype(np.int32),
+                "labels": np.stack(labs).astype(np.int32)}
+
+
+def synthetic_token_batches(n_clients: int, local_steps: int, batch: int,
+                            seq: int, vocab: int, rnd: int, seed: int = 0
+                            ) -> dict[str, np.ndarray]:
+    """Deterministic synthetic LM batches (markov-ish: labels = shifted mix)."""
+    rng = np.random.default_rng((seed, rnd))
+    toks = rng.integers(0, vocab, size=(n_clients, local_steps, batch, seq))
+    labels = np.roll(toks, -1, axis=-1)
+    return {"tokens": toks.astype(np.int32), "labels": labels.astype(np.int32)}

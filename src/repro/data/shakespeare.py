@@ -1,0 +1,95 @@
+"""Character-level Shakespeare corpus (bundled snippet; offline container).
+
+The paper splits Shakespeare into 100 overlapping subsets with per-user
+distribution shift (non-IID). We bundle a few scenes' worth of text and
+replicate that protocol: each client gets a contiguous (overlapping) span, so
+client vocab/style distributions differ.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_TEXT = """
+To be, or not to be, that is the question:
+Whether 'tis nobler in the mind to suffer
+The slings and arrows of outrageous fortune,
+Or to take arms against a sea of troubles
+And by opposing end them. To die: to sleep;
+No more; and by a sleep to say we end
+The heart-ache and the thousand natural shocks
+That flesh is heir to, 'tis a consummation
+Devoutly to be wish'd. To die, to sleep;
+To sleep: perchance to dream: ay, there's the rub;
+For in that sleep of death what dreams may come
+When we have shuffled off this mortal coil,
+Must give us pause: there's the respect
+That makes calamity of so long life;
+All the world's a stage,
+And all the men and women merely players:
+They have their exits and their entrances;
+And one man in his time plays many parts,
+His acts being seven ages. At first the infant,
+Mewling and puking in the nurse's arms.
+And then the whining school-boy, with his satchel
+And shining morning face, creeping like snail
+Unwillingly to school. And then the lover,
+Sighing like furnace, with a woeful ballad
+Made to his mistress' eyebrow. Then a soldier,
+Full of strange oaths and bearded like the pard,
+Jealous in honour, sudden and quick in quarrel,
+Seeking the bubble reputation
+Even in the cannon's mouth. And then the justice,
+In fair round belly with good capon lined,
+With eyes severe and beard of formal cut,
+Full of wise saws and modern instances;
+And so he plays his part. The sixth age shifts
+Into the lean and slipper'd pantaloon,
+With spectacles on nose and pouch on side,
+His youthful hose, well saved, a world too wide
+For his shrunk shank; and his big manly voice,
+Turning again toward childish treble, pipes
+And whistles in his sound. Last scene of all,
+That ends this strange eventful history,
+Is second childishness and mere oblivion,
+Sans teeth, sans eyes, sans taste, sans everything.
+Friends, Romans, countrymen, lend me your ears;
+I come to bury Caesar, not to praise him.
+The evil that men do lives after them;
+The good is oft interred with their bones;
+So let it be with Caesar. The noble Brutus
+Hath told you Caesar was ambitious:
+If it were so, it was a grievous fault,
+And grievously hath Caesar answer'd it.
+Here, under leave of Brutus and the rest--
+For Brutus is an honourable man;
+So are they all, all honourable men--
+Come I to speak in Caesar's funeral.
+He was my friend, faithful and just to me:
+But Brutus says he was ambitious;
+And Brutus is an honourable man.
+O Romeo, Romeo! wherefore art thou Romeo?
+Deny thy father and refuse thy name;
+Or, if thou wilt not, be but sworn my love,
+And I'll no longer be a Capulet.
+'Tis but thy name that is my enemy;
+Thou art thyself, though not a Montague.
+What's Montague? it is nor hand, nor foot,
+Nor arm, nor face, nor any other part
+Belonging to a man. O, be some other name!
+What's in a name? that which we call a rose
+By any other name would smell as sweet.
+"""
+
+
+def corpus(repeat: int = 50) -> tuple[np.ndarray, dict[str, int]]:
+    """Returns (token array int32, char vocab). Repeats the snippet to give
+    enough tokens for hundreds of rounds of local training."""
+    text = (_TEXT * repeat)
+    chars = sorted(set(text))
+    vocab = {c: i for i, c in enumerate(chars)}
+    toks = np.asarray([vocab[c] for c in text], dtype=np.int32)
+    return toks, vocab
+
+
+def vocab_size() -> int:
+    return len(sorted(set(_TEXT)))

@@ -1,0 +1,62 @@
+"""Jitted public wrapper for the fused_sgdm kernel.
+
+`sgdm_update` is a drop-in replacement for `core.dfedavg.momentum_update`
+(pytree in, pytree out) — pass it as ``update_fn`` to `local_round`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sgdm import kernel as _k
+from repro.kernels.fused_sgdm import ref as _ref
+
+PyTree = Any
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def sgdm(w: jax.Array, v: jax.Array, g: jax.Array, lr, beta, *,
+         block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+         impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Single-leaf fused heavy-ball update; any shape/dtype."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.sgdm(w, v, g, lr, beta)
+
+    shape = w.shape
+    flat = lambda x: x.reshape(-1)
+    t = w.size
+    tile = block_rows * _k.LANE
+    pad = (-t) % tile
+    def prep(x):
+        xf = flat(x)
+        if pad:
+            xf = jnp.pad(xf, (0, pad))
+        return xf.reshape(-1, _k.LANE)
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
+                         jnp.asarray(beta, jnp.float32)]).reshape(1, 2)
+    wo, vo = _k.sgdm_2d(prep(w), prep(v), prep(g), scalars,
+                        block_rows=block_rows,
+                        interpret=(impl == "pallas_interpret"))
+    unprep = lambda x, d: x.reshape(-1)[:t].reshape(shape).astype(d)
+    return unprep(wo, w.dtype), unprep(vo, v.dtype)
+
+
+def sgdm_update(params: PyTree, velocity: PyTree, grads: PyTree, lr, beta,
+                impl: str = "auto") -> tuple[PyTree, PyTree]:
+    """Pytree version, signature-compatible with dfedavg.momentum_update."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_v = jax.tree.leaves(velocity)
+    flat_g = jax.tree.leaves(grads)
+    outs = [sgdm(p, v, g, lr, beta, impl=impl)
+            for p, v, g in zip(flat_p, flat_v, flat_g)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]))

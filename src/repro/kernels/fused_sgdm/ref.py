@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused_sgdm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgdm(w: jax.Array, v: jax.Array, g: jax.Array, lr, beta
+         ) -> tuple[jax.Array, jax.Array]:
+    """v' = beta v - lr g ; w' = w + v' (f32 accumulation, cast back)."""
+    v32 = (jnp.asarray(beta, jnp.float32) * v.astype(jnp.float32)
+           - jnp.asarray(lr, jnp.float32) * g.astype(jnp.float32))
+    w32 = w.astype(jnp.float32) + v32
+    return w32.astype(w.dtype), v32.astype(v.dtype)

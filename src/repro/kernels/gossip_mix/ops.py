@@ -1,0 +1,47 @@
+"""Jitted public wrapper for the gossip_mix kernel (any shape/dtype).
+
+On TPU this runs the Pallas kernel; elsewhere it runs the kernel in interpret
+mode (bit-accurate kernel-body semantics on CPU) unless ``force_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gossip_mix import kernel as _k
+from repro.kernels.gossip_mix import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def gossip_mix(stack: jax.Array, weights: jax.Array, *,
+               block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+               impl: str = "auto") -> jax.Array:
+    """out = sum_k weights[k] * stack[k] for stack of shape (K, *payload).
+
+    impl: "auto" (pallas on TPU, ref elsewhere), "pallas", "pallas_interpret",
+    or "ref".
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.gossip_mix(stack, weights)
+
+    k = stack.shape[0]
+    payload_shape = stack.shape[1:]
+    flat = stack.reshape(k, -1)
+    t = flat.shape[1]
+    tile = block_rows * _k.LANE
+    pad = (-t) % tile
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    rows = (t + pad) // _k.LANE
+    out = _k.gossip_mix_2d(flat.reshape(k, rows, _k.LANE), weights,
+                           block_rows=block_rows,
+                           interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)[:t].reshape(payload_shape)

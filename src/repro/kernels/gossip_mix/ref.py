@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the gossip_mix kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_mix(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """out = sum_k weights[k] * stack[k] (computed in f32, cast back)."""
+    w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (stack.ndim - 1))
+    return jnp.sum(w * stack.astype(jnp.float32), axis=0).astype(stack.dtype)

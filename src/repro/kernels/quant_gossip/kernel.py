@@ -1,0 +1,67 @@
+"""Pallas TPU kernels: int8 quantize / dequantize for gossip payloads.
+
+Beyond-paper optimization for the *collective* roofline term: gossip payloads
+are symmetrically quantized to int8 before the ppermute, cutting ICI bytes 4x
+(f32) or 2x (bf16). The global amax reduction is a cheap jnp reduce in the
+wrapper; the kernels do the per-tile scale/round/clip and the fused
+dequantize-accumulate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _quant_kernel(x_ref, s_ref, q_ref):
+    inv = 1.0 / s_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32) * inv
+    q_ref[...] = jnp.clip(jnp.round(x), -127.0, 127.0).astype(jnp.int8)
+
+
+def _dequant_acc_kernel(q_ref, s_ref, acc_ref, o_ref):
+    """o = acc + c * (q * s); s_ref = (1, 2) holding (scale, c)."""
+    scale = s_ref[0, 0]
+    c = s_ref[0, 1]
+    o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                  + c * scale * q_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_2d(x: jax.Array, scale: jax.Array, *,
+                block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = False) -> jax.Array:
+    rows, lane = x.shape
+    assert lane == LANE and rows % block_rows == 0
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[blk, pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.int8),
+        interpret=interpret,
+    )(x, scale.reshape(1, 1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dequant_accumulate_2d(q: jax.Array, scale_c: jax.Array, acc: jax.Array, *,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = False) -> jax.Array:
+    rows, lane = q.shape
+    assert lane == LANE and rows % block_rows == 0
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _dequant_acc_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[blk, pl.BlockSpec((1, 2), lambda i: (0, 0)), blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), acc.dtype),
+        interpret=interpret,
+    )(q, scale_c.reshape(1, 2).astype(jnp.float32), acc)

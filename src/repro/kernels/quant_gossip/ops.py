@@ -1,0 +1,66 @@
+"""Jitted public wrappers for quant_gossip (any shape/dtype payloads)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_gossip import kernel as _k
+from repro.kernels.quant_gossip import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def quantize_int8(x: jax.Array, impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q:int8 same shape, scale:f32 scalar)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.quantize(x, scale), scale
+    shape = x.shape
+    t = x.size
+    tile = _k.DEFAULT_BLOCK_ROWS * _k.LANE
+    pad = (-t) % tile
+    xf = x.reshape(-1)
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    q = _k.quantize_2d(xf.reshape(-1, _k.LANE), scale,
+                       interpret=(impl == "pallas_interpret"))
+    return q.reshape(-1)[:t].reshape(shape), scale
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "impl"))
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32,
+                    impl: str = "auto") -> jax.Array:
+    """Plain dequantize (no accumulate)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def dequant_accumulate(q: jax.Array, scale: jax.Array, c, acc: jax.Array,
+                       impl: str = "auto") -> jax.Array:
+    """acc + c * dequant(q): the fused per-neighbor gossip accumulation."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.dequant_accumulate(q, scale, jnp.asarray(c), acc)
+    shape = acc.shape
+    t = acc.size
+    tile = _k.DEFAULT_BLOCK_ROWS * _k.LANE
+    pad = (-t) % tile
+    def prep(x):
+        xf = x.reshape(-1)
+        if pad:
+            xf = jnp.pad(xf, (0, pad))
+        return xf.reshape(-1, _k.LANE)
+    sc = jnp.stack([scale.astype(jnp.float32),
+                    jnp.asarray(c, jnp.float32)]).reshape(1, 2)
+    out = _k.dequant_accumulate_2d(prep(q), sc, prep(acc),
+                                   interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)[:t].reshape(shape)

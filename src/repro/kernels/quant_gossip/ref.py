@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the quant_gossip kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequant_accumulate(q: jax.Array, scale: jax.Array, c: jax.Array,
+                       acc: jax.Array) -> jax.Array:
+    return (acc.astype(jnp.float32)
+            + c.astype(jnp.float32) * scale.astype(jnp.float32)
+            * q.astype(jnp.float32)).astype(acc.dtype)

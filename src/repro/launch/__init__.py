@@ -1,0 +1,1 @@
+"""Launchers: production meshes, step builders, dry-run, train/serve drivers."""

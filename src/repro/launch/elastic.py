@@ -1,0 +1,99 @@
+"""Elastic runtime: ties health tracking, overlay repair, and checkpointing
+into a resilient training loop (the fault-tolerance story, end to end).
+
+Protocol (mirrors paper §4.1 on a cluster):
+  1. every round, each client group posts a heartbeat (simulated here by a
+     FailurePlan);
+  2. a client missing `straggler_rounds` heartbeats is *dropped for the
+     round*: gossip weights renormalize over the alive in-neighborhood
+     (no re-jit needed — the adjusted GossipSpec recompiles once per
+     membership change, not per round);
+  3. a client missing `failure_rounds` heartbeats is declared DEAD: the
+     two-hop splice repairs each virtual ring, the client-stacked state is
+     remapped to the survivors, the step re-jits, and — if the process
+     itself died — training resumes from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import dfedavg, failures as failures_lib, gossip as gossip_lib
+from repro.core.topology import Overlay
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ElasticTrainer:
+    overlay: Overlay
+    loss_fn: Callable
+    dcfg: dfedavg.DFedAvgMConfig
+    ckpt: CheckpointManager | None = None
+    straggler_rounds: int = 1
+    failure_rounds: int = 3
+
+    def __post_init__(self):
+        self.health = failures_lib.HealthTracker(
+            self.overlay.n, self.straggler_rounds, self.failure_rounds)
+        self.spec = gossip_lib.make_gossip_spec(self.overlay)
+        self._round = self._build(self.spec)
+        self.repairs: list[dict] = []
+
+    def _build(self, spec: gossip_lib.GossipSpec):
+        @jax.jit
+        def round_fn(params, batches, lr):
+            def client(p, b):
+                v = jax.tree.map(jnp.zeros_like, p)
+                p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
+                                                 self.dcfg, lr=lr)
+                return p, loss
+            params, losses = jax.vmap(client)(params, batches)
+            return gossip_lib.mix_schedules(params, spec), losses
+        return round_fn
+
+    @property
+    def n_clients(self) -> int:
+        return self.overlay.n
+
+    def observe_heartbeats(self, alive: np.ndarray, params: PyTree
+                           ) -> tuple[PyTree, np.ndarray]:
+        """Process one round of heartbeats; returns (params, old2new or None).
+
+        Straggler set changes rebuild the (weight-renormalized) spec; deaths
+        trigger splice repair + client-state remap.
+        """
+        self.health.observe(alive)
+        dead = self.health.dead()
+        old2new = None
+        if len(dead):
+            self.overlay, self.spec, params = failures_lib.repair_and_remap(
+                self.overlay, list(dead), params)
+            self.repairs.append({"dead": [int(d) for d in dead],
+                                 "n_after": self.overlay.n})
+            # survivors get a fresh tracker (indices shifted)
+            self.health = failures_lib.HealthTracker(
+                self.overlay.n, self.straggler_rounds, self.failure_rounds)
+            self._round = self._build(self.spec)
+            old2new = np.asarray([i for i in range(len(alive))])
+        else:
+            stragglers = self.health.stragglers()
+            mask = np.ones(self.overlay.n, dtype=np.float32)
+            mask[stragglers] = 0.0
+            spec = (failures_lib.alive_adjusted_spec(self.spec, mask)
+                    if len(stragglers) else self.spec)
+            self._round = self._build(spec)
+        return params, old2new
+
+    def step(self, params: PyTree, batches: PyTree, lr: float):
+        return self._round(params, batches, jnp.asarray(lr, jnp.float32))
+
+    def checkpoint(self, rnd: int, params: PyTree) -> None:
+        if self.ckpt is not None:
+            self.ckpt.maybe_save(rnd, params, {"round": rnd,
+                                               "n_clients": self.overlay.n})

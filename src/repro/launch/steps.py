@@ -1,0 +1,329 @@
+"""Step builders: DFL train rounds and serving steps with full shardings.
+
+This is where the paper's technique meets the device grid:
+
+* **train round** = vmap over the client axis of (K local momentum steps)
+  followed by the *gossip island*: a partial-manual `jax.shard_map` over the
+  client mesh axes that issues one `lax.ppermute` per overlay schedule
+  (`gossip_impl="ppermute"`), or the paper-naive dense mixing einsum
+  (`gossip_impl="dense"`, the §Perf baseline), or int8-quantized ppermutes
+  (`"ppermute_quant"`, beyond-paper).
+* **serve steps** (prefill / decode) run on the raw production mesh with
+  TP ("model") x batch-DP ("data"/"pod") and sequence-sharded KV caches.
+
+Every builder returns (jitted_fn, input_specs_dict) so the dry-run can
+`.lower(**specs).compile()` without touching device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DFLConfig, ModelConfig, ParallelConfig, ShapeConfig
+from repro.core import dfedavg, gossip as gossip_lib, topology
+from repro.launch import mesh as mesh_lib
+from repro.models import params as params_lib
+from repro.models.api import ModelAPI
+from repro.models.params import Leaf
+from repro.models.sharding_ctx import activation_sharding
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------- helpers
+def add_client_axis(struct: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda l: Leaf((n,) + l.shape, ("clients",) + l.axes, l.dtype, l.init,
+                       l.scale),
+        struct, is_leaf=lambda x: isinstance(x, Leaf))
+
+
+def build_overlay(n: int, dfl: DFLConfig) -> topology.Overlay | None:
+    """Overlay for `n` clients; degenerate sizes handled explicitly."""
+    if n < 2:
+        return None
+    if n == 2:
+        return topology.Overlay(
+            n=2, schedules=[np.array([1, 0])], name="pair")
+    if dfl.topology == "ring" or n == 3:
+        return topology.ring_overlay(n)
+    if dfl.topology == "complete":
+        # complete graph as n-1 cyclic-shift schedules (all-to-all form)
+        scheds = [np.roll(np.arange(n), -k) for k in range(1, n)]
+        return topology.Overlay(n=n, schedules=scheds, name="complete")
+    d = min(dfl.degree, n - 1)
+    if d % 2 == 1 and n % 2 == 1:
+        d = max(2, d - 1)
+    return topology.expander_overlay(n, d, seed=dfl.seed)
+
+
+# ------------------------------------------------------------ train round
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    step_fn: Any                   # jitted (params, batch, lr) -> (params, metrics)
+    param_specs: PyTree            # PartitionSpecs (client-stacked)
+    param_struct: PyTree           # Leaf pytree (client-stacked)
+    input_specs: dict              # ShapeDtypeStructs for (batch, lr)
+    in_shardings: Any
+    overlay: topology.Overlay | None
+    gossip_spec: gossip_lib.GossipSpec | None
+    dfl_mesh: Mesh
+    n_clients: int
+
+
+def _train_rules(caxes: tuple[str, ...], zero3: bool = True) -> dict:
+    return {
+        "clients": caxes if len(caxes) > 1 else caxes[0],
+        # zero3: shard the non-TP dim of every weight over the within-client
+        # DP axes (ZeRO-3: weights gathered per use). zero3=False replicates
+        # weights over fsdp/dp — more HBM, no per-layer weight all-gathers.
+        "embed": ("fsdp", "dp") if zero3 else None,
+        "vocab": "tp", "vocab_in": "tp", "ffn": "tp", "heads": "tp",
+        "kv_heads": "tp",
+        # experts shard on the EP ("tp") axis when divisible; few-expert
+        # MoEs (grok: 8 experts, 16-way EP axis) leave E unsharded and rely on
+        # the "ffn" tag to shard the per-expert hidden dim instead
+        "experts": "tp",
+        "layers": None,
+    }
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
+                     par: ParallelConfig, dfl: DFLConfig,
+                     gossip_spec_override: gossip_lib.GossipSpec | None = None
+                     ) -> TrainSetup:
+    api = ModelAPI(cfg)
+    dmesh = mesh_lib.derive_dfl_mesh(base_mesh, par.clients_per_pod, par.tp)
+    caxes = mesh_lib.client_axes(dmesh)
+    n_cl = mesh_lib.n_clients(dmesh)
+    if shape.global_batch % n_cl:
+        raise ValueError(f"global_batch {shape.global_batch} % clients {n_cl}")
+    local_b = shape.global_batch // n_cl
+
+    overlay = build_overlay(n_cl, dfl)
+    gspec = gossip_spec_override
+    if gspec is None and overlay is not None:
+        gspec = gossip_lib.make_gossip_spec(overlay)
+    mix_mat = overlay.mixing_matrix() if overlay is not None else None
+
+    # ---- parameter structure + sharding
+    struct1 = api.param_struct()
+    struct = add_client_axis(struct1, n_cl)
+    rules = _train_rules(caxes, zero3=par.zero3)
+    # expert placement: EP ("model") axis when divisible; otherwise E stays
+    # unsharded and the per-expert hidden dim carries the TP split ("ffn"
+    # tag). (Sharding E over fsdp was measured and REFUTED: mismatched
+    # buffer/weight layouts made XLA reshard the big buffers — see
+    # EXPERIMENTS.md §Perf.)
+    expert_axis = None
+    if cfg.moe is not None:
+        if cfg.moe.n_experts % dmesh.shape["tp"] == 0:
+            expert_axis = "tp"
+        rules = dict(rules, experts=expert_axis)
+    pspecs = params_lib.partition_specs(struct, rules, dmesh)
+    client_spec = rules["clients"]
+
+    # ---- batch specs
+    bshape = (n_cl, par.local_steps)
+    if par.grad_accum > 1:
+        if local_b % par.grad_accum:
+            raise ValueError(f"local batch {local_b} % grad_accum {par.grad_accum}")
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct(bshape + (local_b, shape.seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(bshape + (local_b, shape.seq_len), jnp.int32),
+    }
+    batch_pspec = {
+        "tokens": P(client_spec, None, ("fsdp", "dp"), None),
+        "labels": P(client_spec, None, ("fsdp", "dp"), None),
+    }
+    if cfg.stub_prefix:
+        batch_specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            bshape + (local_b, cfg.stub_prefix, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch_pspec["prefix_embeds"] = P(client_spec, None, ("fsdp", "dp"), None, None)
+
+    dcfg = dfedavg.DFedAvgMConfig(
+        local_steps=par.local_steps, lr=dfl.lr, momentum=dfl.momentum,
+        reset_momentum=True, grad_accum=par.grad_accum)
+
+    remat = par.remat == "block"
+    update_fn = None
+    if par.use_fused_sgdm:
+        from repro.kernels.fused_sgdm.ops import sgdm_update
+        update_fn = sgdm_update
+
+    def loss_fn(p, b):
+        return api.loss_fn(p, b, remat=remat)
+
+    def client_round(p, b, lr):
+        v = jax.tree.map(jnp.zeros_like, p)  # paper: momentum resets per round
+        p, _v, loss = dfedavg.local_round(p, v, b, loss_fn, dcfg, lr=lr,
+                                          update_fn=update_fn)
+        return p, loss
+
+    # ---- gossip island
+    def gossip_fn(params):
+        if gspec is None or overlay is None:
+            return params
+        if par.gossip_impl == "dense":
+            return gossip_lib.mix_dense(params, mix_mat)
+
+        mixer = (gossip_lib.ppermute_mix_quantized
+                 if par.gossip_impl == "ppermute_quant"
+                 else gossip_lib.ppermute_mix)
+        axis = caxes if len(caxes) > 1 else caxes[0]
+
+        def body(p):
+            local = jax.tree.map(lambda x: x[0], p)       # client-local view
+            mixed = mixer(local, gspec, axis)
+            return jax.tree.map(lambda x: x[None], mixed)
+
+        specs = jax.tree.map(lambda _: P(client_spec), params)
+        return jax.shard_map(body, mesh=dmesh, in_specs=(specs,),
+                             out_specs=specs, axis_names=set(caxes))(params)
+
+    # activation constraints visible inside the vmapped client round
+    act_rules = {}
+    if par.seq_parallel:
+        # Megatron-SP: residual stream sequence-sharded over the TP axis —
+        # GSPMD then lowers each TP boundary to reduce-scatter + all-gather
+        # (half the wire bytes of the all-reduce it replaces). Measured: on
+        # this XLA it *adds* seq all-gathers instead; kept off by default.
+        act_rules["residual"] = NamedSharding(dmesh, P(None, "tp", None))
+        act_rules["activation"] = NamedSharding(dmesh, P(None, "tp", None))
+    if cfg.moe is not None:
+        # buffers: E on the EP axis when sharded, capacity over fsdp so no
+        # fsdp row computes a redundant expert matmul
+        buf_spec = P(expert_axis, ("fsdp", "dp"), None)
+        act_rules["moe_buffer"] = NamedSharding(dmesh, buf_spec)
+        if expert_axis is None:
+            # E-unsharded experts (grok): gather d from fsdp in bf16 here
+            # (not a f32 copy), keep f on the TP axis. NOT applied to
+            # EP-sharded experts (kimi) — measured: gathering d for 1T params
+            # per microbatch regressed collective 456 -> 770 s.
+            act_rules["expert_weights"] = NamedSharding(dmesh, P(None, None, "tp"))
+            act_rules["expert_weights_t"] = NamedSharding(dmesh, P(None, "tp", None))
+
+    def train_step(params, batch, lr):
+        with activation_sharding(act_rules):
+            # spmd_axis_name threads the client mesh axes through every
+            # sharding constraint inside the vmapped round
+            params, loss = jax.vmap(client_round, in_axes=(0, 0, None),
+                                    spmd_axis_name=caxes)(params, batch, lr)
+            params = gossip_fn(params)
+        return params, {"loss": jnp.mean(loss)}
+
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
+        jax.tree.map(lambda s: NamedSharding(dmesh, s), batch_pspec),
+        NamedSharding(dmesh, P()),
+    )
+    out_shardings = (
+        jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
+        NamedSharding(dmesh, P()),
+    )
+    step = jax.jit(train_step, in_shardings=in_shardings,
+                   out_shardings=out_shardings, donate_argnums=(0,))
+    return TrainSetup(
+        step_fn=step, param_specs=pspecs, param_struct=struct,
+        input_specs={"batch": batch_specs,
+                     "lr": jax.ShapeDtypeStruct((), jnp.float32)},
+        in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
+        dfl_mesh=dmesh, n_clients=n_cl)
+
+
+# ------------------------------------------------------------- serve steps
+@dataclasses.dataclass(frozen=True)
+class ServeSetup:
+    step_fn: Any
+    param_specs: PyTree
+    param_struct: PyTree
+    input_specs: dict
+    in_shardings: Any
+    mesh: Mesh
+
+
+def _serve_rules(cfg: ModelConfig, baxes: tuple[str, ...]) -> dict:
+    # giant checkpoints also shard the non-TP dim over the batch axes
+    # (weight-gathered / ZeRO-inference); threshold: >4 GiB per model shard
+    per_model_shard = cfg.param_count() * 2 / 16
+    big = per_model_shard > 4 * 1024**3
+    b = baxes if len(baxes) > 1 else baxes[0]
+    return {
+        "embed": b if big else None,
+        "vocab": "model", "vocab_in": "model", "ffn": "model", "heads": "model",
+        "kv_heads": "model", "experts": "model", "layers": None,
+        "act_batch": b, "act_seq": "model",
+    }
+
+
+def _serve_act_rules(mesh: Mesh, baxes: tuple[str, ...],
+                     act_batch=None) -> dict:
+    b = act_batch
+    return {
+        "activation": NamedSharding(mesh, P(b)),
+        "residual": NamedSharding(mesh, P(b)),
+        "logits": NamedSharding(mesh, P(b, None, "model")),
+        "attn_q": NamedSharding(mesh, P(b, None, "model", None)),
+        "attn_kv": NamedSharding(mesh, P(b, None, "model", None)),
+        "cache": NamedSharding(mesh, P(b, "model", None, None)),
+    }
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                     ) -> ServeSetup:
+    """Prefill or decode step on the production mesh (no client axis)."""
+    api = ModelAPI(cfg)
+    baxes = mesh_lib.batch_axes(mesh)
+    struct = api.param_struct()
+    rules = _serve_rules(cfg, baxes)
+    # tiny batches (long_500k has global_batch=1) can't shard the batch axis;
+    # the idle batch axes then join the cache's sequence sharding instead
+    # (500k decode: the per-step cache read is the memory wall — spreading it
+    # over data x model cuts per-device bytes by the data-axis width)
+    n_batch_devices = int(np.prod([mesh.shape[a] for a in baxes]))
+    if shape.global_batch % n_batch_devices != 0:
+        act_batch = None
+        rules = dict(rules, act_batch=None,
+                     act_seq=tuple(baxes) + ("model",))
+    else:
+        act_batch = rules["act_batch"]
+    pspecs = params_lib.partition_specs(struct, rules, mesh)
+    act_rules = _serve_act_rules(mesh, baxes, act_batch)
+
+    inputs = api.input_specs(shape)
+    if shape.kind == "prefill":
+        in_pspec = {"tokens": P(act_batch, None)}
+        if "prefix_embeds" in inputs:
+            in_pspec["prefix_embeds"] = P(act_batch, None, None)
+
+        def step(params, **inp):
+            with activation_sharding(act_rules):
+                return api.prefill(params, inp["tokens"],
+                                   prefix_embeds=inp.get("prefix_embeds"))
+    else:  # decode
+        cache_struct = api.cache_struct(shape.global_batch, shape.seq_len)
+        cache_pspec = params_lib.partition_specs(cache_struct, rules, mesh)
+        in_pspec = {"tokens": P(act_batch),
+                    "pos": P(), "cache": cache_pspec}
+
+        def step(params, **inp):
+            with activation_sharding(act_rules):
+                return api.decode_step(params, inp["cache"], inp["tokens"],
+                                       inp["pos"])
+
+    p_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    kw_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), in_pspec)
+
+    def positional(params, inp):
+        return step(params, **inp)
+
+    jitted = jax.jit(positional, in_shardings=(p_shardings, kw_shardings))
+    return ServeSetup(step_fn=jitted, param_specs=pspecs, param_struct=struct,
+                      input_specs=inputs,
+                      in_shardings=(p_shardings, kw_shardings), mesh=mesh)

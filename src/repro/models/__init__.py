@@ -1,0 +1,7 @@
+"""Model substrate: every assigned architecture in pure JAX.
+
+`api.ModelAPI` is the single entry point; family modules (`transformer`,
+`rwkv`, `zamba`) implement param structure + train/prefill/decode; `mlp` and
+`lstm` are the paper's own experiment models.
+"""
+from repro.models.api import ModelAPI  # noqa: F401

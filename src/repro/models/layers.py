@@ -1,0 +1,230 @@
+"""Shared neural building blocks (pure jnp, config-driven).
+
+Conventions:
+* activations (B, S, D); attention heads kept as separate dims (B, S, H, hd);
+* all matmuls accumulate in f32 (`preferred_element_type`);
+* prefill attention is query-chunked (lax.scan) so no (S, S) score tensor is
+  ever materialized — required for the 32k shapes;
+* decode attention supports a KV cache with a sharded sequence axis
+  (flash-decode style: XLA inserts the tiny softmax-stat collectives).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    x32 = x.astype(F32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    s = scale.astype(F32)
+    if plus_one:
+        s = s + 1.0
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None = None,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(F32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps) * scale.astype(F32)
+    if bias is not None:
+        y = y + bias.astype(F32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, scale: jax.Array, **kw) -> jax.Array:
+    return rms_norm(x, scale, **kw) if kind == "rms" else layer_norm(x, scale)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs  # (S, half) or (B, S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos, sin = cos[..., None, :], sin[..., None, :]  # broadcast over heads
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------- attention
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _attn_block(q: jax.Array, k: jax.Array, v: jax.Array, q_offset,
+                *, window: int | None, cap: float | None,
+                kv_len: jax.Array | None = None) -> jax.Array:
+    """One query block vs full K/V. q: (B, Cq, H, hd); k/v: (B, Skv, KV, hd).
+
+    q_offset: scalar (traced ok) position of the first query row.
+    kv_len: optional number of valid KV rows (decode with partial cache).
+    """
+    b, cq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, cq, kv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k, preferred_element_type=F32)
+    scores = scores / math.sqrt(hd)
+    scores = softcap(scores, cap)
+    qpos = q_offset + jnp.arange(cq)
+    kpos = jnp.arange(skv)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.reshape(b, cq, h, hd).astype(v.dtype)
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                             q_chunk: int, window: int | None = None,
+                             cap: float | None = None) -> jax.Array:
+    """Prefill/train attention, scanned over query chunks (no S x S tensor)."""
+    b, s, h, hd = q.shape
+    if s <= q_chunk:
+        return _attn_block(q, k, v, 0, window=window, cap=cap)
+    nq, rem = divmod(s, q_chunk)
+
+    def body(_, i):
+        qi = lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        oi = _attn_block(qi, k, v, i * q_chunk, window=window, cap=cap)
+        return None, oi
+
+    _, outs = lax.scan(body, None, jnp.arange(nq))  # (nq, B, Cq, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, h, hd)
+    if rem:  # ragged tail block
+        tail = _attn_block(q[:, nq * q_chunk:], k, v, nq * q_chunk,
+                           window=window, cap=cap)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int | None = None,
+                     cap: float | None = None) -> jax.Array:
+    """Single-token attention vs cache. q: (B, 1, H, hd); caches (B, Smax, KV, hd).
+
+    pos: scalar index of the query token (cache rows < pos+1 are valid).
+    """
+    return _attn_block(q, k_cache, v_cache, pos, window=window, cap=cap,
+                       kv_len=pos + 1)
+
+
+# -------------------------------------------------------------------- mlps
+def act_fn(kind: str, x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def glu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array,
+            act: str) -> jax.Array:
+    # NOTE: projection einsums keep the model dtype end to end (bf16): the
+    # MXU accumulates in f32 internally, and f32 *outputs* would make every
+    # backward cotangent f32 — doubling all fsdp/TP collective bytes (and
+    # XLA then gathers f32 weight copies). Measured in EXPERIMENTS.md §Perf.
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = (act_fn(act, g.astype(F32)) * u.astype(F32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+# --------------------------------------------------------------- embedding
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(x: jax.Array, head: jax.Array, cap: float | None = None,
+              valid_vocab: int | None = None) -> jax.Array:
+    """x: (B, S, D); head: (D, V) -> logits (B, S, V) in f32.
+
+    valid_vocab: mask padded vocab columns (>= valid) to -inf.
+    """
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=F32)
+    logits = softcap(logits, cap)
+    v = logits.shape[-1]
+    if valid_vocab is not None and valid_vocab < v:
+        keep = jnp.arange(v) < valid_vocab
+        logits = jnp.where(keep, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE over valid positions; logits f32 (B, S, V), labels int (B, S)."""
+    logits = logits.astype(F32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(F32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss_chunked(x: jax.Array, head: jax.Array, labels: jax.Array, *,
+                    valid_vocab: int, chunk: int = 512,
+                    cap: float | None = None,
+                    mask: jax.Array | None = None) -> jax.Array:
+    """Cross-entropy straight from hidden states, scanned over seq chunks.
+
+    Never materializes the full (B, S, V) logits — peak transient is
+    (B, chunk, V) per device (vocab TP-sharded), which is what makes 150k+
+    vocabularies trainable at 4k sequance on 16 GiB chips. The chunk body is
+    rematerialized in the backward pass (jax.checkpoint).
+    """
+    b, s, d = x.shape
+    v = head.shape[1]
+    if mask is None:
+        mask = jnp.ones((b, s), F32)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (s + pad) // chunk
+    xc = x.reshape(b, nc, chunk, d)
+    lc = labels.reshape(b, nc, chunk)
+    mc = mask.reshape(b, nc, chunk).astype(F32)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        xi, li, mi = xs  # (b, chunk, d), (b, chunk), (b, chunk)
+        logits = jnp.einsum("bsd,dv->bsv", xi, head, preferred_element_type=F32)
+        logits = softcap(logits, cap)
+        if valid_vocab < v:
+            keep = jnp.arange(v) < valid_vocab
+            logits = jnp.where(keep, logits, -1e30)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = carry
+        return (nll_sum + jnp.sum((lse - gold) * mi), m_sum + jnp.sum(mi)), None
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0))
+    (nll_sum, m_sum), _ = lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)), xs)
+    return nll_sum / jnp.maximum(m_sum, 1.0)

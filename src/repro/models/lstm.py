@@ -1,0 +1,70 @@
+"""The paper's language model: 2-layer LSTM, 256 hidden units (§5, Shakespeare)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import Leaf
+
+F32 = jnp.float32
+PyTree = Any
+
+
+def param_struct(vocab: int, d_embed: int = 128, d_hidden: int = 256,
+                 n_layers: int = 2, dtype: str = "float32") -> PyTree:
+    layers = {
+        "wx": Leaf((n_layers, d_embed if n_layers == 1 else max(d_embed, d_hidden),
+                    4 * d_hidden), ("layers", None, None), dtype),
+        "wh": Leaf((n_layers, d_hidden, 4 * d_hidden), ("layers", None, None), dtype),
+        "b": Leaf((n_layers, 4 * d_hidden), ("layers", None), dtype, "zeros"),
+    }
+    return {
+        "embed": Leaf((vocab, d_embed), (None, None), dtype, scale=0.05),
+        "proj_in": Leaf((d_embed, max(d_embed, d_hidden)), (None, None), dtype),
+        "layers": layers,
+        "head": Leaf((d_hidden, vocab), (None, None), dtype),
+    }
+
+
+def _lstm_cell(x, h, c, wx, wh, b):
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates.astype(F32), 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h.astype(x.dtype), c
+
+
+def forward(params: PyTree, tokens: jax.Array) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    emb = jnp.take(params["embed"], tokens, axis=0)       # (B, S, E)
+    x = emb @ params["proj_in"]                            # (B, S, H_in)
+    b, s, _ = x.shape
+    n_layers = params["layers"]["wx"].shape[0]
+    d_hidden = params["layers"]["wh"].shape[1]
+
+    for l in range(n_layers):
+        wx = params["layers"]["wx"][l][:x.shape[-1]]
+        wh = params["layers"]["wh"][l]
+        bb = params["layers"]["b"][l]
+
+        def step(carry, xt):
+            h, c = carry
+            h, c = _lstm_cell(xt, h, c, wx, wh, bb)
+            return (h, c), h
+
+        init = (jnp.zeros((b, d_hidden), x.dtype), jnp.zeros((b, d_hidden), F32))
+        _, hs = lax.scan(step, init, jnp.moveaxis(x, 1, 0))
+        x = jnp.moveaxis(hs, 0, 1)                         # (B, S, H)
+    return x @ params["head"]
+
+
+def loss_fn(params: PyTree, batch: dict) -> tuple[jax.Array, dict]:
+    logits = forward(params, batch["tokens"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(F32))
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))
+    return nll, {"loss": nll, "acc": acc}

@@ -1,0 +1,36 @@
+"""The paper's MNIST model: MLP with one hidden layer of 200 units (§5)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Leaf
+
+F32 = jnp.float32
+PyTree = Any
+
+
+def param_struct(n_in: int = 784, n_hidden: int = 200, n_out: int = 10,
+                 dtype: str = "float32") -> PyTree:
+    return {
+        "w1": Leaf((n_in, n_hidden), (None, None), dtype),
+        "b1": Leaf((n_hidden,), (None,), dtype, "zeros"),
+        "w2": Leaf((n_hidden, n_out), (None, None), dtype),
+        "b2": Leaf((n_out,), (None,), dtype, "zeros"),
+    }
+
+
+def forward(params: PyTree, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def loss_fn(params: PyTree, batch: dict) -> tuple[jax.Array, dict]:
+    logits = forward(params, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits.astype(F32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(F32))
+    return nll, {"loss": nll, "acc": acc}

@@ -1,0 +1,106 @@
+"""Top-k routed mixture-of-experts with sort-based dispatch (expert parallel).
+
+Dispatch is the sort/capacity scheme (MegaBlocks/Switch-style, dropless up to
+the capacity factor): tokens are routed to (expert, slot) buffers via a sort
+by expert id, experts run as one batched einsum over the expert-sharded
+buffer (E on the "model"/EP mesh axis — XLA inserts the all-to-all), and
+results are combined with the router weights. Tokens beyond capacity are
+dropped (their combine weight is 0), matching capacity-factor semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import act_fn
+from repro.models.sharding_ctx import annotate
+
+F32 = jnp.float32
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, (cap + 7) // 8 * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def moe_ffn(x: jax.Array, router: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, cfg: MoEConfig, act: str,
+            shared: tuple[jax.Array, jax.Array, jax.Array] | None = None
+            ) -> jax.Array:
+    """x: (B, S, D); router: (D, E); expert weights: (E, D, F)/(E, F, D).
+
+    Returns (B, S, D). `shared` holds optional always-on expert weights
+    (gate/up/down of shapes (D, n_sh*F)/(D, n_sh*F)/(n_sh*F, D)).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    c = capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    # ---- routing (f32 router math)
+    logits = jnp.einsum("td,de->te", xt.astype(F32), router.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                     # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch to (E, C) slots
+    flat_e = top_e.reshape(-1)                                  # (t*k,)
+    order = jnp.argsort(flat_e)                                 # group by expert
+    sorted_e = flat_e[order]
+    # slot index within expert = position - start offset of that expert
+    counts = jnp.bincount(sorted_e, length=e)
+    starts = jnp.cumsum(counts) - counts                        # (e,)
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < c
+    slot = sorted_e * c + jnp.clip(pos_in_e, 0, c - 1)          # (t*k,)
+    src_token = order // k
+
+    buf = jnp.zeros((e * c, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[src_token], 0))
+    # constrain the dispatch buffer: E on the EP axis when divisible, C on the
+    # within-client DP axis — without this, SPMD materializes the buffer
+    # replicated and all-reduces it per layer (catastrophic for few-expert
+    # MoEs like grok-1 where E doesn't divide the EP axis)
+    buf = annotate(buf.reshape(e, c, d), "moe_buffer")
+
+    # ---- expert computation (batched over E; EP shards E on "model")
+    # explicit resharding point: ZeRO-3 gathers the bf16 weights here rather
+    # than letting XLA gather a f32-converted copy (2x the fsdp traffic)
+    w_gate = annotate(w_gate, "expert_weights")
+    w_up = annotate(w_up, "expert_weights")
+    w_down = annotate(w_down, "expert_weights_t")
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = (act_fn(act, g.astype(F32)) * u.astype(F32)).astype(x.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down)
+    out_buf = annotate(out_buf, "moe_buffer")
+
+    # ---- combine back to tokens with router weights (model dtype: the f32
+    # variant made the whole backward dispatch path f32 => 2x wire bytes)
+    gathered = out_buf.reshape(e * c, d)[slot]                  # (t*k, d)
+    w = (top_w.reshape(-1)[order] * keep).astype(F32)
+    contrib = (gathered.astype(F32) * w[:, None]).astype(x.dtype)
+    yt = jnp.zeros((t, d), x.dtype).at[src_token].add(contrib)
+
+    if shared is not None:
+        sg, su, sd_ = shared
+        g2 = jnp.einsum("td,df->tf", xt, sg)
+        u2 = jnp.einsum("td,df->tf", xt, su)
+        h2 = (act_fn(act, g2.astype(F32)) * u2.astype(F32)).astype(x.dtype)
+        yt = yt + jnp.einsum("tf,fd->td", h2, sd_)
+
+    return yt.reshape(b, s, d)
+
+
+def moe_aux_loss(x: jax.Array, router: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt.astype(F32), router.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts, dtype=F32), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,322 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay (arXiv:2404.05892).
+
+Faithful structure, adapted for TPU:
+  * time-mix block: token shift with LoRA-modulated lerp coefficients,
+    r/k/v/g projections (kept head-shaped for TP), per-channel data-dependent
+    decay ``w = exp(-exp(w0 + tanh(x A) B))`` and current-token bonus ``u``;
+  * the WKV recurrence runs **chunkwise** (gated-linear-attention form):
+    within a chunk a (C x C) per-head quadratic runs on the MXU, across
+    chunks a (H, hd, hd) state is carried by `lax.scan` — O(S) time, O(1)
+    state, which is what makes the 500k-decode shape feasible;
+  * numerical safety: per-step log-decay is clamped to [LOG_W_MIN, 0] and the
+    chunk is kept short (default 16) so every intermediate exponent is
+    bounded by |LOG_W_MIN|*chunk < 88 (f32 exp range). Channels decaying
+    faster than e^{LOG_W_MIN}/step are numerically dead anyway;
+  * channel-mix block: token shift + squared-relu MLP.
+
+Decode state: {wkv (L,B,H,hd,hd) f32, tm_prev (L,B,D), cm_prev (L,B,D)}.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import Leaf
+from repro.models.sharding_ctx import annotate
+
+F32 = jnp.float32
+PyTree = Any
+
+LOG_W_MIN = -4.0  # clamp per-step log decay; e^-4 ~ 0.018/step
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+# ----------------------------------------------------------------- params
+def param_struct(cfg: ModelConfig) -> PyTree:
+    assert cfg.rwkv is not None
+    d, v, nl = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    r = cfg.rwkv
+    h, hd = _dims(cfg)
+    dt = cfg.dtype
+
+    blocks = {
+        "ln1": Leaf((nl, d), ("layers", "embed"), dt, "ones"),
+        "ln2": Leaf((nl, d), ("layers", "embed"), dt, "ones"),
+        # token-shift lerp base + LoRA (5 targets: r, k, v, g, w)
+        "mix_base": Leaf((nl, 5, d), ("layers", None, "embed"), dt, "zeros"),
+        "mix_a": Leaf((nl, d, 5, r.mix_lora), ("layers", "embed", None, None),
+                      dt, scale=0.01),
+        "mix_b": Leaf((nl, 5, r.mix_lora, d), ("layers", None, None, "embed"),
+                      dt, scale=0.01),
+        # time-mix projections (head-shaped for TP on "heads")
+        "wr": Leaf((nl, d, h, hd), ("layers", "embed", "heads", None), dt),
+        "wk": Leaf((nl, d, h, hd), ("layers", "embed", "heads", None), dt),
+        "wv": Leaf((nl, d, h, hd), ("layers", "embed", "heads", None), dt),
+        "wg": Leaf((nl, d, h, hd), ("layers", "embed", "heads", None), dt),
+        "wo": Leaf((nl, h, hd, d), ("layers", "heads", None, "embed"), dt),
+        # data-dependent decay: logit = w0 + tanh(x A) B ; w = exp(-exp(logit))
+        "w0": Leaf((nl, h, hd), ("layers", "heads", None), dt, "zeros"),
+        "decay_a": Leaf((nl, d, r.decay_lora), ("layers", "embed", None), dt,
+                        scale=0.01),
+        "decay_b": Leaf((nl, r.decay_lora, h, hd), ("layers", None, "heads", None),
+                        dt, scale=0.01),
+        "bonus_u": Leaf((nl, h, hd), ("layers", "heads", None), dt, "zeros"),
+        "ln_x": Leaf((nl, d), ("layers", "embed"), dt, "ones"),  # per-head norm scale
+        # channel mix
+        "cm_mix": Leaf((nl, 2, d), ("layers", None, "embed"), dt, "zeros"),
+        "cm_k": Leaf((nl, d, cfg.d_ff), ("layers", "embed", "ffn"), dt),
+        "cm_v": Leaf((nl, cfg.d_ff, d), ("layers", "ffn", "embed"), dt),
+        "cm_r": Leaf((nl, d, d), ("layers", "embed", None), dt),
+    }
+    return {
+        "embed": Leaf((v, d), ("vocab_in", "embed"), dt, scale=0.02),
+        "head": Leaf((d, v), ("embed", "vocab"), dt),
+        "final_norm": Leaf((d,), ("embed",), dt, "ones"),
+        "blocks": blocks,
+    }
+
+
+def state_struct(cfg: ModelConfig, batch: int) -> PyTree:
+    h, hd = _dims(cfg)
+    nl, d = cfg.n_layers, cfg.d_model
+    return {
+        "wkv": Leaf((nl, batch, h, hd, hd),
+                    ("layers", "act_batch", "heads", None, None), "float32", "zeros"),
+        "tm_prev": Leaf((nl, batch, d), ("layers", "act_batch", "embed"),
+                        cfg.dtype, "zeros"),
+        "cm_prev": Leaf((nl, batch, d), ("layers", "act_batch", "embed"),
+                        cfg.dtype, "zeros"),
+    }
+
+
+# ------------------------------------------------------------- WKV chunked
+def wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunkwise WKV. r,k,v,logw: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) f32.
+
+    Per-head recurrence (state S maps k-dim -> v-dim):
+        out_t = r_t . S_{t-1} + (r_t . (u*k_t)) v_t
+        S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (out (B,S,H,hd), final state).
+    """
+    b, s, h, hd = r.shape
+    pad = (-s) % chunk
+    if pad:  # zero-pad: k=v=0 adds nothing to state, logw=0 leaves decay alone
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out, state = wkv_chunked(zpad(r), zpad(k), zpad(v), zpad(logw), u,
+                                 state, chunk)
+        return out[:, :s], state
+    nc = s // chunk
+    shp = (b, nc, chunk, h, hd)
+    rc = r.reshape(shp).astype(F32)
+    kc = k.reshape(shp).astype(F32)
+    vc = v.reshape(shp).astype(F32)
+    lw = logw.reshape(shp).astype(F32)
+
+    ci = jnp.cumsum(lw, axis=2)       # inclusive within-chunk log-decay sums
+    ce = ci - lw                      # exclusive
+    tot = ci[:, :, -1]                # (b, nc, h, hd)
+
+    uu = u.astype(F32)
+
+    def body(st, xs):
+        r_, k_, v_, ci_, ce_, tot_ = xs  # (b, chunk, h, hd) / tot_ (b, h, hd)
+        rd = r_ * jnp.exp(ce_)           # decayed-to-chunk-start queries
+        kd = k_ * jnp.exp(-ci_)          # keys normalized to chunk start
+        inter = jnp.einsum("bthk,bhkv->bthv", rd, st)
+        att = jnp.einsum("bthk,bshk->btsh", rd, kd)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly past
+        att = jnp.where(tri[None, :, :, None], att, 0.0)
+        intra = jnp.einsum("btsh,bshv->bthv", att, v_)
+        bonus = jnp.einsum("bthk,bthk->bth", r_ * uu[None, None], k_)
+        out = inter + intra + bonus[..., None] * v_
+        kw = k_ * jnp.exp(tot_[:, None] - ci_)
+        st = jnp.exp(tot_)[..., None] * st + jnp.einsum("bthk,bthv->bhkv", kw, v_)
+        return st, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, ci, ce, tot))
+    state, outs = lax.scan(body, state.astype(F32), xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token WKV. r,k,v,logw: (B,H,hd); state (B,H,hd,hd) f32."""
+    r_, k_, v_ = r.astype(F32), k.astype(F32), v.astype(F32)
+    out = jnp.einsum("bhk,bhkv->bhv", r_, state)
+    bonus = jnp.einsum("bhk,bhk->bh", r_ * u.astype(F32)[None], k_)
+    out = out + bonus[..., None] * v_
+    state = jnp.exp(logw.astype(F32))[..., None] * state + k_[..., :, None] * v_[..., None, :]
+    return out.astype(r.dtype), state
+
+
+# ----------------------------------------------------------------- blocks
+def _token_shift(x, prev):
+    """shift(x)_t = x_{t-1}; position 0 uses `prev` (B, D)."""
+    shifted = jnp.roll(x, 1, axis=1)
+    return shifted.at[:, 0].set(prev.astype(x.dtype))
+
+
+def _head_norm(x, scale, h, hd):
+    """Per-head rms norm over hd, then channel scale (RWKV GroupNorm analogue)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, hd).astype(F32)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh * lax.rsqrt(var + 1e-5)
+    return (xh.reshape(b, s, d) * scale.astype(F32)).astype(x.dtype)
+
+
+def _mix_inputs(x, prev, p):
+    """Token-shift lerp with LoRA modulation for the 5 targets (r,k,v,g,w)."""
+    xs = _token_shift(x, prev)
+    delta = (xs - x).astype(F32)
+    lora = jnp.einsum("bsd,dnr->bsnr", x.astype(F32), p["mix_a"].astype(F32))
+    lora = jnp.einsum("bsnr,nrd->bsnd", jnp.tanh(lora), p["mix_b"].astype(F32))
+    mix = p["mix_base"].astype(F32)[None, None] + lora      # (B,S,5,D)
+    xi = x.astype(F32)[:, :, None] + delta[:, :, None] * mix
+    return xi.astype(x.dtype)  # (B, S, 5, D): r,k,v,g,w inputs
+
+
+def _time_mix(x, prev, state, p, cfg: ModelConfig, chunk: int | None):
+    h, hd = _dims(cfg)
+    xi = _mix_inputs(x, prev, p)
+    xr, xk, xv, xg, xw = (xi[:, :, i] for i in range(5))
+    r = jnp.einsum("bsd,dkh->bskh", xr, p["wr"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dkh->bskh", xk, p["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dkh->bskh", xv, p["wv"], preferred_element_type=F32)
+    g = jax.nn.silu(jnp.einsum("bsd,dkh->bskh", xg, p["wg"],
+                               preferred_element_type=F32))
+    dl = jnp.einsum("bsd,dr->bsr", xw.astype(F32), p["decay_a"].astype(F32))
+    dl = jnp.einsum("bsr,rkh->bskh", jnp.tanh(dl), p["decay_b"].astype(F32))
+    logw = -jnp.exp(p["w0"].astype(F32)[None, None] + dl)
+    logw = jnp.clip(logw, LOG_W_MIN, -1e-6)
+
+    if chunk is None:  # decode: (B, 1, ...) squeezed
+        out, state = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                              p["bonus_u"], state)
+        out = out[:, None]
+    else:
+        out, state = wkv_chunked(r, k, v, logw, p["bonus_u"], state, chunk)
+    b, s = x.shape[:2]
+    out = _head_norm(out.reshape(b, s, -1), p["ln_x"], h, hd)
+    out = (out.astype(F32) * g.reshape(b, s, -1)).astype(x.dtype)
+    out = jnp.einsum("bskh,khd->bsd", out.reshape(b, s, h, hd), p["wo"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, state, x[:, -1]  # new tm_prev = last input token
+
+
+def _channel_mix(x, prev, p):
+    xs = _token_shift(x, prev)
+    delta = (xs - x).astype(F32)
+    mix = p["cm_mix"].astype(F32)
+    xk = (x.astype(F32) + delta * mix[0][None, None]).astype(x.dtype)
+    xr = (x.astype(F32) + delta * mix[1][None, None]).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"], preferred_element_type=F32)
+    k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_v"], preferred_element_type=F32)
+    rgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr.astype(F32), p["cm_r"].astype(F32)))
+    return (rgate * kv).astype(x.dtype), x[:, -1]
+
+
+def _block(x, p, state, cfg: ModelConfig, chunk: int | None):
+    """One RWKV block. state: dict(wkv, tm_prev, cm_prev) for this layer."""
+    h = L.apply_norm(cfg.norm, x, p["ln1"])
+    tm_out, wkv, tm_prev = _time_mix(h, state["tm_prev"], state["wkv"], p, cfg, chunk)
+    x = annotate(x + tm_out, "residual")
+    h2 = L.apply_norm(cfg.norm, x, p["ln2"])
+    cm_out, cm_prev = _channel_mix(h2, state["cm_prev"], p)
+    x = annotate(x + cm_out, "residual")
+    return x, {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+
+# ------------------------------------------------------------------- api
+def _zero_state(cfg: ModelConfig, b: int):
+    h, hd = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wkv": jnp.zeros((b, h, hd, hd), F32),
+        "tm_prev": jnp.zeros((b, d), dt),
+        "cm_prev": jnp.zeros((b, d), dt),
+    }
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds=None, remat: bool = False,
+            return_state: bool = False):
+    """tokens (B, S) -> logits (B, S, V); S % rwkv.chunk == 0."""
+    del prefix_embeds
+    x = L.embed_lookup(params["embed"], tokens)
+    x = annotate(x, "activation")
+    b = x.shape[0]
+    init = _zero_state(cfg, b)
+
+    def body(h, p):
+        h, st = _block(h, p, init, cfg, cfg.rwkv.chunk)
+        return h, st
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, states = lax.scan(body, x, params["blocks"])
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = L.lm_logits(x, params["head"], valid_vocab=cfg.vocab)
+    if return_state:
+        return annotate(logits, "logits"), states
+    return annotate(logits, "logits")
+
+
+def _hidden(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            remat: bool = False) -> jax.Array:
+    x = L.embed_lookup(params["embed"], tokens)
+    x = annotate(x, "activation")
+    init = _zero_state(cfg, x.shape[0])
+
+    def body(h, p):
+        h, st = _block(h, p, init, cfg, cfg.rwkv.chunk)
+        return h, st
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["blocks"])
+    return L.apply_norm(cfg.norm, x, params["final_norm"])
+
+
+def loss_fn(params: PyTree, batch: dict, cfg: ModelConfig,
+            remat: bool = False) -> tuple[jax.Array, dict]:
+    x = _hidden(params, batch["tokens"], cfg, remat=remat)
+    loss = L.lm_loss_chunked(x, params["head"], batch["labels"],
+                             valid_vocab=cfg.vocab, chunk=cfg.ce_chunk)
+    return loss, {"loss": loss}
+
+
+def prefill(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds=None) -> tuple[jax.Array, PyTree]:
+    logits, states = forward(params, tokens, cfg, return_state=True)
+    return logits[:, -1], states
+
+
+def decode_step(params: PyTree, state: PyTree, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, PyTree]:
+    """tokens (B,); state leaves have leading layer axis."""
+    del pos  # recurrent: position-free
+    x = L.embed_lookup(params["embed"], tokens[:, None])
+    x = annotate(x, "activation")
+
+    def body(h, xs):
+        p, st = xs
+        h, st2 = _block(h, p, st, cfg, chunk=None)
+        return h, st2
+
+    x, new_state = lax.scan(body, x, (params["blocks"], state))
+    x = L.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = L.lm_logits(x, params["head"], valid_vocab=cfg.vocab)[:, 0]
+    return logits, new_state

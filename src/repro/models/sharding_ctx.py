@@ -1,0 +1,60 @@
+"""Activation-sharding context: models call `annotate(x, role)`; the launcher
+installs a rule set mapping roles -> PartitionSpecs. Outside any context the
+calls are no-ops, so models stay mesh-agnostic (smoke tests, simulator).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+
+_RULES: contextvars.ContextVar[dict[str, Any] | None] = contextvars.ContextVar(
+    "activation_sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: dict[str, Any]):
+    """rules: {"role": PartitionSpec or NamedSharding}."""
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def annotate(x: jax.Array, role: str) -> jax.Array:
+    """Apply the role's sharding constraint with per-dim divisibility fallback:
+    axes that don't divide the corresponding dim are dropped (replicated)
+    instead of erroring — so one rule serves many architectures."""
+    rules = _RULES.get()
+    if rules is None or role not in rules:
+        return x
+    spec = rules[role]
+    if spec is None:
+        return x
+    try:
+        from jax.sharding import NamedSharding, PartitionSpec
+        if isinstance(spec, NamedSharding):
+            mesh, pspec = spec.mesh, spec.spec
+            parts = list(pspec) + [None] * (x.ndim - len(pspec))
+            eff = []
+            for dim, axis in zip(x.shape, parts[: x.ndim]):
+                eff.append(axis if axis is None or dim % _axis_size(mesh, axis) == 0
+                           else None)
+            spec = NamedSharding(mesh, PartitionSpec(*eff))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:
+        # rank mismatch (e.g. extra vmap batch dim): leave unsharded
+        return x

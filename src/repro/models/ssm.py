@@ -1,0 +1,196 @@
+"""Mamba2 (SSD — state-space duality) block, chunked for TPU (arXiv:2405.21060).
+
+Structure per block (config SSMConfig):
+  in-proj -> (z gate, x, B, C, dt heads) ; short causal conv on x ;
+  SSD recurrence with per-head scalar decay  h_t = exp(A dt_t) h_{t-1} +
+  dt_t x_t (x) B_t ;  y_t = C_t . h_t + D x_t ;  gated rmsnorm ; out-proj.
+
+Chunked evaluation: within a chunk the (C x C) decay-weighted quadratic runs
+on the MXU; across chunks the (H, P, N) state is carried by lax.scan — O(S)
+time and O(1) decode state (feeds the 500k-decode shape for zamba2).
+
+Numerical safety: per-step log-decay A*dt is clamped to >= LOG_A_MIN so the
+within-chunk cumulative stays in comfortable f32 range (decay differences are
+<= 0, so exp() never overflows; the clamp bounds *cancellation* error).
+
+Deviation from the reference CUDA impl (noted in DESIGN.md): the causal conv
+is applied to x only (not the concatenated xBC), and n_groups defaults to 1.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers as L
+from repro.models.params import Leaf
+
+F32 = jnp.float32
+PyTree = Any
+
+LOG_A_MIN = -8.0  # clamp per-step log decay
+
+
+def dims(cfg_ssm: SSMConfig, d_model: int) -> tuple[int, int]:
+    d_in = cfg_ssm.expand * d_model
+    n_heads = d_in // cfg_ssm.head_dim
+    return d_in, n_heads
+
+
+def block_struct(nl: int, d: int, s: SSMConfig, dt: str) -> dict[str, Leaf]:
+    """Stacked (nl, ...) parameter leaves for mamba2 blocks."""
+    d_in, h = dims(s, d)
+    g, n = s.n_groups, s.d_state
+    return {
+        "ln": Leaf((nl, d), ("layers", "embed"), dt, "ones"),
+        "w_z": Leaf((nl, d, d_in), ("layers", "embed", "ffn"), dt),
+        "w_x": Leaf((nl, d, d_in), ("layers", "embed", "ffn"), dt),
+        "w_B": Leaf((nl, d, g * n), ("layers", "embed", None), dt),
+        "w_C": Leaf((nl, d, g * n), ("layers", "embed", None), dt),
+        "w_dt": Leaf((nl, d, h), ("layers", "embed", "heads"), dt),
+        "dt_bias": Leaf((nl, h), ("layers", "heads"), dt, "zeros"),
+        "conv_w": Leaf((nl, s.conv_width, d_in), ("layers", None, "ffn"), dt,
+                       scale=0.2),
+        "conv_b": Leaf((nl, d_in), ("layers", "ffn"), dt, "zeros"),
+        "A_log": Leaf((nl, h), ("layers", "heads"), "float32", "zeros"),
+        "D": Leaf((nl, h), ("layers", "heads"), "float32", "ones"),
+        "norm": Leaf((nl, d_in), ("layers", "ffn"), dt, "ones"),
+        "w_out": Leaf((nl, d_in, d), ("layers", "ffn", "embed"), dt),
+    }
+
+
+def state_struct_one(d: int, s: SSMConfig, batch: int) -> dict[str, tuple]:
+    d_in, h = dims(s, d)
+    return {
+        "ssd": ((batch, h, s.head_dim, s.d_state), "float32"),
+        "conv": ((batch, s.conv_width - 1, d_in), "bfloat16"),
+    }
+
+
+# ----------------------------------------------------------------- conv
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv over seq. x: (B,S,Din); w: (W,Din); b: (Din,).
+
+    conv_state: (B, W-1, Din) past inputs (decode) or None (train: zero pad).
+    Returns (y, new_conv_state).
+    """
+    bsz, s, d_in = x.shape
+    wlen = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((bsz, wlen - 1, d_in), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, Din)
+    y = jnp.zeros((bsz, s, d_in), F32)
+    for i in range(wlen):  # W is tiny (4): unrolled shifts, no conv primitive
+        y = y + xp[:, i:i + s].astype(F32) * w[i].astype(F32)
+    y = jax.nn.silu(y + b.astype(F32))
+    new_state = xp[:, -(wlen - 1):]  # last W-1 raw inputs
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------ SSD
+def ssd_chunked(xh, bmat, cmat, log_a, dt, state, chunk: int):
+    """Chunkwise SSD (n_groups=1).
+
+    xh: (B,S,H,P) head inputs; bmat/cmat: (B,S,N); log_a: (B,S,H) per-step log
+    decay (<=0); dt: (B,S,H) step sizes; state: (B,H,P,N) f32.
+    Returns (y (B,S,H,P), final state).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:  # zero-pad: dt=0 & log_a=0 leave the state untouched
+        z3 = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        z4 = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, state = ssd_chunked(z4(xh), z3(bmat), z3(cmat), z3(log_a), z3(dt),
+                               state, chunk)
+        return y[:, :s], state
+    nc = s // chunk
+    xc = xh.reshape(b, nc, chunk, h, p).astype(F32)
+    bc = bmat.reshape(b, nc, chunk, n).astype(F32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(F32)
+    ac = log_a.reshape(b, nc, chunk, h).astype(F32)
+    dc = dt.reshape(b, nc, chunk, h).astype(F32)
+
+    cum = jnp.cumsum(ac, axis=2)        # inclusive within-chunk
+    tot = cum[:, :, -1]                 # (b, nc, h)
+
+    def body(st, xs):
+        x_, b_, c_, cum_, dt_, tot_ = xs
+        # inter-chunk: y_t += C_t . (exp(cum_t) * st)
+        dec_q = jnp.exp(cum_)                              # (b,c,h)
+        inter = jnp.einsum("bcn,bhpn,bch->bchp", c_, st, dec_q)
+        # intra-chunk: att[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s, s <= t
+        scores = jnp.einsum("btn,bsn->bts", c_, b_)        # (b,c,c)
+        dec = jnp.exp(cum_[:, :, None] - cum_[:, None, :])  # (b,t,s,h)
+        tri = jnp.tril(jnp.ones((dec.shape[1], dec.shape[2]), bool))
+        w = jnp.where(tri[None, :, :, None], scores[..., None] * dec, 0.0)
+        intra = jnp.einsum("btsh,bsh,bshp->bthp", w, dt_, x_)
+        y = inter + intra
+        # state update
+        dec_k = jnp.exp(tot_[:, None] - cum_) * dt_        # (b,c,h)
+        st = (jnp.exp(tot_)[:, :, None, None] * st
+              + jnp.einsum("bch,bchp,bcn->bhpn", dec_k, x_, b_))
+        return st, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xc, bc, cc, cum, dc, tot))
+    state, ys = lax.scan(body, state.astype(F32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, state
+
+
+def ssd_step(xh, bmat, cmat, log_a, dt, state):
+    """Single-token SSD. xh: (B,H,P); bmat/cmat: (B,N); log_a/dt: (B,H)."""
+    x_, b_, c_ = xh.astype(F32), bmat.astype(F32), cmat.astype(F32)
+    a = jnp.exp(log_a.astype(F32))                         # (B,H)
+    st = (a[..., None, None] * state
+          + jnp.einsum("bh,bhp,bn->bhpn", dt.astype(F32), x_, b_))
+    y = jnp.einsum("bn,bhpn->bhp", c_, st)
+    return y, st
+
+
+# ----------------------------------------------------------------- block
+def mamba_block(x, p, state, s: SSMConfig, decode: bool = False):
+    """One mamba2 block. x: (B,S,D); state: {"ssd", "conv"} or None (train).
+
+    Returns (out, new_state).
+    """
+    d = x.shape[-1]
+    d_in, h = dims(s, d)
+    hn = L.rms_norm(x, p["ln"])
+    z = jnp.einsum("bsd,de->bse", hn, p["w_z"], preferred_element_type=F32)
+    xin = jnp.einsum("bsd,de->bse", hn, p["w_x"],
+                     preferred_element_type=F32).astype(x.dtype)
+    bmat = jnp.einsum("bsd,dn->bsn", hn, p["w_B"],
+                      preferred_element_type=F32).astype(x.dtype)
+    cmat = jnp.einsum("bsd,dn->bsn", hn, p["w_C"],
+                      preferred_element_type=F32).astype(x.dtype)
+    dt_raw = jnp.einsum("bsd,dh->bsh", hn, p["w_dt"], preferred_element_type=F32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["A_log"].astype(F32))                   # (H,) negative
+    log_a = jnp.clip(a[None, None] * dt, LOG_A_MIN, -1e-6)
+
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_state)
+    xh = xc.reshape(x.shape[0], x.shape[1], h, s.head_dim)
+
+    ssd_state = (state["ssd"] if state is not None
+                 else jnp.zeros((x.shape[0], h, s.head_dim, s.d_state), F32))
+    if decode:
+        y, ssd_state = ssd_step(xh[:, 0], bmat[:, 0], cmat[:, 0],
+                                log_a[:, 0], dt[:, 0], ssd_state)
+        y = y[:, None]
+    else:
+        y, ssd_state = ssd_chunked(xh, bmat, cmat, log_a, dt, ssd_state, s.chunk)
+    y = y + p["D"].astype(F32)[None, None, :, None] * xh.astype(F32)
+    y = y.reshape(x.shape[0], x.shape[1], d_in)
+    # gated norm + out-proj
+    y = L.rms_norm(y.astype(x.dtype), p["norm"])
+    y = (y.astype(F32) * jax.nn.silu(z)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return x + out, {"ssd": ssd_state, "conv": new_conv}

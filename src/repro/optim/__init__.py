@@ -1,0 +1,5 @@
+"""Optimizers and schedules (pure JAX, no external deps)."""
+from repro.optim.sgdm import SGDMState, sgdm_init, sgdm_step  # noqa: F401
+from repro.optim.adamw import AdamWState, adamw_init, adamw_step  # noqa: F401
+from repro.optim.schedules import constant, cosine, inverse_time, warmup_cosine  # noqa: F401
+from repro.optim.clip import global_norm, clip_by_global_norm  # noqa: F401

@@ -1,0 +1,57 @@
+"""AdamW (decoupled weight decay) — used by the LM examples."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class AdamWState:
+    mu: PyTree
+    nu: PyTree
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.mu, self.nu, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState, AdamWState.tree_flatten, AdamWState.tree_unflatten)
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, F32)
+    return AdamWState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def adamw_step(params: PyTree, grads: PyTree, state: AdamWState, lr,
+               b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0
+               ) -> tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    t = step.astype(F32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(F32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(F32)),
+                      state.nu, grads)
+
+    def upd(p, m, n):
+        mh, nh = m / c1, n / c2
+        step_ = lr * (mh / (jnp.sqrt(nh) + eps) + weight_decay * p.astype(F32))
+        return (p.astype(F32) - step_).astype(p.dtype)
+
+    new_p = jax.tree.map(upd, params, mu, nu)
+    return new_p, AdamWState(mu=mu, nu=nu, step=step)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time(c: float):
+    """eta_t = c / t — the schedule of the paper's stability Theorem 2.5."""
+    return lambda step: jnp.asarray(c, jnp.float32) / jnp.maximum(
+        jnp.asarray(step, jnp.float32), 1.0)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(math.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac=0.1):
+    base = cosine(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        return jnp.where(step < warmup, warm, base(step - warmup))
+    return fn

@@ -1,0 +1,58 @@
+"""SGD with (heavy-ball) momentum — the paper's local solver, eq. 2.1.
+
+Kept optimizer-shaped (init/step over pytrees) so the production trainer and
+the simulator share it; `core.dfedavg.local_round` uses the same update via
+`momentum_update` / the fused Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class SGDMState:
+    velocity: PyTree
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.velocity, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    SGDMState, SGDMState.tree_flatten, SGDMState.tree_unflatten)
+
+
+def sgdm_init(params: PyTree, dtype=None) -> SGDMState:
+    vel = jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+    return SGDMState(velocity=vel, step=jnp.zeros((), jnp.int32))
+
+
+def sgdm_step(params: PyTree, grads: PyTree, state: SGDMState, lr, beta=0.9,
+              weight_decay: float = 0.0, nesterov: bool = False
+              ) -> tuple[PyTree, SGDMState]:
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    new_v = jax.tree.map(
+        lambda v, g: (beta * v.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(v.dtype),
+        state.velocity, grads)
+    if nesterov:
+        upd = jax.tree.map(lambda v, g: beta * v.astype(jnp.float32)
+                           - lr * g.astype(jnp.float32), new_v, grads)
+    else:
+        upd = new_v
+    new_p = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, upd)
+    return new_p, SGDMState(velocity=new_v, step=state.step + 1)

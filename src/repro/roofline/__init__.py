@@ -1,0 +1,2 @@
+"""Roofline analysis: hw constants + scan-aware compiled-HLO cost extraction."""
+from repro.roofline import analysis, hlo_cost, hw  # noqa: F401

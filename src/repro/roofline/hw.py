@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (the TARGET platform of this framework)."""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12     # per chip, bf16
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per link (~50 GB/s)
+HBM_BYTES = 16 * 1024**3     # 16 GiB per chip
+
+CHIPS_SINGLE_POD = 256       # 16 x 16
+CHIPS_MULTI_POD = 512        # 2 pods

@@ -1,0 +1,150 @@
+"""Gossip executor equivalence + convergence-to-consensus tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import failures, gossip, topology
+
+
+def _tree(n, seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.standard_normal((n, 6, 5)), jnp.float32),
+            "b": jnp.asarray(r.standard_normal((n, 11)), jnp.float32)}
+
+
+class TestExecutorEquivalence:
+    @pytest.mark.parametrize("n,d", [(8, 2), (16, 4), (12, 3)])
+    def test_schedules_match_dense(self, n, d):
+        ov = topology.expander_overlay(n, d, seed=0)
+        spec = gossip.make_gossip_spec(ov)
+        x = _tree(n)
+        dense = gossip.mix_dense(x, ov.mixing_matrix())
+        sched = gossip.mix_schedules(x, spec)
+        for k in x:
+            np.testing.assert_allclose(dense[k], sched[k], rtol=2e-5, atol=2e-5)
+
+    def test_gossip_preserves_mean(self):
+        """Doubly-stochastic mixing: the client-mean is invariant."""
+        ov = topology.expander_overlay(16, 4, seed=2)
+        spec = gossip.make_gossip_spec(ov)
+        x = _tree(16, seed=3)
+        y = gossip.mix_schedules(x, spec)
+        for k in x:
+            np.testing.assert_allclose(jnp.mean(x[k], 0), jnp.mean(y[k], 0),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_consensus_rate_matches_lambda(self):
+        """Disagreement contracts at rate lambda per round (spectral theory)."""
+        n = 32
+        ov = topology.expander_overlay(n, 4, seed=1)
+        spec = gossip.make_gossip_spec(ov)
+        lam = spec.lam
+        r = np.random.default_rng(0)
+        x = {"w": jnp.asarray(r.standard_normal((n, 40)), jnp.float32)}
+        def disagreement(t):
+            mean = jnp.mean(t["w"], 0, keepdims=True)
+            return float(jnp.linalg.norm(t["w"] - mean))
+        d0 = disagreement(x)
+        for _ in range(10):
+            x = gossip.mix_schedules(x, spec)
+        d10 = disagreement(x)
+        assert d10 <= d0 * (lam ** 10) * 1.05  # within 5% of the bound
+
+    def test_expander_mixes_faster_than_ring(self):
+        n = 32
+        r = np.random.default_rng(0)
+        x0 = np.asarray(r.standard_normal((n, 20)), np.float32)
+        outs = {}
+        for name, ov in [("ring", topology.ring_overlay(n)),
+                         ("exp", topology.expander_overlay(n, 4, seed=0))]:
+            spec = gossip.make_gossip_spec(ov)
+            x = {"w": jnp.asarray(x0)}
+            for _ in range(8):
+                x = gossip.mix_schedules(x, spec)
+            mean = jnp.mean(x["w"], 0, keepdims=True)
+            outs[name] = float(jnp.linalg.norm(x["w"] - mean))
+        assert outs["exp"] < outs["ring"] * 0.5
+
+
+class TestShardMapGossip:
+    """ppermute path == stacked-gather path, on real (fake-device) meshes."""
+
+    def test_ppermute_matches_schedules(self):
+        import subprocess, sys, textwrap
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import gossip, topology
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=0)
+            spec = gossip.make_gossip_spec(ov)
+            r = np.random.default_rng(0)
+            x = jnp.asarray(r.standard_normal((8, 16, 3)), jnp.float32)
+
+            ref = gossip.mix_schedules({"w": x}, spec)["w"]
+
+            def body(t):
+                local = jax.tree.map(lambda a: a[0], t)
+                out = gossip.ppermute_mix(local, spec, "client")
+                return jax.tree.map(lambda a: a[None], out)
+
+            fn = jax.shard_map(body, mesh=mesh, in_specs=(P("client"),),
+                               out_specs=P("client"), axis_names={"client"})
+            got = jax.jit(fn)(jax.device_put(
+                {"w": x}, NamedSharding(mesh, P("client"))))["w"]
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+            print("PPERMUTE_OK")
+        """)
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, cwd=".")
+        assert "PPERMUTE_OK" in out.stdout, out.stdout + out.stderr
+
+
+class TestFailureAdjustedGossip:
+    def test_alive_adjusted_rows_sum_to_one(self):
+        ov = topology.expander_overlay(12, 4, seed=0)
+        spec = gossip.make_gossip_spec(ov)
+        alive = np.ones(12); alive[[2, 7]] = 0
+        adj = failures.alive_adjusted_spec(spec, alive)
+        # reconstruct the effective matrix
+        m = np.diag(list(adj.self_weights))
+        for rf in adj.recv_from:
+            for i, j in enumerate(rf):
+                if i != j:
+                    m[i, j] += adj.edge_weight
+        np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-9)
+        # dead clients are isolated (identity rows)
+        assert m[2, 2] == pytest.approx(1.0)
+        assert m[7, 7] == pytest.approx(1.0)
+        # no one receives from the dead
+        alive_idx = [i for i in range(12) if alive[i]]
+        assert np.all(m[np.ix_(alive_idx, [2, 7])] == 0)
+
+    def test_dead_clients_keep_params_others_average(self):
+        ov = topology.expander_overlay(8, 4, seed=1)
+        spec = gossip.make_gossip_spec(ov)
+        x = _tree(8, seed=4)
+        alive = np.ones(8); alive[3] = 0
+        adj = failures.alive_adjusted_spec(spec, alive)
+        y = gossip.mix_schedules(x, adj)
+        np.testing.assert_allclose(y["a"][3], x["a"][3])  # dead keeps params
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 12, 16]), d=st.sampled_from([2, 3, 4]),
+       seed=st.integers(0, 500))
+def test_gossip_executors_agree_property(n, d, seed):
+    ov = topology.expander_overlay(n, d, seed=seed)
+    spec = gossip.make_gossip_spec(ov)
+    x = _tree(n, seed=seed)
+    dense = gossip.mix_dense(x, ov.mixing_matrix())
+    sched = gossip.mix_schedules(x, spec)
+    for k in x:
+        np.testing.assert_allclose(dense[k], sched[k], rtol=3e-5, atol=3e-5)

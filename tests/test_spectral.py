@@ -1,0 +1,114 @@
+"""Spectral theory tests: the paper's §3 claims, checked numerically."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing, spectral, topology
+
+
+class TestLaplacian:
+    def test_ring_eigenvalues_closed_form(self):
+        n = 12
+        ev = spectral.laplacian_spectrum(topology.ring_overlay(n).simple_adjacency())
+        want = sorted(2 - 2 * math.cos(2 * math.pi * k / n) for k in range(n))
+        np.testing.assert_allclose(ev, want, atol=1e-9)
+
+    def test_complete_graph_kappa_is_one(self):
+        adj = topology.complete_adjacency(10)
+        assert spectral.kappa(adj) == pytest.approx(1.0)
+
+    def test_disconnected_graph_detected(self):
+        adj = np.zeros((4, 4))
+        adj[0, 1] = adj[1, 0] = 1
+        adj[2, 3] = adj[3, 2] = 1
+        assert not spectral.is_connected(adj)
+        assert spectral.kappa(adj) == float("inf")
+
+
+class TestPaperBounds:
+    def test_ring_kappa_quadratic_blowup(self):
+        """Paper §3.1: kappa(ring) >= N^2/pi^2."""
+        for n in (16, 64, 128):
+            kap = spectral.kappa(topology.ring_overlay(n).simple_adjacency())
+            assert kap >= spectral.ring_kappa_lower_bound(n) * 0.999
+
+    def test_expander_beats_ring_lambda(self):
+        """The headline claim: expander lambda stays bounded, ring's -> 1."""
+        for n in (32, 64, 128):
+            ring = topology.ring_overlay(n).chow_weights()
+            exp = topology.expander_overlay(n, 4, seed=0).chow_weights()
+            assert exp.lam < ring.lam
+        # and the gap grows with n
+        lam_128 = topology.expander_overlay(128, 4, seed=0).chow_weights().lam
+        assert lam_128 < 0.95  # bounded away from 1 at n=128
+
+    def test_ramanujan_bound_decreasing_in_d(self):
+        vals = [spectral.ramanujan_bound(d) for d in (3, 4, 8, 16)]
+        assert vals == sorted(vals, reverse=True)
+
+    def test_theta_star_optimal(self):
+        """theta* = 1/kappa minimizes lambda(theta) (paper Fig. 2)."""
+        for kap in (2.0, 5.0, 20.0):
+            t_star = spectral.theta_star(kap)
+            best = spectral.chow_lambda(kap, t_star)
+            for t in np.linspace(0.01, 0.99, 33):
+                assert best <= spectral.chow_lambda(kap, float(t)) + 1e-12
+
+    def test_c_lambda_increasing(self):
+        """C_lambda (Thm 2.5) increases in lambda: better graphs generalize."""
+        lams = np.linspace(0.05, 0.95, 10)
+        cs = [spectral.c_lambda(float(l)) for l in lams]
+        assert all(a < b for a, b in zip(cs, cs[1:]))
+
+
+class TestMixingMatrices:
+    @pytest.mark.parametrize("builder", [
+        mixing.chow_matrix, mixing.metropolis_hastings_matrix,
+        mixing.max_degree_matrix])
+    def test_definition_2_1(self, builder):
+        adj = topology.expander_overlay(20, 4, seed=1).simple_adjacency()
+        m = builder(adj)
+        mixing.validate_mixing_matrix(m, adj)
+
+    def test_uniform_average_is_complete_graph_limit(self):
+        m = mixing.uniform_average_matrix(8)
+        mixing.validate_mixing_matrix(m, topology.complete_adjacency(8))
+
+    def test_chow_lambda_matches_formula(self):
+        adj = topology.expander_overlay(24, 4, seed=3).simple_adjacency()
+        kap = spectral.kappa(adj)
+        m = mixing.chow_matrix(adj)
+        lam_emp = spectral.mixing_lambda(m)
+        lam_formula = spectral.chow_lambda(kap)
+        assert lam_emp == pytest.approx(lam_formula, abs=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 48), d=st.integers(2, 6), seed=st.integers(0, 10_000))
+def test_expander_overlay_properties(n, d, seed):
+    """Property: any (n, d, seed) draw yields a valid overlay whose Chow mixing
+    matrix satisfies Definition 2.1 and whose schedule decomposition matches."""
+    if d % 2 == 1 and n % 2 == 1:
+        n += 1
+    ov = topology.expander_overlay(n, d, seed=seed)
+    assert ov.degree == d
+    m = ov.mixing_matrix()
+    mixing.validate_mixing_matrix(m)
+    # decomposition: M = w0 I + c sum_s P_s
+    w = ov.chow_weights()
+    m2 = w.self_weight * np.eye(n)
+    for s in ov.schedules:
+        m2[np.arange(n), s] += w.edge_weight
+    np.testing.assert_allclose(m, m2, atol=1e-12)
+    # rows sum to one; lambda in (0, 1)
+    np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-9)
+    assert 0.0 < w.lam < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(lam=st.floats(0.01, 0.99))
+def test_mixing_time_consistent(lam):
+    t = spectral.mixing_time(lam, eps=1e-3)
+    assert lam ** t <= 1e-3 * (1 + 1e-9)

@@ -1,0 +1,118 @@
+"""Overlay construction / join / failure-repair tests (paper §4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+
+
+class TestConstruction:
+    def test_ring_is_two_regular(self):
+        ov = topology.ring_overlay(10)
+        deg = ov.multigraph_adjacency().sum(1)
+        np.testing.assert_array_equal(deg, 2)
+
+    def test_expander_even_degree(self):
+        ov = topology.expander_overlay(20, 4, seed=0)
+        assert len(ov.schedules) == 4
+        assert ov.coords.shape == (20, 2)
+
+    def test_expander_odd_degree_has_matching(self):
+        ov = topology.expander_overlay(20, 3, seed=0)
+        assert len(ov.schedules) == 3
+        invs = [np.array_equal(np.argsort(s), s) for s in ov.schedules]
+        assert sum(invs) == 1  # exactly one involution (the matching)
+
+    def test_base_ring_included(self):
+        """Paper §5: expander built by adding edges on top of the Ring."""
+        n = 16
+        ov = topology.expander_overlay(n, 4, seed=0, include_base_ring=True)
+        adj = ov.simple_adjacency()
+        for i in range(n):
+            assert adj[i, (i + 1) % n] == 1  # natural ring edges present
+
+    def test_erdos_renyi_connected_and_logn_degree(self):
+        n = 200
+        adj = topology.erdos_renyi_adjacency(n, seed=0)
+        from repro.core import spectral
+        assert spectral.is_connected(adj)
+        mean_deg = adj.sum() / n
+        assert 0.3 * np.log(n) < mean_deg < 3.0 * np.log(n)
+
+    def test_odd_degree_odd_n_rejected(self):
+        with pytest.raises(ValueError):
+            topology.expander_overlay(15, 3)
+
+
+class TestJoin:
+    def test_add_node_preserves_validity(self):
+        ov = topology.expander_overlay(12, 4, seed=0)
+        ov2 = ov.add_node(np.random.default_rng(1))
+        assert ov2.n == 13
+        assert ov2.spectral_report().connected
+        ov2.mixing_matrix()  # validates schedules internally
+
+    def test_repeated_joins(self):
+        ov = topology.expander_overlay(8, 4, seed=0)
+        rng = np.random.default_rng(2)
+        for _ in range(5):
+            ov = ov.add_node(rng)
+        assert ov.n == 13
+        assert ov.spectral_report().connected
+
+
+class TestRepair:
+    def test_single_failure_splice(self):
+        """Two-hop splice: pred connects to succ in every ring (paper §4.1)."""
+        ov = topology.ring_overlay(10)
+        repaired, old2new = ov.remove_nodes([4])
+        assert repaired.n == 9
+        assert old2new[4] == -1
+        succ = repaired.schedules[0]
+        # node 3 (new idx 3) must now point at node 5 (new idx 4)
+        assert succ[old2new[3]] == old2new[5]
+        assert repaired.spectral_report().connected
+
+    def test_run_of_failures_splice(self):
+        ov = topology.ring_overlay(12)
+        repaired, _ = ov.remove_nodes([3, 4, 5])
+        assert repaired.n == 9
+        assert repaired.spectral_report().connected
+
+    def test_expander_stays_connected_after_20pct_failures(self):
+        """Paper §5.2 resilience: 20% drop keeps the expander connected."""
+        ov = topology.expander_overlay(40, 4, seed=0)
+        rng = np.random.default_rng(0)
+        dead = rng.choice(40, size=8, replace=False)
+        repaired, _ = ov.remove_nodes(list(dead))
+        rep = repaired.spectral_report()
+        assert rep.connected
+        assert repaired.chow_weights().lam < 1.0
+
+    def test_matching_repair_repairs_orphans(self):
+        ov = topology.expander_overlay(16, 3, seed=1)
+        repaired, _ = ov.remove_nodes([0, 7])
+        assert repaired.n == 14
+        # matching schedule still an involution
+        m = [s for s in repaired.schedules
+             if np.array_equal(np.argsort(s), s)]
+        assert len(m) >= 1
+        assert repaired.spectral_report().connected
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 40), seed=st.integers(0, 1000),
+       frac=st.floats(0.05, 0.3))
+def test_repair_properties(n, seed, frac):
+    """Property: splice repair of any failure set keeps a valid, (almost
+    always) connected overlay with a well-defined mixing matrix."""
+    ov = topology.expander_overlay(n, 4, seed=seed)
+    rng = np.random.default_rng(seed)
+    k = max(1, int(frac * n))
+    dead = rng.choice(n, size=k, replace=False)
+    repaired, old2new = ov.remove_nodes(list(dead))
+    assert repaired.n == n - k
+    assert sorted(x for x in old2new if x >= 0) == list(range(n - k))
+    if repaired.spectral_report().connected:
+        m = repaired.mixing_matrix()
+        np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-9)
