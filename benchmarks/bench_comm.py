@@ -31,9 +31,31 @@ def algorithmic(n: int = 100, model_bytes: int = 4 * 10**6) -> None:
              f"bytes_per_client_per_round={int(deg * model_bytes)};degree={deg:.1f}")
 
 
+def packed_vs_per_leaf(arch: str = "qwen2.5-3b", d: int = 4) -> None:
+    """Collective count / payload structure of packed vs per-leaf gossip for a
+    real model's parameter tree (the tentpole's win, measurable offline)."""
+    from repro.configs import registry
+    from repro.core import packing
+    from repro.models import params as params_lib
+    from repro.models.api import ModelAPI
+
+    struct = ModelAPI(registry.reduced(arch)).param_struct()
+    structs = params_lib.shape_structs(struct)
+    spec = packing.make_pack_spec(structs)
+    n_leaves = spec.n_leaves
+    emit(f"comm/packed_vs_per_leaf/{arch}-smoke/d{d}", 0.0,
+         f"leaves={n_leaves};"
+         f"permutes_per_round_per_leaf={d * n_leaves};"
+         f"permutes_per_round_packed={d * spec.n_buffers};"
+         f"payload_MB={spec.payload_bytes / 2**20:.3f};"
+         f"padded_MB={spec.padded_bytes / 2**20:.3f};"
+         f"pad_overhead={spec.padded_bytes / max(spec.payload_bytes, 1):.3f}x")
+
+
 def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*train_4k*.json"))):
-        rec = json.load(open(path))
+        with open(path) as f:
+            rec = json.load(f)
         if rec.get("skipped"):
             continue
         r = rec["roofline"]
@@ -49,6 +71,7 @@ def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
 
 def main() -> None:
     algorithmic()
+    packed_vs_per_leaf()
     compiled()
 
 

@@ -13,9 +13,64 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core import packing
 from repro.kernels.fused_sgdm import ops as sgdm_ops
 from repro.kernels.gossip_mix import ops as mix_ops
 from repro.kernels.quant_gossip import ops as q_ops
+
+
+def packed_vs_per_leaf_gossip(d: int = 4, n_leaves: int = 24) -> None:
+    """The tentpole's reduction, leaf-by-leaf vs packed-fused.
+
+    Simulates one gossip round's *local* arithmetic (payloads already
+    exchanged): per-leaf does d+1 unfused read-modify-write adds per leaf;
+    packed runs self + d received flat buffers through one fused reduction
+    (pack/unpack of the self tree included in its timing, as in the real
+    step). Wall-times are CPU-jnp; the HBM traffic model is the TPU number.
+    """
+    r = np.random.default_rng(1)
+    # odd-shaped leaves, ~4M elements total — nothing lane-aligned
+    shapes = [(257, 129 + (i % 7)) for i in range(n_leaves)]
+    tree = {f"l{i}": jnp.asarray(r.standard_normal(s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    neighbors = [jax.tree.map(
+        lambda x: jnp.asarray(r.standard_normal(x.shape), jnp.float32), tree)
+        for _ in range(d)]
+    w0, c = 0.6, 0.1
+
+    @jax.jit
+    def per_leaf(t, recv):
+        def one(x, *rs):
+            out = w0 * x
+            for rr in rs:
+                out = out + c * rr
+            return out
+        return jax.tree.map(one, t, *recv)
+
+    spec = packing.make_pack_spec(tree)
+    recv_bufs = [packing.pack_tree(nb, spec) for nb in neighbors]
+    weights = jnp.asarray([w0] + [c] * d, jnp.float32)
+
+    @jax.jit
+    def packed(t, recv):
+        bufs = packing.pack_tree(t, spec)
+        outs = tuple(
+            mix_ops.gossip_mix_packed(jnp.stack((b,) + tuple(rb[i] for rb in recv)),
+                                      weights)
+            for i, b in enumerate(bufs))
+        return packing.unpack_tree(outs, spec)
+
+    us_leaf = time_call(lambda: per_leaf(tree, neighbors), iters=10)
+    us_pack = time_call(lambda: packed(tree, recv_bufs), iters=10)
+    total = sum(int(np.prod(s)) for s in shapes)
+    bytes_unfused = (3 * d + 2) * total * 4   # per leaf: scale + d RMW adds
+    bytes_fused = (d + 2) * total * 4         # d+1 reads + 1 write
+    emit(f"kernels/gossip_packed_vs_per_leaf/d{d}/L{n_leaves}", us_pack,
+         f"us_per_leaf={us_leaf:.1f};us_packed={us_pack:.1f};"
+         f"collectives_per_leaf={d * n_leaves};collectives_packed={d};"
+         f"hbm_unfused_MB={bytes_unfused/2**20:.1f};"
+         f"hbm_fused_MB={bytes_fused/2**20:.1f};"
+         f"traffic_saving={bytes_unfused/bytes_fused:.2f}x")
 
 
 def main() -> None:
@@ -50,10 +105,18 @@ def main() -> None:
          f"wire_bytes_f32={4*size};wire_bytes_int8={size+4};"
          f"ici_saving={4*size/(size+4):.2f}x")
 
+    # packed-vs-per-leaf gossip round (the tentpole's win)
+    packed_vs_per_leaf_gossip(d=4, n_leaves=24)
+
     # interpret-mode correctness spot check folded into the bench
     got = mix_ops.gossip_mix(jnp.ones((3, 1024)), jnp.asarray([0.5, 0.25, 0.25]),
                              impl="pallas_interpret")
     assert float(jnp.max(jnp.abs(got - 1.0))) < 1e-6
+    # packed fast path through the same interpreted kernel body
+    stack = jnp.ones((3, packing.PACK_BLOCK_ROWS, packing.LANE))
+    got2 = mix_ops.gossip_mix_packed(stack, jnp.asarray([0.5, 0.25, 0.25]),
+                                     impl="pallas_interpret")
+    assert float(jnp.max(jnp.abs(got2 - 1.0))) < 1e-6
     emit("kernels/interpret_check", 0.0, "pallas_interpret=ok")
 
 

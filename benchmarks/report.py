@@ -22,7 +22,8 @@ def load(dir_: str, label: str = "") -> list[dict]:
     recs = []
     seen_skips = set()
     for path in glob.glob(os.path.join(dir_, "*.json")):
-        rec = json.load(open(path))
+        with open(path) as f:
+            rec = json.load(f)
         if rec.get("skipped"):
             key = (rec["arch"], rec["shape"], rec["mesh"])
             if key in seen_skips:

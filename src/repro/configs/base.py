@@ -180,7 +180,12 @@ class ParallelConfig:
     clients_per_pod: int = 16
     remat: Literal["none", "block"] = "block"
     attn_mode: Literal["heads", "sequence"] = "heads"  # TP choice for attention
-    gossip_impl: Literal["dense", "ppermute", "ppermute_quant"] = "ppermute"
+    # gossip executor: "ppermute_packed" (default: flat-buffer payloads, d
+    # collectives/round + fused Pallas reduction), "ppermute_packed_quant"
+    # (packed + int8 wire payloads), per-leaf "ppermute"/"ppermute_quant"
+    # baselines, or the paper-naive "dense" mixing einsum
+    gossip_impl: Literal["dense", "ppermute", "ppermute_quant",
+                         "ppermute_packed", "ppermute_packed_quant"] = "ppermute_packed"
     local_steps: int = 2          # K inside the lowered round (scan)
     use_fused_sgdm: bool = True
     grad_accum: int = 4           # microbatches per local step (memory knob)

@@ -6,7 +6,10 @@ Public API:
   virtual ring spaces), join + two-hop failure repair.
 * `spectral` — Laplacian spectra, kappa(L), theta*, lambda(M), C_lambda.
 * `mixing`   — mixing matrices for arbitrary adjacencies + validity checks.
-* `gossip`   — the three gossip executors (dense / gather / ppermute).
+* `gossip`   — the gossip executors (dense / gather / per-leaf ppermute /
+  packed ppermute / packed int8 ppermute).
+* `packing`  — flat-buffer packing of parameter pytrees (PackSpec,
+  pack_tree / unpack_tree) feeding the packed gossip hot path.
 * `dfedavg`  — the DFedAvgM local solver (paper eq. 2.1).
 * `failures` — failure plans, straggler weight-renormalization, splice repair.
 * `compression` — int8 / top-k payload compression (beyond-paper).
@@ -17,6 +20,7 @@ from repro.core import (  # noqa: F401
     failures,
     gossip,
     mixing,
+    packing,
     spectral,
     topology,
 )

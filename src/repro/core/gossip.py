@@ -1,6 +1,6 @@
 """Gossip executors: how a mixing round `w <- M w` actually runs.
 
-Three executors, one semantics:
+Five executors, one semantics:
 
 1. ``mix_dense``      — dense ``einsum('cd,d...->c...')`` over a stacked client
                         axis. The reference / oracle; also what a *naive* port
@@ -9,11 +9,25 @@ Three executors, one semantics:
                         this is the paper-faithful baseline in §Perf).
 2. ``mix_schedules``  — gather-based evaluation of the schedule decomposition
                         on a stacked client axis (simulator fast path; oracle
-                        for the ppermute path).
-3. ``ppermute_mix``   — the production path: inside ``shard_map``, one
-                        ``jax.lax.ppermute`` per schedule along the client mesh
-                        axes + a weighted sum. d single-hop neighbor exchanges,
-                        no gather, overlappable with compute.
+                        for the ppermute paths).
+3. ``ppermute_mix``   — per-leaf shard_map path: one ``jax.lax.ppermute`` per
+                        (schedule x pytree leaf) along the client mesh axes +
+                        an unfused weighted sum. d single-hop exchanges per
+                        leaf, no gather. Kept as the packed path's baseline.
+4. ``ppermute_mix_packed`` — the production path: the parameter pytree is
+                        packed into one lane-aligned ``(rows, 128)`` flat
+                        buffer per dtype (:mod:`repro.core.packing`), so a
+                        round is **d ppermutes total** (one per schedule,
+                        independent of leaf count — fewer, larger,
+                        overlappable collectives) and the weighted reduction
+                        of self + d received buffers is **one HBM pass**
+                        through the fused ``gossip_mix_2d`` Pallas kernel.
+5. ``ppermute_mix_packed_quantized`` — packed + int8 payloads: the packed
+                        buffer quantizes through the Pallas ``quantize_2d``
+                        kernel (4x/2x fewer ICI bytes) and each received
+                        buffer folds in via the fused ``dequant_accumulate_2d``
+                        kernel. (``ppermute_mix_quantized`` is the per-leaf
+                        jnp-level equivalent.)
 
 A :class:`GossipSpec` is the static, hashable description baked into the
 jitted step.
@@ -27,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
 from repro.core.topology import Overlay
 
 __all__ = [
@@ -37,6 +52,8 @@ __all__ = [
     "mix_schedules",
     "ppermute_mix",
     "ppermute_mix_quantized",
+    "ppermute_mix_packed",
+    "ppermute_mix_packed_quantized",
 ]
 
 PyTree = Any
@@ -57,6 +74,10 @@ class GossipSpec:
       self_weights: per-client diagonal weight (w0 + edge_weight * #fixed).
       edge_weight: the uniform Chow edge weight c.
       lam: lambda(M) of the mixing matrix (for reports).
+      live_masks: per schedule, tuple of 0/1 per client: 1 iff the client
+        receives from a *different* client under that schedule (i.e. it is not
+        a fixed point). Derived host-side from recv_from so the stacked-gather
+        executor never recomputes ``idx != arange(n)`` per (leaf x schedule).
     """
 
     n_clients: int
@@ -65,6 +86,14 @@ class GossipSpec:
     self_weights: tuple[float, ...]
     edge_weight: float
     lam: float
+    live_masks: tuple[tuple[int, ...], ...] | None = None
+
+    def __post_init__(self):
+        if self.live_masks is None:
+            masks = tuple(
+                tuple(int(src != i) for i, src in enumerate(rf))
+                for rf in self.recv_from)
+            object.__setattr__(self, "live_masks", masks)
 
     @property
     def degree(self) -> int:
@@ -136,20 +165,27 @@ def mix_schedules(tree: PyTree, spec: GossipSpec) -> PyTree:
     serves as its oracle).
     """
     self_w = jnp.asarray(spec.self_weights)
-    n = spec.n_clients
+    # per-schedule gather indices and live masks, built once (host-side spec
+    # data), shared across every leaf instead of recomputed per (leaf x sched)
+    gathers = [(jnp.asarray(rf), jnp.asarray(mask, jnp.float32))
+               for rf, mask in zip(spec.recv_from, spec.live_masks)]
 
     def _mix(x):
         w = self_w.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
         out = w * x
-        for rf in spec.recv_from:
-            idx = jnp.asarray(rf)
-            live = (idx != jnp.arange(n)).astype(x.dtype)
-            live = live.reshape((-1,) + (1,) * (x.ndim - 1))
+        for idx, mask in gathers:
+            live = mask.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
             out = out + jnp.asarray(spec.edge_weight, dtype=x.dtype) * live * jnp.take(
                 x, idx, axis=0)
         return out
 
     return jax.tree.map(_mix, tree)
+
+
+def _axis_size(name: str) -> jax.Array | int:
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)  # pre-0.4.38 spelling; folds to a constant
 
 
 def _client_index(axis_names: str | tuple[str, ...]) -> jax.Array:
@@ -158,7 +194,7 @@ def _client_index(axis_names: str | tuple[str, ...]) -> jax.Array:
         return jax.lax.axis_index(axis_names)
     idx = jax.lax.axis_index(axis_names[0])
     for name in axis_names[1:]:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -218,3 +254,83 @@ def ppermute_mix_quantized(tree: PyTree, spec: GossipSpec,
         return out
 
     return jax.tree.map(_mix, tree)
+
+
+# ------------------------------------------------------- packed executors
+def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
+                        axis_names: str | tuple[str, ...], *,
+                        pack_spec: packing.PackSpec | None = None,
+                        mix_impl: str = "auto") -> PyTree:
+    """Packed production gossip: d collectives/round, one fused HBM reduction.
+
+    The client-local pytree packs into one lane-aligned flat buffer per dtype
+    (:mod:`repro.core.packing`); each schedule then permutes the *whole*
+    buffer in a single ``lax.ppermute`` — d collectives per round regardless
+    of leaf count, vs d x n_leaves for :func:`ppermute_mix`. Self + the d
+    received buffers stack to ``(d+1, rows, 128)`` and reduce in **one** HBM
+    pass through the fused ``gossip_mix_2d`` Pallas kernel (interpret/ref off
+    TPU). Fixed-point schedules deliver zeros (ppermute semantics), which the
+    kernel's weighted sum absorbs — same arithmetic as the per-leaf path.
+
+    Pass ``pack_spec`` (built host-side from shape structs) to bake the
+    layout into the jitted step; it is derived from ``tree`` otherwise.
+    """
+    from repro.kernels.gossip_mix import ops as mix_ops
+
+    if pack_spec is None:
+        pack_spec = packing.make_pack_spec(tree)
+    idx = _client_index(axis_names)
+    self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
+    perms = [list(pairs) for pairs in spec.perms if len(pairs) > 0]
+
+    out_bufs = []
+    for buf in packing.pack_tree(tree, pack_spec):
+        # all ppermutes issued before the reduction so XLA can overlap them
+        received = [jax.lax.ppermute(buf, axis_names, perm=p) for p in perms]
+        stack = jnp.stack([buf] + received)
+        weights = jnp.concatenate([
+            self_w[None],
+            jnp.full((len(received),), spec.edge_weight, jnp.float32)])
+        out_bufs.append(mix_ops.gossip_mix_packed(
+            stack, weights, block_rows=pack_spec.block_rows, impl=mix_impl))
+    return packing.unpack_tree(tuple(out_bufs), pack_spec)
+
+
+def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
+                                  axis_names: str | tuple[str, ...], *,
+                                  pack_spec: packing.PackSpec | None = None,
+                                  impl: str = "auto") -> PyTree:
+    """Packed gossip with int8 wire payloads (4x/2x fewer ICI bytes).
+
+    The packed buffer quantizes once through the Pallas ``quantize_2d`` kernel
+    (per-buffer symmetric scale); each schedule permutes the int8 buffer + its
+    f32 scale, and every received payload folds into the accumulator through
+    the fused ``dequant_accumulate_2d`` kernel (dequant + scale + add in one
+    HBM pass per neighbor). The local term stays full precision, so the int8
+    error only enters through the (small) edge weights. Note the scale is
+    per-buffer rather than per-leaf, so the error bound is governed by the
+    buffer-wide amax; and each schedule ships *two* collectives (int8 buffer
+    + its 4-byte f32 scale), i.e. 2d per round — still leaf-count-independent,
+    but folding the scale into the shipped buffer is an open follow-up.
+    """
+    from repro.kernels.quant_gossip import ops as qops
+
+    if pack_spec is None:
+        pack_spec = packing.make_pack_spec(tree)
+    idx = _client_index(axis_names)
+    self_w = jnp.asarray(spec.self_weights)[idx]
+    perms = [list(pairs) for pairs in spec.perms if len(pairs) > 0]
+    c = float(spec.edge_weight)
+
+    out_bufs = []
+    for buf in packing.pack_tree(tree, pack_spec):
+        q, scale = qops.quantize_packed(buf, block_rows=pack_spec.block_rows,
+                                        impl=impl)
+        acc = self_w.astype(buf.dtype) * buf
+        for p in perms:
+            rq = jax.lax.ppermute(q, axis_names, perm=p)
+            rs = jax.lax.ppermute(scale, axis_names, perm=p)
+            acc = qops.dequant_accumulate_packed(
+                rq, rs, c, acc, block_rows=pack_spec.block_rows, impl=impl)
+        out_bufs.append(acc)
+    return packing.unpack_tree(tuple(out_bufs), pack_spec)

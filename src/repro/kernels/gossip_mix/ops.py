@@ -45,3 +45,21 @@ def gossip_mix(stack: jax.Array, weights: jax.Array, *,
                            block_rows=block_rows,
                            interpret=(impl == "pallas_interpret"))
     return out.reshape(-1)[:t].reshape(payload_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def gossip_mix_packed(stack: jax.Array, weights: jax.Array, *,
+                      block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                      impl: str = "auto") -> jax.Array:
+    """Fast path for pre-packed payloads: stack is (K, rows, LANE) with
+    rows % block_rows == 0 (a PackSpec buffer stacked over self + received),
+    so the Pallas kernel runs with zero flatten/pad work in the step.
+    """
+    k, rows, lane = stack.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (stack.shape, block_rows)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.gossip_mix(stack, weights)
+    return _k.gossip_mix_2d(stack, weights, block_rows=block_rows,
+                            interpret=(impl == "pallas_interpret"))

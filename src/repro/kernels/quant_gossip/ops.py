@@ -64,3 +64,42 @@ def dequant_accumulate(q: jax.Array, scale: jax.Array, c, acc: jax.Array,
     out = _k.dequant_accumulate_2d(prep(q), sc, prep(acc),
                                    interpret=(impl == "pallas_interpret"))
     return out.reshape(-1)[:t].reshape(shape)
+
+
+# ------------------------------------------------- packed (rows, LANE) fast path
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def quantize_packed(buf: jax.Array, *, block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                    impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """quantize_int8 for a pre-packed (rows, LANE) buffer (PackSpec layout):
+    rows is already a tile multiple, so the kernel runs with no reshape/pad."""
+    rows, lane = buf.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (buf.shape, block_rows)
+    amax = jnp.max(jnp.abs(buf.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.quantize(buf, scale), scale
+    q = _k.quantize_2d(buf, scale, block_rows=block_rows,
+                       interpret=(impl == "pallas_interpret"))
+    return q, scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def dequant_accumulate_packed(q: jax.Array, scale: jax.Array, c,
+                              acc: jax.Array, *,
+                              block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                              impl: str = "auto") -> jax.Array:
+    """dequant_accumulate for pre-packed (rows, LANE) buffers: acc + c*scale*q
+    fused in one HBM pass, no reshape/pad in the jitted step."""
+    rows, lane = q.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (q.shape, block_rows)
+    assert acc.shape == q.shape, (acc.shape, q.shape)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.dequant_accumulate(q, scale, jnp.asarray(c), acc)
+    sc = jnp.stack([scale.astype(jnp.float32),
+                    jnp.asarray(c, jnp.float32)]).reshape(1, 2)
+    return _k.dequant_accumulate_2d(q, sc, acc, block_rows=block_rows,
+                                    interpret=(impl == "pallas_interpret"))

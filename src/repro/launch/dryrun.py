@@ -144,7 +144,8 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--label", default="", help="config-variant tag (perf runs)")
     ap.add_argument("--gossip", default=None,
-                    choices=["dense", "ppermute", "ppermute_quant"])
+                    choices=["dense", "ppermute", "ppermute_quant",
+                             "ppermute_packed", "ppermute_packed_quant"])
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)

@@ -17,6 +17,22 @@ import numpy as np
 from jax.sharding import Mesh
 
 
+def shard_map(f, mesh: Mesh, *, in_specs, out_specs):
+    """Version-compat *full-manual* shard_map.
+
+    Newer jax exposes ``jax.shard_map``; this jax build only has the
+    experimental API (and its SPMD partitioner hard-crashes on partial-auto
+    manual regions — ``IsManualSubgroup`` check — so every shard_map in this
+    repo is fully manual over all mesh axes, with real per-leaf specs).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -3,11 +3,17 @@
 This is where the paper's technique meets the device grid:
 
 * **train round** = vmap over the client axis of (K local momentum steps)
-  followed by the *gossip island*: a partial-manual `jax.shard_map` over the
-  client mesh axes that issues one `lax.ppermute` per overlay schedule
-  (`gossip_impl="ppermute"`), or the paper-naive dense mixing einsum
-  (`gossip_impl="dense"`, the §Perf baseline), or int8-quantized ppermutes
-  (`"ppermute_quant"`, beyond-paper).
+  followed by the *gossip island*: a **fully-manual** `shard_map` over all
+  mesh axes (in/out specs = the real parameter partition specs — mixing is
+  elementwise, so mixing corresponding local shards is exact and each
+  ppermute ships only shard-sized payloads). Executors, by `gossip_impl`:
+  `"ppermute_packed"` (default) packs the local shard pytree into one
+  lane-aligned flat buffer per dtype and issues **d ppermutes per round
+  total** (one per schedule, independent of leaf count) + one fused Pallas
+  reduction pass; `"ppermute_packed_quant"` additionally ships int8 payloads
+  through the Pallas quantize / dequant-accumulate kernels; `"ppermute"` /
+  `"ppermute_quant"` are the per-leaf baselines (d x n_leaves collectives);
+  `"dense"` is the paper-naive dense mixing einsum (the §Perf baseline).
 * **serve steps** (prefill / decode) run on the raw production mesh with
   TP ("model") x batch-DP ("data"/"pod") and sequence-sharded KV caches.
 
@@ -26,7 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DFLConfig, ModelConfig, ParallelConfig, ShapeConfig
-from repro.core import dfedavg, gossip as gossip_lib, topology
+from repro.core import dfedavg, gossip as gossip_lib, packing as packing_lib, topology
 from repro.launch import mesh as mesh_lib
 from repro.models import params as params_lib
 from repro.models.api import ModelAPI
@@ -37,6 +43,21 @@ PyTree = Any
 
 
 # ---------------------------------------------------------------- helpers
+def local_shard_structs(struct: PyTree, pspecs: PyTree, mesh: Mesh) -> PyTree:
+    """Per-device shard shapes inside the fully-manual gossip island, with the
+    (fully-sharded, local size 1) leading client dim stripped. This is what a
+    PackSpec for the packed gossip executors must be built from."""
+
+    def one(leaf: Leaf, spec) -> jax.ShapeDtypeStruct:
+        parts = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        dims = tuple(size // params_lib._mesh_axis_size(mesh, axis)
+                     for size, axis in zip(leaf.shape[1:], parts[1:]))
+        return jax.ShapeDtypeStruct(dims, jnp.dtype(leaf.dtype))
+
+    return jax.tree.map(one, struct, pspecs,
+                        is_leaf=lambda x: isinstance(x, Leaf))
+
+
 def add_client_axis(struct: PyTree, n: int) -> PyTree:
     return jax.tree.map(
         lambda l: Leaf((n,) + l.shape, ("clients",) + l.axes, l.dtype, l.init,
@@ -166,26 +187,39 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                                           update_fn=update_fn)
         return p, loss
 
-    # ---- gossip island
+    # ---- gossip island (fully-manual shard_map over the real param specs:
+    # mixing is elementwise, so each device mixes its local shard in place —
+    # no resharding, and every ppermute ships only shard-sized payloads)
+    pack_spec = None
+    if par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant"):
+        pack_spec = packing_lib.make_pack_spec(
+            local_shard_structs(struct, pspecs, dmesh))
+
     def gossip_fn(params):
         if gspec is None or overlay is None:
             return params
         if par.gossip_impl == "dense":
             return gossip_lib.mix_dense(params, mix_mat)
 
-        mixer = (gossip_lib.ppermute_mix_quantized
-                 if par.gossip_impl == "ppermute_quant"
-                 else gossip_lib.ppermute_mix)
+        if par.gossip_impl == "ppermute_packed":
+            mixer = functools.partial(gossip_lib.ppermute_mix_packed,
+                                      pack_spec=pack_spec)
+        elif par.gossip_impl == "ppermute_packed_quant":
+            mixer = functools.partial(gossip_lib.ppermute_mix_packed_quantized,
+                                      pack_spec=pack_spec)
+        elif par.gossip_impl == "ppermute_quant":
+            mixer = gossip_lib.ppermute_mix_quantized
+        else:
+            mixer = gossip_lib.ppermute_mix
         axis = caxes if len(caxes) > 1 else caxes[0]
 
         def body(p):
-            local = jax.tree.map(lambda x: x[0], p)       # client-local view
+            local = jax.tree.map(lambda x: x[0], p)       # client-local shard
             mixed = mixer(local, gspec, axis)
             return jax.tree.map(lambda x: x[None], mixed)
 
-        specs = jax.tree.map(lambda _: P(client_spec), params)
-        return jax.shard_map(body, mesh=dmesh, in_specs=(specs,),
-                             out_specs=specs, axis_names=set(caxes))(params)
+        return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs,),
+                                  out_specs=pspecs)(params)
 
     # activation constraints visible inside the vmapped client round
     act_rules = {}

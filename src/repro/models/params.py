@@ -53,7 +53,8 @@ def _fan_in_scale(leaf: Leaf) -> float:
 
 def init_params(struct: PyTree, rng: jax.Array) -> PyTree:
     """Materialize arrays; rng folded per-leaf by path hash (deterministic)."""
-    paths = jax.tree.leaves_with_path(struct, is_leaf=_is_leaf)
+    # jax.tree_util spelling: jax.tree.leaves_with_path is absent in this jax
+    paths = jax.tree_util.tree_leaves_with_path(struct, is_leaf=_is_leaf)
 
     leaves = []
     for path, leaf in paths:

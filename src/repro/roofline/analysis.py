@@ -135,7 +135,16 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
+def cost_dict(cost) -> dict:
+    """Normalize `compiled.cost_analysis()` across jax versions: some return
+    the properties dict directly, others a one-element list of it."""
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
 def cost_bytes(cost: dict) -> float:
+    cost = cost_dict(cost)
     if "bytes accessed" in cost:
         return float(cost["bytes accessed"])
     return float(sum(v for k, v in cost.items() if k.startswith("bytes accessed")))
@@ -146,6 +155,8 @@ def roofline(cost: dict, hlo_text: str, world: int) -> Roofline:
     (`hlo_cost`) because `cost_analysis()` counts while bodies once; the raw
     cost_analysis numbers are kept as a cross-check."""
     from repro.roofline import hlo_cost
+
+    cost = cost_dict(cost)
 
     hc = hlo_cost.analyze_hlo(hlo_text, world)
     flops = hc.flops
@@ -160,7 +171,8 @@ def roofline(cost: dict, hlo_text: str, world: int) -> Roofline:
         compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
         dominant=dominant, collectives=hc.collective_bytes,
         collective_counts=hc.collective_counts,
-        xla_flops=float(cost.get("flops", 0.0)), xla_bytes=cost_bytes(cost),
+        xla_flops=float(cost.get("flops", 0.0)),
+        xla_bytes=cost_bytes(cost),
         while_trips=hc.while_trip_counts)
 
 

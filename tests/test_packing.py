@@ -1,0 +1,282 @@
+"""Packed-gossip subsystem tests: PackSpec round-trips, packed executor parity
+vs the dense oracle under shard_map, and the d-collectives-per-round claim
+checked in lowered HLO."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gossip, packing, topology
+
+try:  # optional dep (requirements-dev.txt): property tests degrade, not error
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _odd_tree(seed=0):
+    """Multi-leaf, odd-shaped, nested — nothing lane-aligned."""
+    r = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(r.standard_normal((6, 5)), jnp.float32),
+        "b": jnp.asarray(r.standard_normal((11,)), jnp.float32),
+        "nested": {"k": jnp.asarray(r.standard_normal((3, 129)), jnp.float32),
+                   "scalar": jnp.asarray(float(r.standard_normal()), jnp.float32)},
+    }
+
+
+class TestPackRoundTrip:
+    def test_round_trip_exact(self):
+        tree = _odd_tree()
+        spec = packing.make_pack_spec(tree)
+        back = packing.unpack_tree(packing.pack_tree(tree, spec), spec)
+        assert jax.tree.structure(back) == jax.tree.structure(tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_buffers_lane_aligned_and_tiled(self):
+        spec = packing.make_pack_spec(_odd_tree())
+        for b in range(spec.n_buffers):
+            rows, lane = spec.buffer_shape(b)
+            assert lane == packing.LANE
+            assert rows % spec.block_rows == 0
+        assert spec.payload_elements == sum(
+            x.size for x in jax.tree.leaves(_odd_tree()))
+        assert spec.padded_elements >= spec.payload_elements
+
+    def test_one_buffer_per_dtype(self):
+        tree = {"a": jnp.ones((7, 3), jnp.float32),
+                "b": jnp.ones((5,), jnp.bfloat16),
+                "c": jnp.ones((2, 2), jnp.float32)}
+        spec = packing.make_pack_spec(tree)
+        assert sorted(spec.buffer_dtypes) == ["bfloat16", "float32"]
+        bufs = packing.pack_tree(tree, spec)
+        assert [str(x.dtype) for x in bufs] == list(spec.buffer_dtypes)
+        back = packing.unpack_tree(bufs, spec)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_spec_static_hashable_and_jittable(self):
+        tree = _odd_tree()
+        spec = packing.make_pack_spec(tree)
+        assert hash(spec) == hash(packing.make_pack_spec(tree))
+        # spec closes over a jitted fn (what the train step does)
+        fn = jax.jit(lambda t: packing.unpack_tree(
+            packing.pack_tree(t, spec), spec))
+        back = fn(tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_spec_from_shape_structs_works_on_arrays(self):
+        tree = _odd_tree()
+        structs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        spec = packing.make_pack_spec(structs)
+        back = packing.unpack_tree(packing.pack_tree(tree, spec), spec)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mismatched_tree_rejected(self):
+        spec = packing.make_pack_spec(_odd_tree())
+        bad = {"only": jnp.ones((4,), jnp.float32)}
+        with pytest.raises(ValueError):
+            packing.pack_tree(bad, spec)
+
+
+def _check_round_trip(shapes, seed):
+    r = np.random.default_rng(seed)
+    tree = {f"l{i}": jnp.asarray(r.standard_normal(s), jnp.float32)
+            for i, s in enumerate(shapes)}
+    spec = packing.make_pack_spec(tree)
+    back = packing.unpack_tree(packing.pack_tree(tree, spec), spec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(shapes=st.lists(
+        st.lists(st.integers(1, 17), min_size=0, max_size=3).map(tuple),
+        min_size=1, max_size=6), seed=st.integers(0, 100))
+    def test_pack_round_trip_property(shapes, seed):
+        _check_round_trip(shapes, seed)
+else:
+    @pytest.mark.parametrize("shapes,seed", [
+        ([(3, 5), (7,), ()], 0),
+        ([(1,), (17, 17, 2), (128,), (129,)], 1),
+        ([(8, 16)], 2),
+        ([(2, 3, 4), (5,), (6, 1), (1, 1, 1)], 3),
+    ])
+    def test_pack_round_trip_property(shapes, seed):
+        _check_round_trip(shapes, seed)
+
+
+class TestPackedGossipParity:
+    """Packed ppermute executors == mix_dense oracle, on fake-device meshes."""
+
+    def _run(self, code):
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, cwd=".")
+        assert "OK" in out.stdout, out.stdout + out.stderr
+
+    def test_packed_matches_dense(self):
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import gossip, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=0)
+            spec = gossip.make_gossip_spec(ov)
+            r = np.random.default_rng(0)
+            x = {"w": jnp.asarray(r.standard_normal((8, 6, 5)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((8, 11)), jnp.float32),
+                 "n": {"k": jnp.asarray(r.standard_normal((8, 3, 129)),
+                                        jnp.float32)}}
+            ref = gossip.mix_dense(x, ov.mixing_matrix())
+
+            def body(t):
+                local = jax.tree.map(lambda a: a[0], t)
+                out = gossip.ppermute_mix_packed(local, spec, "client")
+                return jax.tree.map(lambda a: a[None], out)
+
+            specs = jax.tree.map(lambda _: P("client"), x)
+            fn = shard_map(body, mesh, in_specs=(specs,), out_specs=specs)
+            got = jax.jit(fn)(jax.device_put(
+                x, jax.tree.map(lambda _: NamedSharding(mesh, P("client")), x)))
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-5, atol=2e-5)
+            print("PACKED_PARITY_OK")
+        """)
+
+    def test_packed_quantized_within_int8_tolerance(self):
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import gossip, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=1)
+            spec = gossip.make_gossip_spec(ov)
+            r = np.random.default_rng(3)
+            x = {"w": jnp.asarray(r.standard_normal((8, 6, 5)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((8, 11)), jnp.float32)}
+            ref = gossip.mix_dense(x, ov.mixing_matrix())
+
+            def body(t):
+                local = jax.tree.map(lambda a: a[0], t)
+                out = gossip.ppermute_mix_packed_quantized(local, spec, "client")
+                return jax.tree.map(lambda a: a[None], out)
+
+            specs = jax.tree.map(lambda _: P("client"), x)
+            fn = shard_map(body, mesh, in_specs=(specs,), out_specs=specs)
+            got = jax.jit(fn)(jax.device_put(
+                x, jax.tree.map(lambda _: NamedSharding(mesh, P("client")), x)))
+            # int8 error enters via d received payloads, each scaled by the
+            # edge weight; scale is per-buffer (buffer-wide amax / 127)
+            amax = max(float(jnp.max(jnp.abs(v)))
+                       for v in jax.tree.leaves(x))
+            bound = 2 * spec.degree * spec.edge_weight * amax / 127.0 + 1e-6
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+                err = float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                assert err <= bound, (err, bound)
+            print("PACKED_QUANT_OK")
+        """)
+
+    def test_packed_matches_per_leaf_on_sharded_leaves(self):
+        """Full-manual island semantics: mixing local shards == mixing the
+        full tree, with leaves additionally sharded over a second axis."""
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import gossip, packing, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((4, 2), ("client", "fsdp"))
+            ov = topology.expander_overlay(4, 2, seed=0)
+            spec = gossip.make_gossip_spec(ov)
+            r = np.random.default_rng(0)
+            x = {"w": jnp.asarray(r.standard_normal((4, 16, 6)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((4, 11)), jnp.float32)}
+            ref = gossip.mix_dense(x, ov.mixing_matrix())
+            pspecs = {"w": P("client", "fsdp", None), "b": P("client", None)}
+            locals_ = {"w": jax.ShapeDtypeStruct((8, 6), jnp.float32),
+                       "b": jax.ShapeDtypeStruct((11,), jnp.float32)}
+            pack_spec = packing.make_pack_spec(locals_)
+
+            def body(t):
+                local = jax.tree.map(lambda a: a[0], t)
+                out = gossip.ppermute_mix_packed(local, spec, "client",
+                                                 pack_spec=pack_spec)
+                return jax.tree.map(lambda a: a[None], out)
+
+            fn = shard_map(body, mesh, in_specs=(pspecs,), out_specs=pspecs)
+            got = jax.jit(fn)(jax.device_put(
+                x, {k: NamedSharding(mesh, s) for k, s in pspecs.items()}))
+            for k in x:
+                np.testing.assert_allclose(np.asarray(got[k]),
+                                           np.asarray(ref[k]),
+                                           rtol=2e-5, atol=2e-5)
+            print("SHARDED_PARITY_OK")
+        """)
+
+
+class TestPackedCollectiveCount:
+    @pytest.mark.slow
+    def test_packed_train_step_issues_d_permutes(self):
+        """The tentpole claim, in lowered HLO: the packed train step issues
+        exactly d collective-permutes per gossip round, independent of the
+        number of parameter leaves; the per-leaf path issues d x n_leaves."""
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+            import sys; sys.path.insert(0, "src")
+            import jax
+            from repro.configs import registry
+            from repro.configs.base import ShapeConfig, ParallelConfig, DFLConfig
+            from repro.launch import steps
+            from repro.models import params as P
+
+            mesh = jax.make_mesh((4, 4), ("data", "model"))
+            cfg = registry.reduced("qwen2.5-3b")  # single-dtype param tree
+            shape = ShapeConfig("t", 64, 8, "train")
+            counts = {}
+            for gi in ("ppermute_packed", "ppermute"):
+                par = ParallelConfig(clients_per_pod=4, local_steps=2,
+                                     grad_accum=2, gossip_impl=gi)
+                setup = steps.build_train_step(cfg, shape, mesh, par,
+                                               DFLConfig(degree=2))
+                lowered = setup.step_fn.lower(
+                    P.shape_structs(setup.param_struct),
+                    setup.input_specs["batch"], setup.input_specs["lr"])
+                counts[gi] = lowered.as_text().count("collective_permute")
+            n_leaves = len(jax.tree.leaves(
+                P.shape_structs(setup.param_struct)))
+            d = setup.gossip_spec.degree
+            assert counts["ppermute_packed"] == d, counts
+            assert counts["ppermute"] == d * n_leaves, (counts, n_leaves)
+            print("PERMUTE_COUNT_OK", counts, "d=", d, "leaves=", n_leaves)
+        """)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, cwd=".")
+        assert "PERMUTE_COUNT_OK" in out.stdout, out.stdout + out.stderr

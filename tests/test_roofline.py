@@ -27,7 +27,7 @@ class TestHloCost:
         w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         compiled = jax.jit(f).lower(x, w).compile()
         ours = analyze_hlo(compiled.as_text(), 1).flops
-        xla = compiled.cost_analysis().get("flops", 0.0)
+        xla = analysis.cost_dict(compiled.cost_analysis()).get("flops", 0.0)
         assert ours == 10 * 2 * 64 * 64 * 64
         assert xla < ours / 5  # documents the undercount
 
@@ -56,7 +56,7 @@ class TestHloCost:
                  for s in [(32, 64), (64, 128), (128, 16)]]
         compiled = jax.jit(f).lower(*specs).compile()
         ours = analyze_hlo(compiled.as_text(), 1).flops
-        xla = compiled.cost_analysis().get("flops", 0.0)
+        xla = analysis.cost_dict(compiled.cost_analysis()).get("flops", 0.0)
         # dot flops dominate; ours counts only dots, so ours <= xla <= ours+eps
         dots = 2 * 32 * 64 * 128 + 2 * 32 * 128 * 16
         assert ours == dots
@@ -94,7 +94,8 @@ class TestCollectiveParsing:
             mesh = jax.make_mesh((4,), ("x",))
             def f(a):
                 return jax.lax.ppermute(a, "x", [(i, (i+1) % 4) for i in range(4)])
-            fn = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+            from repro.launch.mesh import shard_map
+            fn = shard_map(f, mesh, in_specs=P("x"), out_specs=P("x"))
             t = jax.jit(fn).lower(
                 jax.ShapeDtypeStruct((4, 1024), jnp.float32)).compile().as_text()
             c = analyze_hlo(t, 4)

@@ -3,7 +3,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # optional dep (requirements-dev.txt): property tests degrade, not error
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import mixing, spectral, topology
 
@@ -85,9 +89,7 @@ class TestMixingMatrices:
         assert lam_emp == pytest.approx(lam_formula, abs=1e-9)
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(8, 48), d=st.integers(2, 6), seed=st.integers(0, 10_000))
-def test_expander_overlay_properties(n, d, seed):
+def _check_expander_overlay_properties(n, d, seed):
     """Property: any (n, d, seed) draw yields a valid overlay whose Chow mixing
     matrix satisfies Definition 2.1 and whose schedule decomposition matches."""
     if d % 2 == 1 and n % 2 == 1:
@@ -107,8 +109,27 @@ def test_expander_overlay_properties(n, d, seed):
     assert 0.0 < w.lam < 1.0
 
 
-@settings(max_examples=20, deadline=None)
-@given(lam=st.floats(0.01, 0.99))
-def test_mixing_time_consistent(lam):
+def _check_mixing_time_consistent(lam):
     t = spectral.mixing_time(lam, eps=1e-3)
     assert lam ** t <= 1e-3 * (1 + 1e-9)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(8, 48), d=st.integers(2, 6), seed=st.integers(0, 10_000))
+    def test_expander_overlay_properties(n, d, seed):
+        _check_expander_overlay_properties(n, d, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(lam=st.floats(0.01, 0.99))
+    def test_mixing_time_consistent(lam):
+        _check_mixing_time_consistent(lam)
+else:
+    @pytest.mark.parametrize("n,d,seed", [(8, 2, 0), (17, 3, 42), (48, 6, 999),
+                                          (32, 4, 7), (11, 5, 123)])
+    def test_expander_overlay_properties(n, d, seed):
+        _check_expander_overlay_properties(n, d, seed)
+
+    @pytest.mark.parametrize("lam", [0.01, 0.37, 0.5, 0.93, 0.99])
+    def test_mixing_time_consistent(lam):
+        _check_mixing_time_consistent(lam)
