@@ -1,0 +1,132 @@
+"""Elastic-runtime benchmark: churn throughput + recompile accounting.
+
+Drives `ElasticTrainer` (the packed gossip path) through a scripted
+`FailurePlan` — healthy rounds, rotating transient stragglers, a permanent
+death with splice repair — and reports:
+
+  * rounds/sec per phase (healthy vs straggler-churn vs post-repair);
+  * the jit trace count (`n_traces`): straggler churn must add ZERO traces
+    (the alive mask is a step argument); each membership change adds exactly
+    one.
+
+Output: the usual ``name,us_per_call,derived`` CSV rows, plus one JSON
+record written to ``<out>/elastic.json`` (default ``experiments/bench/``;
+re-runs overwrite it, dryrun-cache style) with the bench JSON schema::
+
+    {"bench": "elastic", "n_clients", "degree", "dim", "rounds",
+     "phases": {name: {"rounds", "seconds", "rounds_per_sec"}},
+     "n_traces", "expected_traces", "repairs": [{"dead", "n_after"}],
+     "plan": [[round, [dead ids]], ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import dfedavg, failures
+from repro.core.topology import expander_overlay
+from repro.launch.elastic import ElasticTrainer
+
+
+def quad_loss(params, batch):
+    return jnp.mean(jnp.square(params["w"] - batch["target"])), {}
+
+
+def _batches(targets, k):
+    return {"target": jnp.broadcast_to(
+        targets[:, None], (targets.shape[0], k, targets.shape[1]))}
+
+
+def run(n_clients: int = 16, degree: int = 4, dim: int = 4096,
+        rounds_per_phase: int = 8, seed: int = 0) -> dict:
+    r = np.random.default_rng(seed)
+    trainer = ElasticTrainer(
+        overlay=expander_overlay(n_clients, degree, seed=seed),
+        loss_fn=quad_loss,
+        dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.1, momentum=0.9),
+        straggler_rounds=1, failure_rounds=3)
+    params = {"w": jnp.asarray(r.standard_normal((n_clients, dim)),
+                               jnp.float32)}
+    # the scripted plan: one client starts missing heartbeats at the start
+    # of phase 3 and is declared dead after `failure_rounds` misses
+    death_round = 2 * rounds_per_phase
+    plan = failures.FailurePlan(n_clients=n_clients,
+                                events=((death_round, (n_clients // 2,)),))
+    orig2cur = np.arange(n_clients)  # original id -> current index (-1 dead)
+
+    def heartbeats(rnd: int, straggler: int | None) -> np.ndarray:
+        mask = np.ones(trainer.n_clients, dtype=np.float32)
+        for orig in plan.dead_at(rnd):
+            if orig2cur[orig] >= 0:
+                mask[orig2cur[orig]] = 0.0
+        if straggler is not None:
+            mask[straggler % trainer.n_clients] = 0.0
+        return mask
+
+    phases = {}
+    rnd = 0
+
+    def phase(name: str, n_rounds: int, straggler_fn):
+        nonlocal rnd, params, orig2cur
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            mask = heartbeats(rnd, straggler_fn(rnd))
+            params, _, old2new = trainer.observe_heartbeats(mask, params)
+            if old2new is not None:
+                alive = orig2cur >= 0
+                orig2cur[alive] = old2new[orig2cur[alive]]
+            targets = jnp.zeros((trainer.n_clients, dim), jnp.float32)
+            params, _ = trainer.step(params, _batches(targets, 2), 0.1)
+            rnd += 1
+        jax.block_until_ready(params)
+        dt = time.perf_counter() - t0
+        phases[name] = {"rounds": n_rounds, "seconds": round(dt, 4),
+                        "rounds_per_sec": round(n_rounds / dt, 2)}
+
+    phase("healthy", rounds_per_phase, lambda r_: None)
+    phase("straggler_churn", rounds_per_phase, lambda r_: r_)  # rotating
+    phase("death_and_repair", rounds_per_phase, lambda r_: None)
+
+    # one initial trace + exactly one per membership change (with very short
+    # phases the scripted death may not complete — repairs is the truth)
+    expected = 1 + len(trainer.repairs)
+    rec = {
+        "bench": "elastic", "n_clients": n_clients, "degree": degree,
+        "dim": dim, "rounds": rnd, "phases": phases,
+        "n_traces": trainer.n_traces, "expected_traces": expected,
+        "repairs": trainer.repairs,
+        "plan": [[int(e[0]), [int(i) for i in e[1]]] for e in plan.events],
+    }
+    assert trainer.n_traces == expected, (trainer.n_traces, expected)
+    return rec
+
+
+def main(rounds: int = 8, out_dir: str | None = "experiments/bench") -> None:
+    rec = run(rounds_per_phase=rounds)
+    for name, ph in rec["phases"].items():
+        emit(f"elastic/{name}/n{rec['n_clients']}-d{rec['degree']}",
+             ph["seconds"] * 1e6 / ph["rounds"],
+             f"rounds_per_sec={ph['rounds_per_sec']};"
+             f"n_traces={rec['n_traces']}")
+    emit(f"elastic/traces/n{rec['n_clients']}-d{rec['degree']}", 0.0,
+         f"n_traces={rec['n_traces']};expected={rec['expected_traces']};"
+         f"repairs={len(rec['repairs'])}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "elastic.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    main(rounds=args.rounds, out_dir=args.out)

@@ -10,6 +10,8 @@ Mapping to the paper:
   bench_failures  -> Figs. 7 & 8 (10%/20% client failures)
   bench_comm      -> communication-cost panels (+ compiled gossip bytes)
   bench_kernels   -> Pallas kernel traffic models (TPU target)
+  bench_elastic   -> elastic runtime churn throughput + recompile count
+                     (also writes a JSON record to experiments/bench/)
 """
 from __future__ import annotations
 
@@ -26,8 +28,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_comm, bench_failures, bench_kernels,
-                            bench_lm, bench_mnist, bench_spectral)
+    from benchmarks import (bench_comm, bench_elastic, bench_failures,
+                            bench_kernels, bench_lm, bench_mnist,
+                            bench_spectral)
 
     rounds = 6 if args.fast else 10
     suite = [
@@ -37,6 +40,7 @@ def main() -> None:
         ("mnist", lambda: bench_mnist.main(rounds=rounds)),
         ("lm", lambda: bench_lm.main(rounds=rounds + 4)),
         ("failures", lambda: bench_failures.main(rounds=rounds)),
+        ("elastic", lambda: bench_elastic.main(rounds=rounds)),
     ]
     print("name,us_per_call,derived")
     failed = []

@@ -48,10 +48,11 @@ for rnd in range(8):
     if rnd == 4:
         alive[5] = 0  # second miss -> declared dead
     n_before = trainer.n_clients
-    params, _ = trainer.observe_heartbeats(alive, params)
+    params, _, old2new = trainer.observe_heartbeats(alive, params)
     if trainer.n_clients != n_before:
         note = (f"client declared DEAD -> two-hop splice repair; "
-                f"{n_before} -> {trainer.n_clients} clients, re-jitted")
+                f"{n_before} -> {trainer.n_clients} clients, re-jitted; "
+                f"old2new={old2new.tolist()}")
         cur_targets = jnp.concatenate([cur_targets[:5], cur_targets[6:]])
     params, losses = trainer.step(params, batches(cur_targets), 0.3)
     trainer.checkpoint(rnd, params)

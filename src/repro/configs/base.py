@@ -203,3 +203,9 @@ class DFLConfig:
     seed: int = 0
     lr: float = 0.01
     momentum: float = 0.9
+    # elastic runtime (launch/elastic.py): heartbeat thresholds. A client
+    # missing `straggler_rounds` heartbeats is masked out of gossip for the
+    # round (alive-mask step argument — zero recompiles); one missing
+    # `failure_rounds` is declared dead (splice repair + one re-jit).
+    straggler_rounds: int = 1
+    failure_rounds: int = 3

@@ -4,11 +4,19 @@ Two layers of resilience, matching the paper's protocol:
 
 1. *Transient* (per-round) failures / stragglers: a client misses one gossip
    round. Surviving neighbors renormalize their mixing weights over the alive
-   in-neighborhood (`mix_dense_masked`, or `alive_adjusted_spec` for the
-   schedule path). No topology change.
+   in-neighborhood. The production path for this is the **packed gossip
+   engine**: the alive mask is a *traced step argument* consumed by the
+   packed executors / fused kernels (`gossip.ppermute_mix_packed(alive=...)`,
+   `gossip.mix_packed_stacked`), so straggler churn never re-jits — liveness
+   is data, not trace structure. (`alive_adjusted_spec`, which bakes the mask
+   into a fresh GossipSpec and therefore costs one retrace per straggler-set
+   change, is kept only as a host-side reference for the deprecated
+   schedule-path executors; `mix_dense_masked` is the numerical oracle.)
 2. *Permanent* failures: the two-hop splice repair (`Overlay.remove_nodes`)
    rebuilds the schedules; `repair_and_remap` additionally remaps any stacked
-   client state so training resumes with the survivors.
+   client state so training resumes with the survivors, and returns the
+   survivor index map (`old2new`) so callers can remap *their* per-client
+   state (optimizer slots, data shards, health counters) consistently.
 """
 from __future__ import annotations
 
@@ -101,8 +109,18 @@ def alive_adjusted_spec(spec: gossip_lib.GossipSpec,
 
 def repair_and_remap(overlay: Overlay, dead: list[int],
                      stacked_state: PyTree | None = None
-                     ) -> tuple[Overlay, gossip_lib.GossipSpec, PyTree | None]:
-    """Permanent failure: two-hop splice + state remap for the survivors."""
+                     ) -> tuple[Overlay, gossip_lib.GossipSpec, PyTree | None,
+                                np.ndarray]:
+    """Permanent failure: two-hop splice + state remap for the survivors.
+
+    Returns ``(repaired overlay, new GossipSpec, remapped state, old2new)``
+    where ``old2new[old] = new compacted index`` for survivors and ``-1`` for
+    the dead — the *real* survivor permutation, which callers must apply to
+    any per-client state not passed in ``stacked_state`` (optimizer slots,
+    data-shard assignments, health counters, ...). ``stacked_state`` may be
+    any pytree whose leaves have the client axis leading (params alone, or
+    e.g. a ``(params, opt_state)`` tuple — everything is remapped together).
+    """
     repaired, old2new = overlay.remove_nodes(dead)
     spec = gossip_lib.make_gossip_spec(repaired)
     new_state = None
@@ -110,7 +128,7 @@ def repair_and_remap(overlay: Overlay, dead: list[int],
         alive_idx = np.asarray([i for i in range(overlay.n) if old2new[i] >= 0])
         new_state = jax.tree.map(lambda x: jnp.take(x, alive_idx, axis=0),
                                  stacked_state)
-    return repaired, spec, new_state
+    return repaired, spec, new_state, old2new
 
 
 class HealthTracker:
@@ -140,3 +158,24 @@ class HealthTracker:
 
     def dead(self) -> np.ndarray:
         return np.nonzero(self.missed >= self.failure_rounds)[0]
+
+    def alive_mask(self) -> np.ndarray:
+        """0/1 gossip mask for this round: stragglers and dead are masked."""
+        mask = np.ones(self.n, dtype=np.float32)
+        mask[self.missed >= self.straggler_rounds] = 0.0
+        return mask
+
+    def remap(self, old2new: np.ndarray) -> "HealthTracker":
+        """Tracker for the post-repair survivor indexing.
+
+        Surviving clients *carry their in-flight missed-heartbeat counters*
+        through the index compaction — a survivor that was already straggling
+        when a neighbor died must stay a straggler, not be silently reset to
+        healthy by the repair.
+        """
+        old2new = np.asarray(old2new)
+        survivors = np.nonzero(old2new >= 0)[0]
+        fresh = HealthTracker(len(survivors), self.straggler_rounds,
+                              self.failure_rounds)
+        fresh.missed[old2new[survivors]] = self.missed[survivors]
+        return fresh

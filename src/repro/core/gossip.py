@@ -31,6 +31,15 @@ Five executors, one semantics:
 
 A :class:`GossipSpec` is the static, hashable description baked into the
 jitted step.
+
+Failure awareness (paper §5.2) lives on the packed paths: the packed
+executors (and the stacked :func:`mix_packed_stacked` simulator counterpart)
+take an optional *traced* ``alive`` vector with :func:`mix_dense_masked`
+semantics — dead clients neither send nor update, survivors renormalize over
+their live in-degree. Because the mask is a step argument rather than spec
+structure, straggler churn never retraces the jitted step (see
+``alive_weight_table``); the per-leaf ppermute baselines and
+``mix_schedules`` deliberately do NOT take a mask (use the packed paths).
 """
 from __future__ import annotations
 
@@ -47,9 +56,11 @@ from repro.core.topology import Overlay
 __all__ = [
     "GossipSpec",
     "make_gossip_spec",
+    "alive_weight_table",
     "mix_dense",
     "mix_dense_masked",
     "mix_schedules",
+    "mix_packed_stacked",
     "ppermute_mix",
     "ppermute_mix_quantized",
     "ppermute_mix_packed",
@@ -156,6 +167,39 @@ def mix_dense_masked(tree: PyTree, m: jax.Array | np.ndarray,
     return mix_dense(tree, eff)
 
 
+def alive_weight_table(spec: GossipSpec, alive: jax.Array) -> jax.Array:
+    """Renormalized mixing weights under a (traced) alive mask: (n, S+1).
+
+    Column 0 is the self weight, column 1+s the weight applied to the payload
+    received under schedule s. Rows match ``mix_dense_masked`` exactly: dead
+    senders are zeroed, each surviving row renormalizes over its alive
+    in-neighborhood (incl. itself), and dead receivers get the identity row.
+    ``alive`` is data, not structure — recomputing this table every round
+    costs a few n x (S+1) vector ops and never retraces the step.
+    """
+    n = spec.n_clients
+    alive = jnp.asarray(alive, jnp.float32)
+    self_w = jnp.asarray(spec.self_weights, jnp.float32)
+    cols = [spec.edge_weight * jnp.asarray(mask, jnp.float32)
+            * jnp.take(alive, jnp.asarray(rf))
+            for rf, mask in zip(spec.recv_from, spec.live_masks)]
+    ws = (jnp.stack(cols, axis=1) if cols else jnp.zeros((n, 0), jnp.float32))
+    inv = 1.0 / jnp.maximum(self_w + ws.sum(axis=1), 1e-12)
+    w0 = alive * self_w * inv + (1.0 - alive)
+    ws = (alive * inv)[:, None] * ws
+    return jnp.concatenate([w0[:, None], ws], axis=1)
+
+
+def _static_weight_table(spec: GossipSpec) -> jax.Array:
+    """All-alive weight table (host-side constant): (n, S+1)."""
+    w0 = np.asarray(spec.self_weights, np.float32)[:, None]
+    if spec.degree == 0:
+        return jnp.asarray(w0)
+    ws = np.stack([spec.edge_weight * np.asarray(m, np.float32)
+                   for m in spec.live_masks], axis=1)
+    return jnp.asarray(np.concatenate([w0, ws], axis=1))
+
+
 def mix_schedules(tree: PyTree, spec: GossipSpec) -> PyTree:
     """Stacked-axis executor of the schedule decomposition (gather-based).
 
@@ -180,6 +224,39 @@ def mix_schedules(tree: PyTree, spec: GossipSpec) -> PyTree:
         return out
 
     return jax.tree.map(_mix, tree)
+
+
+def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
+                       alive: jax.Array | None = None, *,
+                       pack_spec: packing.PackSpec | None = None) -> PyTree:
+    """Stacked-axis packed executor — the simulator counterpart of
+    :func:`ppermute_mix_packed` and the mixing path of the elastic runtime.
+
+    The client-stacked pytree packs (vmapped) into one ``(n, rows, 128)``
+    flat buffer per dtype, each schedule becomes one gather on the stacked
+    axis, and the weighted reduction runs as a single fused contraction over
+    the ``(n, S+1, rows, 128)`` stack — the XLA analogue of the
+    ``gossip_mix_2d`` kernel pass, with none of the per-leaf flatten work of
+    :func:`mix_schedules`. With ``alive`` (a *traced* ``(n,)`` 0/1 vector)
+    the reduction uses the renormalized masked weights of
+    :func:`alive_weight_table`, so straggler-set changes are plain data and
+    never retrace the enclosing jit.
+    """
+    if pack_spec is None:
+        pack_spec = packing.make_pack_spec(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree))
+    w = (_static_weight_table(spec) if alive is None
+         else alive_weight_table(spec, alive))
+    gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+    bufs = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+    out_bufs = []
+    for buf in bufs:
+        stack = jnp.stack([buf] + [jnp.take(buf, idx, axis=0)
+                                   for idx in gathers], axis=1)
+        out = jnp.einsum("nk,nk...->n...", w, stack.astype(jnp.float32))
+        out_bufs.append(out.astype(buf.dtype))
+    return jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
+        tuple(out_bufs))
 
 
 def _axis_size(name: str) -> jax.Array | int:
@@ -257,10 +334,43 @@ def ppermute_mix_quantized(tree: PyTree, spec: GossipSpec,
 
 
 # ------------------------------------------------------- packed executors
+def _live_schedules(spec: GossipSpec):
+    """(perm pairs, recv_from, live_mask) for schedules with any exchange."""
+    return [(list(pairs), rf, mask)
+            for pairs, rf, mask in zip(spec.perms, spec.recv_from,
+                                       spec.live_masks)
+            if len(pairs) > 0]
+
+
+def _local_raw_weights(spec: GossipSpec, idx: jax.Array,
+                       n_live: int) -> jax.Array:
+    """This client's *unnormalized* Chow weights (w0, c, ..., c): (d+1,)."""
+    self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
+    return jnp.concatenate([
+        self_w[None], jnp.full((n_live,), spec.edge_weight, jnp.float32)])
+
+
+def _local_alive_vec(spec: GossipSpec, alive: jax.Array, idx: jax.Array,
+                     live) -> jax.Array:
+    """Per-contributor alive weights for the masked fused reduction: (d+1,).
+
+    Entry 0 is this client's own liveness; entry 1+k the k-th schedule's
+    sender liveness (zero at fixed points). Renormalization over the live
+    in-degree happens inside the fused kernel. The sender's liveness is a
+    *gather from the replicated alive vector* via the static recv_from table
+    — masking dead senders costs no extra collectives.
+    """
+    alive = jnp.asarray(alive, jnp.float32)
+    srcs = [alive[jnp.asarray(rf)[idx]] * jnp.asarray(mask, jnp.float32)[idx]
+            for _, rf, mask in live]
+    return jnp.stack([alive[idx]] + srcs)
+
+
 def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
                         axis_names: str | tuple[str, ...], *,
                         pack_spec: packing.PackSpec | None = None,
-                        mix_impl: str = "auto") -> PyTree:
+                        mix_impl: str = "auto",
+                        alive: jax.Array | None = None) -> PyTree:
     """Packed production gossip: d collectives/round, one fused HBM reduction.
 
     The client-local pytree packs into one lane-aligned flat buffer per dtype
@@ -272,6 +382,14 @@ def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
     TPU). Fixed-point schedules deliver zeros (ppermute semantics), which the
     kernel's weighted sum absorbs — same arithmetic as the per-leaf path.
 
+    ``alive`` (a traced, replicated ``(n_clients,)`` 0/1 vector) makes the
+    round failure-aware with :func:`mix_dense_masked` semantics: dead senders
+    are masked out of the reduction (their weight gathers to zero from the
+    replicated vector — no extra collectives), each survivor renormalizes
+    over its live in-degree inside the fused kernel, and a dead client keeps
+    its own parameters. Because ``alive`` is data, straggler churn never
+    retraces the step.
+
     Pass ``pack_spec`` (built host-side from shape structs) to bake the
     layout into the jitted step; it is derived from ``tree`` otherwise.
     """
@@ -280,26 +398,28 @@ def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
     if pack_spec is None:
         pack_spec = packing.make_pack_spec(tree)
     idx = _client_index(axis_names)
-    self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
-    perms = [list(pairs) for pairs in spec.perms if len(pairs) > 0]
+    live = _live_schedules(spec)
+    perms = [p for p, _, _ in live]
+    weights = _local_raw_weights(spec, idx, len(perms))
+    alive_vec = (None if alive is None
+                 else _local_alive_vec(spec, alive, idx, live))
 
     out_bufs = []
     for buf in packing.pack_tree(tree, pack_spec):
         # all ppermutes issued before the reduction so XLA can overlap them
         received = [jax.lax.ppermute(buf, axis_names, perm=p) for p in perms]
         stack = jnp.stack([buf] + received)
-        weights = jnp.concatenate([
-            self_w[None],
-            jnp.full((len(received),), spec.edge_weight, jnp.float32)])
         out_bufs.append(mix_ops.gossip_mix_packed(
-            stack, weights, block_rows=pack_spec.block_rows, impl=mix_impl))
+            stack, weights, alive_vec, block_rows=pack_spec.block_rows,
+            impl=mix_impl))
     return packing.unpack_tree(tuple(out_bufs), pack_spec)
 
 
 def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
                                   axis_names: str | tuple[str, ...], *,
                                   pack_spec: packing.PackSpec | None = None,
-                                  impl: str = "auto") -> PyTree:
+                                  impl: str = "auto",
+                                  alive: jax.Array | None = None) -> PyTree:
     """Packed gossip with int8 wire payloads (4x/2x fewer ICI bytes).
 
     The packed buffer quantizes once through the Pallas ``quantize_2d`` kernel
@@ -312,25 +432,41 @@ def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
     buffer-wide amax; and each schedule ships *two* collectives (int8 buffer
     + its 4-byte f32 scale), i.e. 2d per round — still leaf-count-independent,
     but folding the scale into the shipped buffer is an open follow-up.
+
+    ``alive`` has :func:`mix_dense_masked` semantics, as in
+    :func:`ppermute_mix_packed`: the renormalizing denominator is a handful
+    of scalar ops, the self term is rescaled up front, and each sender's
+    (renormalized) alive weight rides into its fused dequant-accumulate pass
+    — the masked round does the same HBM traffic as the unmasked one.
     """
     from repro.kernels.quant_gossip import ops as qops
 
     if pack_spec is None:
         pack_spec = packing.make_pack_spec(tree)
     idx = _client_index(axis_names)
-    self_w = jnp.asarray(spec.self_weights)[idx]
-    perms = [list(pairs) for pairs in spec.perms if len(pairs) > 0]
+    self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
+    live = _live_schedules(spec)
+    perms = [p for p, _, _ in live]
     c = float(spec.edge_weight)
+    if alive is None:
+        self_scale = self_w
+        recv_alive = [None] * len(perms)
+    else:
+        alive_vec = _local_alive_vec(spec, alive, idx, live)
+        a_self, src_a = alive_vec[0], alive_vec[1:]
+        inv = 1.0 / jnp.maximum(self_w + c * jnp.sum(src_a), 1e-12)
+        self_scale = a_self * self_w * inv + (1.0 - a_self)
+        recv_alive = [a_self * src_a[k] * inv for k in range(len(perms))]
 
     out_bufs = []
     for buf in packing.pack_tree(tree, pack_spec):
         q, scale = qops.quantize_packed(buf, block_rows=pack_spec.block_rows,
                                         impl=impl)
-        acc = self_w.astype(buf.dtype) * buf
-        for p in perms:
+        acc = self_scale.astype(buf.dtype) * buf
+        for p, a in zip(perms, recv_alive):
             rq = jax.lax.ppermute(q, axis_names, perm=p)
             rs = jax.lax.ppermute(scale, axis_names, perm=p)
             acc = qops.dequant_accumulate_packed(
-                rq, rs, c, acc, block_rows=pack_spec.block_rows, impl=impl)
+                rq, rs, c, acc, a, block_rows=pack_spec.block_rows, impl=impl)
         out_bufs.append(acc)
     return packing.unpack_tree(tuple(out_bufs), pack_spec)

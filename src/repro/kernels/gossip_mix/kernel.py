@@ -9,9 +9,21 @@ local steps on the *entire* parameter state, so this reduction is pure memory
 traffic. The fused kernel reads (d+1) x bytes and writes 1 x bytes — the HBM
 lower bound.
 
+Failure-aware variant (paper §5.2): passing an ``alive`` vector (K,) —
+``alive[0]`` for self, ``alive[k]`` = liveness of the k-th received schedule's
+sender — switches to the renormalized reduction
+
+    out = sum_k (w[k] * alive[k] / sum_j w[j] * alive[j]) * stack[k]
+
+with a dead self falling back to the identity (``out = stack[0]``). The
+renormalization is a K-element scalar fixup computed once per tile on the VPU,
+so the masked reduction is still one HBM pass — this is what lets the elastic
+runtime treat stragglers as a *data* change (the alive vector is a step
+argument) instead of a recompile.
+
 Layout: the wrapper flattens/pads the payload to (rows, 128) so tiles are
 (sublane=8·m, lane=128)-aligned; the stacked operand is (K, rows, 128) and the
-weight vector lives in VMEM as (K, 1).
+weight/alive vectors live in VMEM as (K, 1).
 """
 from __future__ import annotations
 
@@ -35,23 +47,48 @@ def _mix_kernel(x_ref, w_ref, o_ref):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _mix_alive_kernel(x_ref, w_ref, a_ref, o_ref):
+    """Renormalized masked reduction (see module docstring).
+
+    x tile: (K, BR, LANE); w: (K, 1) raw weights (w0, c, ..., c);
+    a: (K, 1) alive weights (a[0] = self). Per-tile scalar math only —
+    the payload traffic is identical to `_mix_kernel`.
+    """
+    x = x_ref[...]
+    wa = w_ref[...].astype(jnp.float32) * a_ref[...].astype(jnp.float32)
+    inv = 1.0 / jnp.maximum(jnp.sum(wa), 1e-12)
+    a_self = a_ref[0, 0].astype(jnp.float32)
+    # dead self => identity row: weight 1 on x[0], 0 elsewhere
+    eff0 = a_self * wa[0, 0] * inv + (1.0 - a_self)
+    acc = eff0 * x[0].astype(jnp.float32)
+    for k in range(1, x.shape[0]):  # K is small (d+1), unrolled on the VPU
+        acc = acc + (a_self * wa[k, 0] * inv) * x[k].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def gossip_mix_2d(stack: jax.Array, weights: jax.Array, *,
+def gossip_mix_2d(stack: jax.Array, weights: jax.Array,
+                  alive: jax.Array | None = None, *,
                   block_rows: int = DEFAULT_BLOCK_ROWS,
                   interpret: bool = False) -> jax.Array:
-    """stack: (K, rows, LANE) with rows % block_rows == 0; weights: (K,)."""
+    """stack: (K, rows, LANE) with rows % block_rows == 0; weights: (K,);
+    alive: optional (K,) per-contributor alive weights (renormalized path)."""
     k, rows, lane = stack.shape
     assert lane == LANE and rows % block_rows == 0, (stack.shape, block_rows)
     w2 = weights.reshape(k, 1).astype(jnp.float32)
     grid = (rows // block_rows,)
+    stack_spec = pl.BlockSpec((k, block_rows, LANE), lambda i: (0, i, 0))
+    vec_spec = pl.BlockSpec((k, 1), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, LANE), stack.dtype)
+    if alive is None:
+        return pl.pallas_call(
+            _mix_kernel, grid=grid, in_specs=[stack_spec, vec_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(stack, w2)
+    a2 = alive.reshape(k, 1).astype(jnp.float32)
     return pl.pallas_call(
-        _mix_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((k, block_rows, LANE), lambda i: (0, i, 0)),
-            pl.BlockSpec((k, 1), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, LANE), stack.dtype),
-        interpret=interpret,
-    )(stack, w2)
+        _mix_alive_kernel, grid=grid,
+        in_specs=[stack_spec, vec_spec, vec_spec],
+        out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+    )(stack, w2, a2)

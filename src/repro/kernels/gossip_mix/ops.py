@@ -19,10 +19,14 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
-def gossip_mix(stack: jax.Array, weights: jax.Array, *,
+def gossip_mix(stack: jax.Array, weights: jax.Array,
+               alive: jax.Array | None = None, *,
                block_rows: int = _k.DEFAULT_BLOCK_ROWS,
                impl: str = "auto") -> jax.Array:
     """out = sum_k weights[k] * stack[k] for stack of shape (K, *payload).
+
+    With ``alive`` (K,): the renormalized masked reduction over the live
+    contributors (dead self => identity). Same HBM traffic either way.
 
     impl: "auto" (pallas on TPU, ref elsewhere), "pallas", "pallas_interpret",
     or "ref".
@@ -30,7 +34,7 @@ def gossip_mix(stack: jax.Array, weights: jax.Array, *,
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
-        return _ref.gossip_mix(stack, weights)
+        return _ref.gossip_mix(stack, weights, alive)
 
     k = stack.shape[0]
     payload_shape = stack.shape[1:]
@@ -41,25 +45,27 @@ def gossip_mix(stack: jax.Array, weights: jax.Array, *,
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
     rows = (t + pad) // _k.LANE
-    out = _k.gossip_mix_2d(flat.reshape(k, rows, _k.LANE), weights,
+    out = _k.gossip_mix_2d(flat.reshape(k, rows, _k.LANE), weights, alive,
                            block_rows=block_rows,
                            interpret=(impl == "pallas_interpret"))
     return out.reshape(-1)[:t].reshape(payload_shape)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
-def gossip_mix_packed(stack: jax.Array, weights: jax.Array, *,
+def gossip_mix_packed(stack: jax.Array, weights: jax.Array,
+                      alive: jax.Array | None = None, *,
                       block_rows: int = _k.DEFAULT_BLOCK_ROWS,
                       impl: str = "auto") -> jax.Array:
     """Fast path for pre-packed payloads: stack is (K, rows, LANE) with
     rows % block_rows == 0 (a PackSpec buffer stacked over self + received),
     so the Pallas kernel runs with zero flatten/pad work in the step.
+    ``alive`` (K,) selects the renormalized masked reduction.
     """
     k, rows, lane = stack.shape
     assert lane == _k.LANE and rows % block_rows == 0, (stack.shape, block_rows)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
-        return _ref.gossip_mix(stack, weights)
-    return _k.gossip_mix_2d(stack, weights, block_rows=block_rows,
+        return _ref.gossip_mix(stack, weights, alive)
+    return _k.gossip_mix_2d(stack, weights, alive, block_rows=block_rows,
                             interpret=(impl == "pallas_interpret"))

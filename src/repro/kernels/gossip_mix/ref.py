@@ -5,7 +5,21 @@ import jax
 import jax.numpy as jnp
 
 
-def gossip_mix(stack: jax.Array, weights: jax.Array) -> jax.Array:
-    """out = sum_k weights[k] * stack[k] (computed in f32, cast back)."""
-    w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (stack.ndim - 1))
+def gossip_mix(stack: jax.Array, weights: jax.Array,
+               alive: jax.Array | None = None) -> jax.Array:
+    """out = sum_k weights[k] * stack[k] (computed in f32, cast back).
+
+    With ``alive`` (K,): the renormalized masked reduction — weights are
+    masked by alive, rescaled to sum to 1 over the live contributors, and a
+    dead self (alive[0] == 0) yields the identity ``stack[0]``.
+    """
+    if alive is None:
+        w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (stack.ndim - 1))
+        return jnp.sum(w * stack.astype(jnp.float32), axis=0).astype(stack.dtype)
+    wa = weights.astype(jnp.float32) * alive.astype(jnp.float32)
+    inv = 1.0 / jnp.maximum(jnp.sum(wa), 1e-12)
+    a_self = alive.astype(jnp.float32)[0]
+    eff = a_self * wa * inv
+    eff = eff.at[0].add(1.0 - a_self)
+    w = eff.reshape((-1,) + (1,) * (stack.ndim - 1))
     return jnp.sum(w * stack.astype(jnp.float32), axis=0).astype(stack.dtype)

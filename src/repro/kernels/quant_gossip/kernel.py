@@ -25,9 +25,16 @@ def _quant_kernel(x_ref, s_ref, q_ref):
 
 
 def _dequant_acc_kernel(q_ref, s_ref, acc_ref, o_ref):
-    """o = acc + c * (q * s); s_ref = (1, 2) holding (scale, c)."""
+    """o = acc + alive * c * (q * s).
+
+    s_ref = (1, 2) holding (scale, c), or (1, 3) holding (scale, c, alive) —
+    the failure-aware gossip path folds the sender's (renormalized) alive
+    weight into the same fused pass instead of adding a masking pass.
+    """
     scale = s_ref[0, 0]
     c = s_ref[0, 1]
+    if s_ref.shape[1] == 3:
+        c = c * s_ref[0, 2]
     o_ref[...] = (acc_ref[...].astype(jnp.float32)
                   + c * scale * q_ref[...].astype(jnp.float32)
                   ).astype(o_ref.dtype)
@@ -54,14 +61,17 @@ def quantize_2d(x: jax.Array, scale: jax.Array, *,
 def dequant_accumulate_2d(q: jax.Array, scale_c: jax.Array, acc: jax.Array, *,
                           block_rows: int = DEFAULT_BLOCK_ROWS,
                           interpret: bool = False) -> jax.Array:
+    """scale_c: (1, 2) = (scale, c) or (1, 3) = (scale, c, alive weight)."""
     rows, lane = q.shape
     assert lane == LANE and rows % block_rows == 0
+    n_scalars = int(scale_c.size)
+    assert n_scalars in (2, 3), scale_c.shape
     blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
     return pl.pallas_call(
         _dequant_acc_kernel,
         grid=(rows // block_rows,),
-        in_specs=[blk, pl.BlockSpec((1, 2), lambda i: (0, 0)), blk],
+        in_specs=[blk, pl.BlockSpec((1, n_scalars), lambda i: (0, 0)), blk],
         out_specs=blk,
         out_shape=jax.ShapeDtypeStruct((rows, LANE), acc.dtype),
         interpret=interpret,
-    )(q, scale_c.reshape(1, 2).astype(jnp.float32), acc)
+    )(q, scale_c.reshape(1, n_scalars).astype(jnp.float32), acc)

@@ -87,19 +87,29 @@ def quantize_packed(buf: jax.Array, *, block_rows: int = _k.DEFAULT_BLOCK_ROWS,
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
 def dequant_accumulate_packed(q: jax.Array, scale: jax.Array, c,
-                              acc: jax.Array, *,
+                              acc: jax.Array, alive=None, *,
                               block_rows: int = _k.DEFAULT_BLOCK_ROWS,
                               impl: str = "auto") -> jax.Array:
     """dequant_accumulate for pre-packed (rows, LANE) buffers: acc + c*scale*q
-    fused in one HBM pass, no reshape/pad in the jitted step."""
+    fused in one HBM pass, no reshape/pad in the jitted step.
+
+    ``alive`` (traced scalar) is the failure-aware gossip path's per-sender
+    weight (receiver-alive x sender-alive, pre-renormalized); it folds into
+    the same fused pass, so masking dead senders costs zero extra HBM traffic.
+    """
     rows, lane = q.shape
     assert lane == _k.LANE and rows % block_rows == 0, (q.shape, block_rows)
     assert acc.shape == q.shape, (acc.shape, q.shape)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
-        return _ref.dequant_accumulate(q, scale, jnp.asarray(c), acc)
-    sc = jnp.stack([scale.astype(jnp.float32),
-                    jnp.asarray(c, jnp.float32)]).reshape(1, 2)
+        eff_c = jnp.asarray(c, jnp.float32)
+        if alive is not None:
+            eff_c = eff_c * jnp.asarray(alive, jnp.float32)
+        return _ref.dequant_accumulate(q, scale, eff_c, acc)
+    scalars = [scale.astype(jnp.float32), jnp.asarray(c, jnp.float32)]
+    if alive is not None:
+        scalars.append(jnp.asarray(alive, jnp.float32))
+    sc = jnp.stack(scalars).reshape(1, len(scalars))
     return _k.dequant_accumulate_2d(q, sc, acc, block_rows=block_rows,
                                     interpret=(impl == "pallas_interpret"))

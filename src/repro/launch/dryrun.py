@@ -59,7 +59,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             setup = steps.build_train_step(cfg, shape, mesh, par, dfl)
             lowered = setup.step_fn.lower(
                 params_lib.shape_structs(setup.param_struct),
-                setup.input_specs["batch"], setup.input_specs["lr"])
+                setup.input_specs["batch"], setup.input_specs["lr"],
+                setup.input_specs["alive"])
             extra = {
                 "n_clients": setup.n_clients,
                 "overlay": setup.overlay.name if setup.overlay else None,

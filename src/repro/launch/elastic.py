@@ -1,17 +1,36 @@
 """Elastic runtime: ties health tracking, overlay repair, and checkpointing
 into a resilient training loop (the fault-tolerance story, end to end).
 
-Protocol (mirrors paper §4.1 on a cluster):
-  1. every round, each client group posts a heartbeat (simulated here by a
-     FailurePlan);
-  2. a client missing `straggler_rounds` heartbeats is *dropped for the
-     round*: gossip weights renormalize over the alive in-neighborhood
-     (no re-jit needed — the adjusted GossipSpec recompiles once per
-     membership change, not per round);
-  3. a client missing `failure_rounds` heartbeats is declared DEAD: the
-     two-hop splice repairs each virtual ring, the client-stacked state is
-     remapped to the survivors, the step re-jits, and — if the process
-     itself died — training resumes from the latest checkpoint.
+Built on the **packed gossip engine** — the only failure-handling path:
+
+  * every round, each client group posts a heartbeat (simulated here by a
+    FailurePlan / an explicit alive mask);
+  * a client missing `straggler_rounds` heartbeats is *dropped for the
+    round*: its 0/1 entry in the alive vector flips, and the packed mixing
+    reduction renormalizes over the alive in-neighborhood *inside the fused
+    kernel pass*. The alive vector is a **traced step argument**, so
+    straggler churn — any pattern of drops and recoveries — causes **zero
+    recompiles** of the jitted round (`n_traces` counts them; assert on it);
+  * a client missing `failure_rounds` heartbeats is declared DEAD: the
+    two-hop splice (`Overlay.remove_nodes`) repairs each virtual ring, the
+    GossipSpec is re-derived, the client-stacked state (params + any caller
+    state such as optimizer slots) is remapped to the compacted survivor
+    indices with the *real* ``old2new`` permutation, surviving clients'
+    in-flight heartbeat counters are carried through the remap, and the step
+    re-jits **exactly once per membership change**;
+  * if the process itself died, training resumes from the latest checkpoint.
+
+Why alive-as-argument: baking the straggler set into the GossipSpec (the old
+``alive_adjusted_spec`` design) made liveness part of the traced graph — a
+fresh `jax.jit` trace per straggler-set change, i.e. potentially per round.
+Passing the mask as data moves the renormalization into the (already fused)
+mixing reduction, whose cost is a handful of scalar ops per tile.
+
+The default step builder runs the stacked simulator round
+(`gossip.mix_packed_stacked`: vmapped local DFedAvgM + packed gather-mix on
+one device); pass ``step_builder`` to drop in the production shard_map step
+(`launch.steps.build_train_step` has the same ``(params, batches, lr,
+alive)`` calling convention).
 """
 from __future__ import annotations
 
@@ -28,6 +47,9 @@ from repro.core.topology import Overlay
 
 PyTree = Any
 
+# (spec, trainer) -> round_fn(params, batches, lr, alive) -> (params, losses)
+StepBuilder = Callable[[gossip_lib.GossipSpec, "ElasticTrainer"], Callable]
+
 
 @dataclasses.dataclass
 class ElasticTrainer:
@@ -37,61 +59,85 @@ class ElasticTrainer:
     ckpt: CheckpointManager | None = None
     straggler_rounds: int = 1
     failure_rounds: int = 3
+    step_builder: StepBuilder | None = None
 
     def __post_init__(self):
         self.health = failures_lib.HealthTracker(
             self.overlay.n, self.straggler_rounds, self.failure_rounds)
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
-        self._round = self._build(self.spec)
+        self.n_traces = 0          # jit traces of the round fn (see step())
         self.repairs: list[dict] = []
+        self._round = self._build(self.spec)
 
     def _build(self, spec: gossip_lib.GossipSpec):
-        @jax.jit
-        def round_fn(params, batches, lr):
+        """One jitted round: vmapped local DFedAvgM + packed masked gossip.
+
+        Called exactly once per membership (the spec is baked in as a
+        static closure); the alive mask is a traced argument, so every
+        straggler pattern reuses the same executable.
+        """
+        if self.step_builder is not None:
+            return self.step_builder(spec, self)
+
+        def round_fn(params, batches, lr, alive):
+            self.n_traces += 1  # python side effect: runs only when tracing
             def client(p, b):
                 v = jax.tree.map(jnp.zeros_like, p)
                 p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
                                                  self.dcfg, lr=lr)
                 return p, loss
             params, losses = jax.vmap(client)(params, batches)
-            return gossip_lib.mix_schedules(params, spec), losses
-        return round_fn
+            return gossip_lib.mix_packed_stacked(params, spec, alive), losses
+        return jax.jit(round_fn)
 
     @property
     def n_clients(self) -> int:
         return self.overlay.n
 
-    def observe_heartbeats(self, alive: np.ndarray, params: PyTree
-                           ) -> tuple[PyTree, np.ndarray]:
-        """Process one round of heartbeats; returns (params, old2new or None).
+    def observe_heartbeats(self, alive: np.ndarray, params: PyTree,
+                           client_state: PyTree | None = None
+                           ) -> tuple[PyTree, PyTree | None, np.ndarray | None]:
+        """Process one round of heartbeats.
 
-        Straggler set changes rebuild the (weight-renormalized) spec; deaths
-        trigger splice repair + client-state remap.
+        Args:
+          alive: this round's 0/1 heartbeat vector (length n_clients).
+          params: client-stacked model state.
+          client_state: optional extra per-client pytree (optimizer slots,
+            shard assignments, ...) remapped together with ``params`` on
+            permanent failures.
+
+        Returns ``(params, client_state, old2new)``. ``old2new`` is ``None``
+        for rounds without a membership change; after a splice repair it is
+        the real survivor permutation from :func:`Overlay.remove_nodes`
+        (``old2new[old] = new`` or ``-1`` for the dead) — apply it to any
+        per-client state you keep outside ``client_state``.
+
+        Straggler-only changes touch *no* compiled state: the next
+        :meth:`step` simply ships a different alive vector.
         """
         self.health.observe(alive)
         dead = self.health.dead()
-        old2new = None
-        if len(dead):
-            self.overlay, self.spec, params = failures_lib.repair_and_remap(
-                self.overlay, list(dead), params)
-            self.repairs.append({"dead": [int(d) for d in dead],
-                                 "n_after": self.overlay.n})
-            # survivors get a fresh tracker (indices shifted)
-            self.health = failures_lib.HealthTracker(
-                self.overlay.n, self.straggler_rounds, self.failure_rounds)
-            self._round = self._build(self.spec)
-            old2new = np.asarray([i for i in range(len(alive))])
-        else:
-            stragglers = self.health.stragglers()
-            mask = np.ones(self.overlay.n, dtype=np.float32)
-            mask[stragglers] = 0.0
-            spec = (failures_lib.alive_adjusted_spec(self.spec, mask)
-                    if len(stragglers) else self.spec)
-            self._round = self._build(spec)
-        return params, old2new
+        if not len(dead):
+            return params, client_state, None
+
+        bundle = params if client_state is None else (params, client_state)
+        self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
+            self.overlay, list(dead), bundle)
+        params, client_state = (bundle if client_state is not None
+                                else (bundle, None))
+        self.repairs.append({"dead": [int(d) for d in dead],
+                             "n_after": self.overlay.n})
+        # survivors carry their in-flight heartbeat counters to the
+        # compacted indices (a straggling survivor stays a straggler)
+        self.health = self.health.remap(old2new)
+        self._round = self._build(self.spec)  # the one re-jit per repair
+        return params, client_state, old2new
 
     def step(self, params: PyTree, batches: PyTree, lr: float):
-        return self._round(params, batches, jnp.asarray(lr, jnp.float32))
+        """Run one round under the current health mask (no rebuilds here)."""
+        alive = jnp.asarray(self.health.alive_mask())
+        return self._round(params, batches, jnp.asarray(lr, jnp.float32),
+                           alive)
 
     def checkpoint(self, rnd: int, params: PyTree) -> None:
         if self.ckpt is not None:

@@ -14,6 +14,17 @@ This is where the paper's technique meets the device grid:
   through the Pallas quantize / dequant-accumulate kernels; `"ppermute"` /
   `"ppermute_quant"` are the per-leaf baselines (d x n_leaves collectives);
   `"dense"` is the paper-naive dense mixing einsum (the §Perf baseline).
+
+  The train step takes a per-client ``alive`` 0/1 vector as its **fourth,
+  donated argument** — a replicated (n_clients,) f32 array threaded into the
+  gossip island as plain data. On the packed paths (and the dense reference)
+  dead senders are masked out of the reduction and survivors renormalize
+  over their live in-degree (`mix_dense_masked` semantics), so transient
+  stragglers cost **zero recompiles**: the round's liveness is a step
+  argument, never baked into the traced graph. Only membership *changes*
+  (splice repair rebuilding the overlay) re-jit. The per-leaf ppermute
+  baselines ignore the mask — the packed engine is the only
+  failure-handling path (see `core/failures.py`).
 * **serve steps** (prefill / decode) run on the raw production mesh with
   TP ("model") x batch-DP ("data"/"pod") and sequence-sharded KV caches.
 
@@ -87,10 +98,12 @@ def build_overlay(n: int, dfl: DFLConfig) -> topology.Overlay | None:
 # ------------------------------------------------------------ train round
 @dataclasses.dataclass(frozen=True)
 class TrainSetup:
-    step_fn: Any                   # jitted (params, batch, lr) -> (params, metrics)
+    # jitted (params, batch, lr, alive) -> (params, metrics); params and the
+    # (n_clients,) f32 alive vector are DONATED — ship a fresh mask per round
+    step_fn: Any
     param_specs: PyTree            # PartitionSpecs (client-stacked)
     param_struct: PyTree           # Leaf pytree (client-stacked)
-    input_specs: dict              # ShapeDtypeStructs for (batch, lr)
+    input_specs: dict              # ShapeDtypeStructs for (batch, lr, alive)
     in_shardings: Any
     overlay: topology.Overlay | None
     gossip_spec: gossip_lib.GossipSpec | None
@@ -195,12 +208,13 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         pack_spec = packing_lib.make_pack_spec(
             local_shard_structs(struct, pspecs, dmesh))
 
-    def gossip_fn(params):
+    def gossip_fn(params, alive):
         if gspec is None or overlay is None:
             return params
         if par.gossip_impl == "dense":
-            return gossip_lib.mix_dense(params, mix_mat)
+            return gossip_lib.mix_dense_masked(params, mix_mat, alive)
 
+        packed = par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant")
         if par.gossip_impl == "ppermute_packed":
             mixer = functools.partial(gossip_lib.ppermute_mix_packed,
                                       pack_spec=pack_spec)
@@ -213,13 +227,16 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             mixer = gossip_lib.ppermute_mix
         axis = caxes if len(caxes) > 1 else caxes[0]
 
-        def body(p):
+        def body(p, alive_vec):
             local = jax.tree.map(lambda x: x[0], p)       # client-local shard
-            mixed = mixer(local, gspec, axis)
+            # alive rides into the island replicated; only the packed
+            # executors are failure-aware (per-leaf baselines ignore it)
+            mixed = (mixer(local, gspec, axis, alive=alive_vec) if packed
+                     else mixer(local, gspec, axis))
             return jax.tree.map(lambda x: x[None], mixed)
 
-        return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs,),
-                                  out_specs=pspecs)(params)
+        return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P()),
+                                  out_specs=pspecs)(params, alive)
 
     # activation constraints visible inside the vmapped client round
     act_rules = {}
@@ -243,30 +260,36 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             act_rules["expert_weights"] = NamedSharding(dmesh, P(None, None, "tp"))
             act_rules["expert_weights_t"] = NamedSharding(dmesh, P(None, "tp", None))
 
-    def train_step(params, batch, lr):
+    def train_step(params, batch, lr, alive):
         with activation_sharding(act_rules):
             # spmd_axis_name threads the client mesh axes through every
             # sharding constraint inside the vmapped round
             params, loss = jax.vmap(client_round, in_axes=(0, 0, None),
                                     spmd_axis_name=caxes)(params, batch, lr)
-            params = gossip_fn(params)
+            params = gossip_fn(params, alive)
         return params, {"loss": jnp.mean(loss)}
 
     in_shardings = (
         jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
         jax.tree.map(lambda s: NamedSharding(dmesh, s), batch_pspec),
         NamedSharding(dmesh, P()),
+        NamedSharding(dmesh, P()),
     )
     out_shardings = (
         jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
         NamedSharding(dmesh, P()),
     )
+    # alive (argnum 3) is donated with the params: each round ships a fresh
+    # liveness vector and the previous one is dead weight. Consequence:
+    # callers must NOT reuse a cached device array across rounds (it is
+    # consumed); build the mask per round (ElasticTrainer does)
     step = jax.jit(train_step, in_shardings=in_shardings,
-                   out_shardings=out_shardings, donate_argnums=(0,))
+                   out_shardings=out_shardings, donate_argnums=(0, 3))
     return TrainSetup(
         step_fn=step, param_specs=pspecs, param_struct=struct,
         input_specs={"batch": batch_specs,
-                     "lr": jax.ShapeDtypeStruct((), jnp.float32)},
+                     "lr": jax.ShapeDtypeStruct((), jnp.float32),
+                     "alive": jax.ShapeDtypeStruct((n_cl,), jnp.float32)},
         in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
         dfl_mesh=dmesh, n_clients=n_cl)
 

@@ -50,7 +50,7 @@ class SimTrainer:
 
     def _build(self, spec):
         @partial(jax.jit, static_argnames=())
-        def round_fn(params, batches, lr):
+        def round_fn(params, batches, lr, alive):
             def client(p, b):
                 v = jax.tree.map(jnp.zeros_like, p)
                 p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
@@ -58,22 +58,28 @@ class SimTrainer:
                 return p, loss
 
             params, losses = jax.vmap(client)(params, batches)
-            params = gossip_lib.mix_schedules(params, spec)
+            params = gossip_lib.mix_packed_stacked(params, spec, alive)
             return params, losses
         return round_fn
 
     # ---------------------------------------------------------- failures
     def set_stragglers(self, alive_mask: np.ndarray) -> None:
-        """Transient failures: renormalized gossip for the coming rounds."""
+        """Transient failures: renormalized gossip for the coming rounds.
+
+        The mask is a traced argument of the packed round (no rebuild here,
+        zero recompiles — see launch/elastic.py for the full design note).
+        """
         self._alive = np.asarray(alive_mask, dtype=np.float32)
-        spec = failures_lib.alive_adjusted_spec(self.spec, self._alive)
-        self._round_fn = self._build(spec)
 
     def repair(self, dead: list[int], params: PyTree) -> PyTree:
         """Permanent failures: splice repair, state remap, re-jit."""
-        self.overlay, self.spec, params = failures_lib.repair_and_remap(
+        self.overlay, self.spec, params, old2new = failures_lib.repair_and_remap(
             self.overlay, dead, params)
-        self._alive = np.ones(self.overlay.n, dtype=np.float32)
+        # surviving stragglers keep their mask through the index compaction
+        survivors = old2new >= 0
+        new_alive = np.ones(self.overlay.n, dtype=np.float32)
+        new_alive[old2new[survivors]] = self._alive[survivors]
+        self._alive = new_alive
         self._round_fn = self._build(self.spec)
         return params
 
@@ -93,7 +99,8 @@ class SimTrainer:
             t0 = time.time()
             batches = batch_fn(rnd)
             params, losses = self._round_fn(params, batches,
-                                            jnp.asarray(lr_fn(rnd), jnp.float32))
+                                            jnp.asarray(lr_fn(rnd), jnp.float32),
+                                            jnp.asarray(self._alive))
             rec = {"round": rnd,
                    "train_loss": float(jnp.mean(losses)),
                    "seconds": round(time.time() - t0, 3)}

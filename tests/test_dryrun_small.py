@@ -30,7 +30,8 @@ _HARNESS = textwrap.dedent("""
         setup = steps.build_train_step(cfg, shape, mesh, par, DFLConfig(degree=2))
         lowered = setup.step_fn.lower(P.shape_structs(setup.param_struct),
                                       setup.input_specs["batch"],
-                                      setup.input_specs["lr"])
+                                      setup.input_specs["lr"],
+                                      setup.input_specs["alive"])
     else:
         shape = ShapeConfig("s", 64, 8, kind)
         setup = steps.build_serve_step(cfg, shape, mesh)

@@ -142,6 +142,46 @@ class TestFailureAdjustedGossip:
         y = gossip.mix_schedules(x, adj)
         np.testing.assert_allclose(y["a"][3], x["a"][3])  # dead keeps params
 
+    def test_alive_weight_table_matches_masked_matrix(self):
+        """The traced-argument weight table rebuilds mix_dense_masked's
+        effective matrix row-for-row (the packed engine's masking math)."""
+        ov = topology.expander_overlay(12, 4, seed=0)
+        spec = gossip.make_gossip_spec(ov)
+        alive = np.ones(12, np.float32); alive[[2, 7]] = 0
+        table = np.asarray(gossip.alive_weight_table(spec, jnp.asarray(alive)))
+        # scatter the table back into an n x n matrix
+        m = np.zeros((12, 12))
+        m[np.arange(12), np.arange(12)] += table[:, 0]
+        for s, rf in enumerate(spec.recv_from):
+            for i, j in enumerate(rf):
+                m[i, j] += table[i, 1 + s] if i != j else 0.0
+        np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-5)
+        assert m[2, 2] == pytest.approx(1.0) and m[7, 7] == pytest.approx(1.0)
+        alive_idx = [i for i in range(12) if alive[i]]
+        assert np.all(np.abs(m[np.ix_(alive_idx, [2, 7])]) < 1e-7)
+
+    def test_mix_packed_stacked_matches_dense_masked(self):
+        """Stacked packed executor (the elastic round's mixing path) ==
+        mix_dense_masked for random masks; unmasked == mix_dense."""
+        ov = topology.expander_overlay(10, 4, seed=2)
+        spec = gossip.make_gossip_spec(ov)
+        m = ov.mixing_matrix()
+        x = _tree(10, seed=5)
+        got = gossip.mix_packed_stacked(x, spec)
+        ref = gossip.mix_dense(x, m)
+        for k in x:
+            np.testing.assert_allclose(got[k], ref[k], rtol=2e-5, atol=2e-5)
+        r = np.random.default_rng(0)
+        for t in range(4):
+            alive = (r.random(10) > 0.3).astype(np.float32)
+            if alive.sum() < 2:
+                alive[:] = 1
+            got = gossip.mix_packed_stacked(x, spec, jnp.asarray(alive))
+            ref = gossip.mix_dense_masked(x, m, alive)
+            for k in x:
+                np.testing.assert_allclose(got[k], ref[k],
+                                           rtol=2e-5, atol=2e-5)
+
 
 def _check_executors_agree(n, d, seed):
     ov = topology.expander_overlay(n, d, seed=seed)

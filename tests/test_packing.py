@@ -241,6 +241,125 @@ class TestPackedGossipParity:
         """)
 
 
+class TestPackedAliveMaskParity:
+    """Failure-aware packed executors == mix_dense_masked oracle, under
+    shard_map with the alive mask as a traced argument (f32 + quantized)."""
+
+    def _run(self, code):
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, cwd=".")
+        assert "OK" in out.stdout, out.stdout + out.stderr
+
+    def test_packed_alive_matches_dense_masked(self):
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import gossip, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=0)
+            spec = gossip.make_gossip_spec(ov)
+            m = ov.mixing_matrix()
+            r = np.random.default_rng(0)
+            x = {"w": jnp.asarray(r.standard_normal((8, 6, 5)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((8, 11)), jnp.float32)}
+            specs = jax.tree.map(lambda _: P("client"), x)
+            xs = jax.device_put(x, jax.tree.map(
+                lambda _: NamedSharding(mesh, P("client")), x))
+
+            def body(t, a):
+                local = jax.tree.map(lambda v: v[0], t)
+                out = gossip.ppermute_mix_packed(local, spec, "client",
+                                                 alive=a)
+                return jax.tree.map(lambda v: v[None], out)
+
+            fn = jax.jit(shard_map(body, mesh, in_specs=(specs, P()),
+                                   out_specs=specs))
+            masks = [np.ones(8, np.float32)]  # all-alive: == unmasked mixing
+            for t in range(4):                # random masks (>= 2 alive)
+                mask = (np.random.default_rng(t).random(8) > 0.35
+                        ).astype(np.float32)
+                if mask.sum() >= 2:
+                    masks.append(mask)
+            dead_one = np.ones(8, np.float32); dead_one[3] = 0.0
+            masks.append(dead_one)
+            for mask in masks:
+                ref = gossip.mix_dense_masked(x, m, mask)
+                got = fn(xs, jnp.asarray(mask))
+                for k in x:
+                    np.testing.assert_allclose(np.asarray(got[k]),
+                                               np.asarray(ref[k]),
+                                               rtol=2e-5, atol=2e-5)
+            # all-alive must equal the plain (unmasked) mixing matrix
+            ref = gossip.mix_dense(x, m)
+            got = fn(xs, jnp.ones(8))
+            for k in x:
+                np.testing.assert_allclose(np.asarray(got[k]),
+                                           np.asarray(ref[k]),
+                                           rtol=2e-5, atol=2e-5)
+            # a dead client's row must keep its own params exactly
+            got = fn(xs, jnp.asarray(dead_one))
+            for k in x:
+                np.testing.assert_allclose(np.asarray(got[k][3]),
+                                           np.asarray(x[k][3]), rtol=1e-6)
+            print("ALIVE_PARITY_OK")
+        """)
+
+    def test_packed_quantized_alive_within_int8_tolerance(self):
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import gossip, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=1)
+            spec = gossip.make_gossip_spec(ov)
+            m = ov.mixing_matrix()
+            r = np.random.default_rng(3)
+            x = {"w": jnp.asarray(r.standard_normal((8, 6, 5)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((8, 11)), jnp.float32)}
+            specs = jax.tree.map(lambda _: P("client"), x)
+            xs = jax.device_put(x, jax.tree.map(
+                lambda _: NamedSharding(mesh, P("client")), x))
+
+            def body(t, a):
+                local = jax.tree.map(lambda v: v[0], t)
+                out = gossip.ppermute_mix_packed_quantized(
+                    local, spec, "client", alive=a)
+                return jax.tree.map(lambda v: v[None], out)
+
+            fn = jax.jit(shard_map(body, mesh, in_specs=(specs, P()),
+                                   out_specs=specs))
+            amax = max(float(jnp.max(jnp.abs(v)))
+                       for v in jax.tree.leaves(x))
+            # int8 error enters via <= d received payloads; renormalization
+            # can scale each weight up to ~2x the unmasked edge weight
+            bound = 4 * spec.degree * spec.edge_weight * amax / 127.0 + 1e-6
+            mask = np.ones(8, np.float32); mask[2] = 0.0; mask[5] = 0.0
+            for alive in (np.ones(8, np.float32), mask):
+                ref = gossip.mix_dense_masked(x, m, alive)
+                got = fn(xs, jnp.asarray(alive))
+                for k in x:
+                    err = float(np.max(np.abs(np.asarray(got[k])
+                                              - np.asarray(ref[k]))))
+                    assert err <= bound, (k, err, bound)
+            # dead rows are exact (the identity path never dequantizes)
+            got = fn(xs, jnp.asarray(mask))
+            for k in x:
+                np.testing.assert_allclose(np.asarray(got[k][2]),
+                                           np.asarray(x[k][2]), rtol=1e-6)
+            print("ALIVE_QUANT_OK")
+        """)
+
+
 class TestPackedCollectiveCount:
     @pytest.mark.slow
     def test_packed_train_step_issues_d_permutes(self):
@@ -268,7 +387,8 @@ class TestPackedCollectiveCount:
                                                DFLConfig(degree=2))
                 lowered = setup.step_fn.lower(
                     P.shape_structs(setup.param_struct),
-                    setup.input_specs["batch"], setup.input_specs["lr"])
+                    setup.input_specs["batch"], setup.input_specs["lr"],
+                    setup.input_specs["alive"])
                 counts[gi] = lowered.as_text().count("collective_permute")
             n_leaves = len(jax.tree.leaves(
                 P.shape_structs(setup.param_struct)))
