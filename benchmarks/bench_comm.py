@@ -1,9 +1,14 @@
 """Paper's communication-cost panels + the production gossip cost table.
 
-Two views:
+Three views:
   1. algorithmic: bytes shipped per client per round for each topology at the
      paper's model sizes (degree x model bytes) — the paper's bar panels;
-  2. compiled: per-device wire bytes of the *lowered production gossip* for a
+  2. packed layout: collective count + padding overhead of the flat-buffer
+     gossip payloads, per architecture (smoke AND full-size trees — the
+     ROADMAP follow-up: smoke models pad ~17%, real archs must be <<1%);
+     the per-arch numbers are also written as a JSON record to
+     ``experiments/bench/comm.json``;
+  3. compiled: per-device wire bytes of the *lowered production gossip* for a
      mid-size LM on the single-pod mesh, dense-mixing vs ppermute vs
      int8-quantized ppermute (from the dry-run JSONs when present).
 """
@@ -16,6 +21,7 @@ import os
 from benchmarks.common import emit
 from repro.core import topology
 from repro.core.mixing import chow_matrix
+from repro.roofline import analysis
 
 
 def algorithmic(n: int = 100, model_bytes: int = 4 * 10**6) -> None:
@@ -52,6 +58,37 @@ def packed_vs_per_leaf(arch: str = "qwen2.5-3b", d: int = 4) -> None:
          f"pad_overhead={spec.padded_bytes / max(spec.payload_bytes, 1):.3f}x")
 
 
+def padding_by_arch(out_dir: str | None = "experiments/bench") -> None:
+    """Packed-padding overhead across ALL registered architectures, smoke
+    and full size. PackSpecs are host-side (shapes only — no device memory,
+    so even the 1T-param tree is cheap to lay out). The claim under test:
+    lane/tile padding is a smoke-model artifact; at real sizes the padded
+    fraction is negligible, so the packed engine's wire/HBM numbers hold."""
+    from repro.configs import registry
+    from repro.core import packing
+    from repro.models import params as params_lib
+    from repro.models.api import ModelAPI
+
+    record = {}
+    for arch in registry.ARCH_IDS:
+        row = {}
+        for label, cfg in (("smoke", registry.reduced(arch)),
+                           ("full", registry.get(arch))):
+            structs = params_lib.shape_structs(ModelAPI(cfg).param_struct())
+            rep = analysis.packing_report(packing.make_pack_spec(structs))
+            row[label] = rep
+            emit(f"comm/packed_padding/{arch}-{label}", 0.0,
+                 f"payload_MB={rep['payload_bytes'] / 2**20:.3f};"
+                 f"pad_overhead={rep['pad_overhead']:.5f};"
+                 f"buffers={rep['n_buffers']};leaves={rep['n_leaves']}")
+        record[arch] = row
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "comm.json"), "w") as f:
+            json.dump({"bench": "comm", "padding_by_arch": record}, f,
+                      indent=1)
+
+
 def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*train_4k*.json"))):
         with open(path) as f:
@@ -72,6 +109,7 @@ def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
 def main() -> None:
     algorithmic()
     packed_vs_per_leaf()
+    padding_by_arch()
     compiled()
 
 

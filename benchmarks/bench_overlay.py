@@ -1,0 +1,120 @@
+"""Overlay-lab Pareto sweep: spectral gap vs degree vs mixing throughput.
+
+For every registered graph family (plus degree variants where the family is
+parameterized) this builds the overlay at a common n, records the theory
+numbers (Chow lambda, spectral gap, kappa, mixing time), and measures the
+*executed* mixing throughput of the packed engine on a synthetic
+client-stacked state — both the static all-schedules round and the one-peer
+time-varying round (gates-as-data: both share one jitted executable, and the
+trace count is asserted).
+
+The Pareto story the sweep renders: degree buys spectral gap (fewer rounds
+to consensus) but costs per-round collectives; time-varying plans move along
+that frontier at runtime without recompiling.
+
+Output: the usual ``name,us_per_call,derived`` CSV rows plus one JSON record
+at ``<out>/overlay.json`` (re-runs overwrite, dryrun-cache style)::
+
+    {"bench": "overlay", "n", "dim", "rounds",
+     "families": [{family, n_schedules, degree_max, lam, spectral_gap,
+                   kappa, mixing_time_1e3, rounds_per_sec,
+                   rounds_per_sec_one_peer, n_traces}, ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import gossip
+from repro.overlay import plan as plan_lib, registry
+
+# (family, degree) cells; degree is ignored by fixed-degree families
+SWEEP: tuple[tuple[str, int], ...] = (
+    ("ring", 2),
+    ("torus", 4),
+    ("hypercube", 0),
+    ("expander", 4),
+    ("expander", 6),
+    ("random_regular", 4),
+    ("random_regular", 6),
+    ("onepeer_exp", 0),
+    ("erdos_renyi", 0),
+    ("complete", 0),
+)
+
+
+def _time_rounds(fn, params, gates_fn, rounds: int) -> float:
+    """Seconds for `rounds` mixing rounds (jit warm; gates rebuilt per round
+    exactly as a real driver would)."""
+    out = fn(params, gates_fn(0))
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        out = fn(out, gates_fn(rnd))
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def run(n: int = 32, dim: int = 1 << 16, rounds: int = 30,
+        seed: int = 0) -> dict:
+    r = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
+    rows = []
+    for family, degree in SWEEP:
+        overlay, meta = registry.build(family, n, degree=max(degree, 2),
+                                       seed=seed)
+        spec = gossip.make_gossip_spec(overlay)
+        n_traces = [0]
+
+        @jax.jit
+        def mix(p, gates, spec=spec):
+            n_traces[0] += 1
+            return gossip.mix_packed_stacked(p, spec, gates=gates)
+
+        s_count = spec.degree
+        ones = lambda rnd: jnp.ones(s_count, jnp.float32)
+        one_peer = plan_lib.OnePeerPlan()
+        rotate = lambda rnd: jnp.asarray(one_peer.gates(rnd, s_count))
+
+        dt_static = _time_rounds(mix, params, ones, rounds)
+        dt_onepeer = _time_rounds(mix, params, rotate, rounds)
+        assert n_traces[0] == 1, (family, n_traces)  # gates are data
+
+        label = (f"{family}-d{degree}" if degree else family)
+        row = dict(meta, label=label,
+                   rounds_per_sec=round(rounds / dt_static, 2),
+                   rounds_per_sec_one_peer=round(rounds / dt_onepeer, 2),
+                   n_traces=n_traces[0])
+        rows.append(row)
+        emit(f"overlay/{label}/n{n}", dt_static * 1e6 / rounds,
+             f"spectral_gap={row['spectral_gap']:.4f};"
+             f"n_schedules={row['n_schedules']};"
+             f"lam={row['lam']:.4f};"
+             f"rounds_per_sec={row['rounds_per_sec']};"
+             f"one_peer_rounds_per_sec={row['rounds_per_sec_one_peer']};"
+             f"mixing_time={row['mixing_time_1e3']:.1f}")
+    return {"bench": "overlay", "n": n, "dim": dim, "rounds": rounds,
+            "families": rows}
+
+
+def main(rounds: int = 30, out_dir: str | None = "experiments/bench") -> None:
+    rec = run(rounds=rounds)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "overlay.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+    main(rounds=args.rounds, out_dir=args.out)

@@ -12,6 +12,9 @@ Mapping to the paper:
   bench_kernels   -> Pallas kernel traffic models (TPU target)
   bench_elastic   -> elastic runtime churn throughput + recompile count
                      (also writes a JSON record to experiments/bench/)
+  bench_overlay   -> overlay-lab Pareto sweep: spectral gap vs degree vs
+                     packed mixing rounds/sec per graph family, static and
+                     one-peer time-varying (JSON record to experiments/bench/)
 """
 from __future__ import annotations
 
@@ -30,13 +33,14 @@ def main() -> None:
 
     from benchmarks import (bench_comm, bench_elastic, bench_failures,
                             bench_kernels, bench_lm, bench_mnist,
-                            bench_spectral)
+                            bench_overlay, bench_spectral)
 
     rounds = 6 if args.fast else 10
     suite = [
         ("spectral", lambda: bench_spectral.main()),
         ("kernels", lambda: bench_kernels.main()),
         ("comm", lambda: bench_comm.main()),
+        ("overlay", lambda: bench_overlay.main(rounds=3 * rounds)),
         ("mnist", lambda: bench_mnist.main(rounds=rounds)),
         ("lm", lambda: bench_lm.main(rounds=rounds + 4)),
         ("failures", lambda: bench_failures.main(rounds=rounds)),

@@ -1,0 +1,83 @@
+"""The overlay lab, end to end: graph families, arbitrary-graph conversion,
+and a time-varying one-peer run — all on the packed gossip engine.
+
+Three acts:
+  1. family sweep: every registered graph family at n=16, ranked by the
+     theory (spectral gap -> rounds to consensus), then one actually
+     executed mixing round each;
+  2. bring-your-own-graph: a hand-drawn adjacency matrix converts into
+     <= Delta+1 permutation schedules (Misra-Gries edge coloring) and
+     gossips on the same engine — the paper's §4 "arbitrary given graph";
+  3. one-peer time-varying rounds: an elastic trainer rotates through the
+     schedule pool one ppermute-weight at a time (gates are donated step
+     DATA, so the whole run reuses a single jitted executable — watch the
+     trace counter).
+
+    PYTHONPATH=src python examples/overlay_zoo.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfedavg, gossip
+from repro.launch.elastic import ElasticTrainer
+from repro.overlay import OnePeerPlan, overlay_from_adjacency, registry
+
+N = 16
+rng = np.random.default_rng(0)
+
+# ---- act 1: the family zoo, ranked by spectral gap --------------------------
+print(f"=== graph families at n={N} (bigger gap = fewer rounds) ===")
+rows = []
+for family in ("ring", "torus", "hypercube", "expander", "random_regular",
+               "onepeer_exp", "erdos_renyi", "complete"):
+    overlay, meta = registry.build(family, N, degree=4, seed=0)
+    rows.append((meta["spectral_gap"], family, meta))
+x = {"w": jnp.asarray(rng.standard_normal((N, 64)), jnp.float32)}
+for gap, family, meta in sorted(rows, reverse=True):
+    spec = gossip.make_gossip_spec(registry.build(family, N, degree=4,
+                                                  seed=0)[0])
+    mixed = gossip.mix_packed_stacked(x, spec)  # one executed round
+    spread = float(jnp.linalg.norm(mixed["w"] - jnp.mean(mixed["w"], 0)))
+    print(f"  {family:15s} schedules={meta['n_schedules']:2d} "
+          f"gap={gap:.3f} lam={meta['lam']:.3f} "
+          f"mix_time={meta['mixing_time_1e3']:6.1f}  "
+          f"disagreement after 1 round={spread:.2f}")
+
+# ---- act 2: bring your own graph --------------------------------------------
+print("\n=== user-supplied graph -> schedules (paper §4 conversion) ===")
+# a lopsided hand-drawn graph: two hubs + a path + a chord
+adj = np.zeros((8, 8), np.int64)
+for u, v in [(0, 1), (0, 2), (0, 3), (0, 4), (4, 5), (5, 6), (6, 7),
+             (7, 0), (3, 6), (2, 5)]:
+    adj[u, v] = adj[v, u] = 1
+overlay = overlay_from_adjacency(adj, name="hand-drawn")
+spec = gossip.make_gossip_spec(overlay)
+print(f"  degrees {adj.sum(1).tolist()} (Delta={int(adj.sum(1).max())}) "
+      f"-> {spec.degree} involution schedules (<= Delta+1, Vizing)")
+assert np.array_equal(overlay.multigraph_adjacency(), adj)  # lossless
+y = {"w": jnp.asarray(rng.standard_normal((8, 32)), jnp.float32)}
+mixed = gossip.mix_packed_stacked(y, spec)
+ref = gossip.mix_dense(y, overlay.mixing_matrix())
+err = float(jnp.max(jnp.abs(mixed["w"] - ref["w"])))
+print(f"  packed engine == dense mixing oracle: max err {err:.2e}")
+
+# ---- act 3: one-peer time-varying rounds ------------------------------------
+print("\n=== one-peer rotation (gates-as-data: ONE executable) ===")
+targets = jnp.asarray(rng.standard_normal((N, 8)), jnp.float32)
+trainer = ElasticTrainer(
+    overlay=registry.build("onepeer_exp", N)[0],
+    loss_fn=lambda p, b: (jnp.mean(jnp.square(p["w"] - b["target"])), {}),
+    dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.3, momentum=0.5),
+    straggler_rounds=1, failure_rounds=99, plan=OnePeerPlan())
+params = {"w": jnp.zeros((N, 8))}
+batches = {"target": jnp.broadcast_to(targets[:, None], (N, 2, 8))}
+for rnd in range(10):
+    gates = np.asarray(trainer.gates_for_round())
+    trainer.observe_heartbeats(np.ones(N), params)
+    params, losses = trainer.step(params, batches, 0.3)
+    print(f"  round {rnd}: active schedule {int(np.argmax(gates)):2d}/"
+          f"{trainer.spec.degree}  loss={float(jnp.mean(losses)):.4f}  "
+          f"traces={trainer.n_traces}")
+assert trainer.n_traces == 1, "gates must never retrace"
+print(f"\n10 time-varying rounds, {trainer.spec.degree}-schedule pool, "
+      f"total jit traces: {trainer.n_traces}")

@@ -198,11 +198,21 @@ class ParallelConfig:
 class DFLConfig:
     """Overlay settings for the DFL round."""
 
-    topology: Literal["expander", "ring", "complete"] = "expander"
+    # any family registered in repro.overlay.registry: "expander", "ring",
+    # "complete", "torus", "hypercube", "random_regular", "onepeer_exp",
+    # "erdos_renyi", ...
+    topology: str = "expander"
     degree: int = 4
     seed: int = 0
     lr: float = 0.01
     momentum: float = 0.9
+    # time-varying round plan (repro.overlay.plan): per-schedule gate vector
+    # shipped into the jitted step as donated data — "static", "one_peer",
+    # "random_subset" (plan_k schedules/round), "throttle" (plan_fraction of
+    # the pool/round). Any plan reuses one executable: gates are data.
+    round_plan: str = "static"
+    plan_k: int = 1
+    plan_fraction: float = 0.5
     # elastic runtime (launch/elastic.py): heartbeat thresholds. A client
     # missing `straggler_rounds` heartbeats is masked out of gossip for the
     # round (alive-mask step argument — zero recompiles); one missing

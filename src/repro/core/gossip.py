@@ -40,6 +40,17 @@ their live in-degree. Because the mask is a step argument rather than spec
 structure, straggler churn never retraces the jitted step (see
 ``alive_weight_table``); the per-leaf ppermute baselines and
 ``mix_schedules`` deliberately do NOT take a mask (use the packed paths).
+
+Time-varying overlays (the overlay lab, :mod:`repro.overlay.plan`) ride the
+same design: the packed executors take an optional traced ``gates`` vector —
+one float per *schedule* — that multiplies each schedule's edge weight before
+the very same renormalization. A gate of 0 removes the schedule from the
+round's mixing matrix (its ppermute still runs and contributes weight zero),
+so one-peer rotation, random schedule subsets, and throttled rounds are all
+plain data through one executable. Gates compose with ``alive``: contributor
+weight = gate[schedule] x alive[sender]. For 0/1 gates the fused reduction
+matches :func:`mix_dense_gated` bit-for-bit in f32 on one-peer rounds (see
+its docstring for the exact scope; 0/1 factors are exact in floating point).
 """
 from __future__ import annotations
 
@@ -57,8 +68,10 @@ __all__ = [
     "GossipSpec",
     "make_gossip_spec",
     "alive_weight_table",
+    "gated_mixing_matrix",
     "mix_dense",
     "mix_dense_masked",
+    "mix_dense_gated",
     "mix_schedules",
     "mix_packed_stacked",
     "ppermute_mix",
@@ -109,6 +122,19 @@ class GossipSpec:
     @property
     def degree(self) -> int:
         return len(self.perms)
+
+    def fixed_masks_np(self) -> np.ndarray:
+        """(S, n) 0/1: schedule s has a fixed point at client i (host-side)."""
+        if self.degree == 0:
+            return np.zeros((0, self.n_clients), np.float32)
+        return 1.0 - np.asarray(self.live_masks, np.float32)
+
+    def base_self_weights_np(self) -> np.ndarray:
+        """(n,) self weights *without* the fixed-point edge folding — the w0
+        each gated fixed point's c must be re-added to (gate pathway)."""
+        fixed_counts = self.fixed_masks_np().sum(axis=0)
+        return (np.asarray(self.self_weights, np.float32)
+                - np.float32(self.edge_weight) * fixed_counts)
 
 
 def make_gossip_spec(overlay: Overlay, theta: float | None = None) -> GossipSpec:
@@ -167,27 +193,98 @@ def mix_dense_masked(tree: PyTree, m: jax.Array | np.ndarray,
     return mix_dense(tree, eff)
 
 
-def alive_weight_table(spec: GossipSpec, alive: jax.Array) -> jax.Array:
-    """Renormalized mixing weights under a (traced) alive mask: (n, S+1).
+def alive_weight_table(spec: GossipSpec, alive: jax.Array | None,
+                       gates: jax.Array | None = None) -> jax.Array:
+    """Renormalized mixing weights under (traced) alive + gate vectors:
+    (n, S+1).
 
     Column 0 is the self weight, column 1+s the weight applied to the payload
-    received under schedule s. Rows match ``mix_dense_masked`` exactly: dead
-    senders are zeroed, each surviving row renormalizes over its alive
-    in-neighborhood (incl. itself), and dead receivers get the identity row.
-    ``alive`` is data, not structure — recomputing this table every round
-    costs a few n x (S+1) vector ops and never retraces the step.
+    received under schedule s. Rows match ``mix_dense_gated`` exactly: each
+    schedule's edge weight is scaled by its gate, dead senders are zeroed,
+    each surviving row renormalizes over its gated alive in-neighborhood
+    (incl. itself), and dead receivers get the identity row. A gated fixed
+    point re-enters the self weight through the gate (the full-permutation
+    convention: gate g_s scales P_s including its diagonal), so gating a
+    schedule off is exactly removing it from the overlay. Both vectors are
+    data, not structure — recomputing this table every round costs a few
+    n x (S+1) vector ops and never retraces the step.
+    """
+    n, s_count = spec.n_clients, spec.degree
+    alive = (jnp.ones(n, jnp.float32) if alive is None
+             else jnp.asarray(alive, jnp.float32))
+    if gates is None:
+        self_w = jnp.asarray(spec.self_weights, jnp.float32)
+        gates = jnp.ones(s_count, jnp.float32)
+    else:
+        gates = jnp.asarray(gates, jnp.float32)
+        fixed = jnp.asarray(spec.fixed_masks_np())
+        # clamp: dense overlays can have a *negative* Chow self weight
+        # (w0 = 1 - c*S < 0 when lam_max(L) < 2S/(1+theta)); a gated subset
+        # of such a row has no valid renormalization, so the gated path
+        # projects onto the nonnegative (lazy) variant
+        self_w = jnp.maximum(
+            jnp.asarray(spec.base_self_weights_np())
+            + spec.edge_weight * jnp.sum(gates[:, None] * fixed, axis=0), 0.0)
+    cols = [spec.edge_weight * gates[s] * jnp.asarray(mask, jnp.float32)
+            * jnp.take(alive, jnp.asarray(rf))
+            for s, (rf, mask) in enumerate(zip(spec.recv_from,
+                                               spec.live_masks))]
+    ws = (jnp.stack(cols, axis=1) if cols else jnp.zeros((n, 0), jnp.float32))
+    wa = jnp.concatenate([(self_w * alive)[:, None], ws], axis=1)
+    tot = jnp.sum(wa, axis=1)
+    # rows with no renormalizable mass (everything gated off / clamped
+    # away) fall back to the identity INSTEAD of the renormalized weights
+    # (inv is zeroed, not eps-clamped, so near-zero fractional mass cannot
+    # leak a second, non-stochastic copy of the row on top of the fallback)
+    ok = tot > 1e-12
+    inv = jnp.where(ok, 1.0 / jnp.maximum(tot, 1e-12), 0.0)
+    eff = alive[:, None] * wa * inv[:, None]
+    fallback = (1.0 - alive) + alive * (1.0 - ok)
+    return eff.at[:, 0].add(fallback)
+
+
+def gated_mixing_matrix(spec: GossipSpec, gates: jax.Array | None = None,
+                        alive: jax.Array | None = None) -> jax.Array:
+    """Effective (row-stochastic) n x n mixing matrix under gates + alive.
+
+    The dense oracle for the gated/masked packed executors: rows are the
+    :func:`alive_weight_table` weights scattered to their sender columns, so
+    for 0/1 gates and masks the scalar weights match the fused kernels'
+    renormalization bit-for-bit in f32 (same op order, and 0/1 factors are
+    exact). Traceable — ``gates``/``alive`` stay step data under jit.
     """
     n = spec.n_clients
-    alive = jnp.asarray(alive, jnp.float32)
-    self_w = jnp.asarray(spec.self_weights, jnp.float32)
-    cols = [spec.edge_weight * jnp.asarray(mask, jnp.float32)
-            * jnp.take(alive, jnp.asarray(rf))
-            for rf, mask in zip(spec.recv_from, spec.live_masks)]
-    ws = (jnp.stack(cols, axis=1) if cols else jnp.zeros((n, 0), jnp.float32))
-    inv = 1.0 / jnp.maximum(self_w + ws.sum(axis=1), 1e-12)
-    w0 = alive * self_w * inv + (1.0 - alive)
-    ws = (alive * inv)[:, None] * ws
-    return jnp.concatenate([w0[:, None], ws], axis=1)
+    table = alive_weight_table(spec, alive, gates)
+    m = jnp.zeros((n, n), jnp.float32)
+    idx = jnp.arange(n)
+    m = m.at[idx, idx].set(table[:, 0])
+    for s, rf in enumerate(spec.recv_from):
+        m = m.at[idx, jnp.asarray(rf)].add(table[:, 1 + s])
+    return m
+
+
+def mix_dense_gated(tree: PyTree, spec: GossipSpec,
+                    gates: jax.Array | None = None,
+                    alive: jax.Array | None = None) -> PyTree:
+    """Dense reference for time-varying (gated) + failure-masked mixing.
+
+    The reduction is an explicit multiply-then-sum (not a dot/einsum, whose
+    FMA accumulation rounds differently), so with 0/1 gates and masks the
+    packed executors reproduce this oracle **bit-for-bit in f32 whenever a
+    row has at most two live contributors** (one-peer rotation: self + one
+    sender; the remaining terms are exact zeros and f32 addition is
+    commutative). With three or more live contributors the dense row (sender
+    order) and the packed stack (schedule order) sum in different orders and
+    may differ in the last ulp — compare with allclose there.
+    """
+    m = gated_mixing_matrix(spec, gates, alive)
+
+    def _mix(x):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        out = jnp.sum(m[:, :, None] * flat[None, :, :], axis=1)
+        return out.astype(x.dtype).reshape(x.shape)
+
+    return jax.tree.map(_mix, tree)
 
 
 def _static_weight_table(spec: GossipSpec) -> jax.Array:
@@ -228,6 +325,7 @@ def mix_schedules(tree: PyTree, spec: GossipSpec) -> PyTree:
 
 def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
                        alive: jax.Array | None = None, *,
+                       gates: jax.Array | None = None,
                        pack_spec: packing.PackSpec | None = None) -> PyTree:
     """Stacked-axis packed executor — the simulator counterpart of
     :func:`ppermute_mix_packed` and the mixing path of the elastic runtime.
@@ -240,13 +338,16 @@ def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
     :func:`mix_schedules`. With ``alive`` (a *traced* ``(n,)`` 0/1 vector)
     the reduction uses the renormalized masked weights of
     :func:`alive_weight_table`, so straggler-set changes are plain data and
-    never retrace the enclosing jit.
+    never retrace the enclosing jit; ``gates`` (a traced per-schedule float
+    vector, :mod:`repro.overlay.plan`) makes the round time-varying the same
+    way — one-peer rotation and schedule subsets are weight changes, not new
+    executables.
     """
     if pack_spec is None:
         pack_spec = packing.make_pack_spec(jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree))
-    w = (_static_weight_table(spec) if alive is None
-         else alive_weight_table(spec, alive))
+    w = (_static_weight_table(spec) if alive is None and gates is None
+         else alive_weight_table(spec, alive, gates))
     gathers = [jnp.asarray(rf) for rf in spec.recv_from]
     bufs = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
     out_bufs = []
@@ -335,42 +436,69 @@ def ppermute_mix_quantized(tree: PyTree, spec: GossipSpec,
 
 # ------------------------------------------------------- packed executors
 def _live_schedules(spec: GossipSpec):
-    """(perm pairs, recv_from, live_mask) for schedules with any exchange."""
-    return [(list(pairs), rf, mask)
-            for pairs, rf, mask in zip(spec.perms, spec.recv_from,
-                                       spec.live_masks)
+    """(schedule idx, perm pairs, recv_from, live_mask) for schedules with
+    any exchange (the index keys this schedule's entry in a gate vector)."""
+    return [(s, list(pairs), rf, mask)
+            for s, (pairs, rf, mask) in enumerate(zip(spec.perms,
+                                                      spec.recv_from,
+                                                      spec.live_masks))
             if len(pairs) > 0]
 
 
-def _local_raw_weights(spec: GossipSpec, idx: jax.Array,
-                       n_live: int) -> jax.Array:
-    """This client's *unnormalized* Chow weights (w0, c, ..., c): (d+1,)."""
-    self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
+def _local_raw_weights(spec: GossipSpec, idx: jax.Array, n_live: int,
+                       gates: jax.Array | None = None) -> jax.Array:
+    """This client's *unnormalized* Chow weights (w0, c, ..., c): (d+1,).
+
+    With ``gates``, the self weight follows the full-permutation convention:
+    each schedule's fixed-point contribution c re-scales by its gate, so
+    gating a schedule off removes it from the mixing matrix entirely.
+    """
+    if gates is None:
+        self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
+    else:
+        fixed = jnp.asarray(spec.fixed_masks_np())
+        # clamped like alive_weight_table: a gated subset of a negative-w0
+        # row projects onto the nonnegative (lazy) variant
+        self_w = jnp.maximum(
+            jnp.asarray(spec.base_self_weights_np())[idx]
+            + spec.edge_weight
+            * jnp.sum(jnp.asarray(gates, jnp.float32) * fixed[:, idx]), 0.0)
     return jnp.concatenate([
         self_w[None], jnp.full((n_live,), spec.edge_weight, jnp.float32)])
 
 
-def _local_alive_vec(spec: GossipSpec, alive: jax.Array, idx: jax.Array,
-                     live) -> jax.Array:
-    """Per-contributor alive weights for the masked fused reduction: (d+1,).
+def _local_contrib_vec(spec: GossipSpec, idx: jax.Array, live,
+                       alive: jax.Array | None,
+                       gates: jax.Array | None) -> jax.Array:
+    """Per-contributor weights for the renormalized fused reduction: (d+1,).
 
     Entry 0 is this client's own liveness; entry 1+k the k-th schedule's
-    sender liveness (zero at fixed points). Renormalization over the live
-    in-degree happens inside the fused kernel. The sender's liveness is a
-    *gather from the replicated alive vector* via the static recv_from table
-    — masking dead senders costs no extra collectives.
+    gate x sender-liveness (zero at fixed points). Renormalization over the
+    gated live in-degree happens inside the fused kernel. The sender's
+    liveness is a *gather from the replicated alive vector* via the static
+    recv_from table, and the gate a gather from the replicated gate vector —
+    neither costs extra collectives.
     """
-    alive = jnp.asarray(alive, jnp.float32)
-    srcs = [alive[jnp.asarray(rf)[idx]] * jnp.asarray(mask, jnp.float32)[idx]
-            for _, rf, mask in live]
-    return jnp.stack([alive[idx]] + srcs)
+    one = jnp.float32(1.0)
+    alive = None if alive is None else jnp.asarray(alive, jnp.float32)
+    gates = None if gates is None else jnp.asarray(gates, jnp.float32)
+    srcs = []
+    for s, _, rf, mask in live:
+        v = jnp.asarray(mask, jnp.float32)[idx]
+        if gates is not None:
+            v = gates[s] * v
+        if alive is not None:
+            v = v * alive[jnp.asarray(rf)[idx]]
+        srcs.append(v)
+    return jnp.stack([one if alive is None else alive[idx]] + srcs)
 
 
 def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
                         axis_names: str | tuple[str, ...], *,
                         pack_spec: packing.PackSpec | None = None,
                         mix_impl: str = "auto",
-                        alive: jax.Array | None = None) -> PyTree:
+                        alive: jax.Array | None = None,
+                        gates: jax.Array | None = None) -> PyTree:
     """Packed production gossip: d collectives/round, one fused HBM reduction.
 
     The client-local pytree packs into one lane-aligned flat buffer per dtype
@@ -390,6 +518,15 @@ def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
     its own parameters. Because ``alive`` is data, straggler churn never
     retraces the step.
 
+    ``gates`` (a traced, replicated per-schedule float vector,
+    :mod:`repro.overlay.plan`) makes the round *time-varying* through the
+    identical mechanism: each schedule's contributor weight scales by its
+    gate before the in-kernel renormalization, so one-peer rotation,
+    schedule subsets, and throttled rounds reuse this one executable with
+    zero retraces. All d ppermutes still run — a gated-off schedule's
+    payload lands with weight exactly 0 — keeping liveness AND the round
+    plan out of trace structure.
+
     Pass ``pack_spec`` (built host-side from shape structs) to bake the
     layout into the jitted step; it is derived from ``tree`` otherwise.
     """
@@ -399,10 +536,10 @@ def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
         pack_spec = packing.make_pack_spec(tree)
     idx = _client_index(axis_names)
     live = _live_schedules(spec)
-    perms = [p for p, _, _ in live]
-    weights = _local_raw_weights(spec, idx, len(perms))
-    alive_vec = (None if alive is None
-                 else _local_alive_vec(spec, alive, idx, live))
+    perms = [p for _, p, _, _ in live]
+    weights = _local_raw_weights(spec, idx, len(perms), gates)
+    alive_vec = (None if alive is None and gates is None
+                 else _local_contrib_vec(spec, idx, live, alive, gates))
 
     out_bufs = []
     for buf in packing.pack_tree(tree, pack_spec):
@@ -419,53 +556,64 @@ def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
                                   axis_names: str | tuple[str, ...], *,
                                   pack_spec: packing.PackSpec | None = None,
                                   impl: str = "auto",
-                                  alive: jax.Array | None = None) -> PyTree:
+                                  alive: jax.Array | None = None,
+                                  gates: jax.Array | None = None) -> PyTree:
     """Packed gossip with int8 wire payloads (4x/2x fewer ICI bytes).
 
-    The packed buffer quantizes once through the Pallas ``quantize_2d`` kernel
-    (per-buffer symmetric scale); each schedule permutes the int8 buffer + its
-    f32 scale, and every received payload folds into the accumulator through
-    the fused ``dequant_accumulate_2d`` kernel (dequant + scale + add in one
-    HBM pass per neighbor). The local term stays full precision, so the int8
-    error only enters through the (small) edge weights. Note the scale is
-    per-buffer rather than per-leaf, so the error bound is governed by the
-    buffer-wide amax; and each schedule ships *two* collectives (int8 buffer
-    + its 4-byte f32 scale), i.e. 2d per round — still leaf-count-independent,
-    but folding the scale into the shipped buffer is an open follow-up.
+    The packed buffer quantizes once through the Pallas ``quantize_2d``
+    kernel (per-buffer symmetric scale), and the 4-byte f32 scale is
+    **folded into the shipped int8 buffer** as one trailing lane row
+    (:func:`~repro.kernels.quant_gossip.ops.fold_scale_into_wire`), so each
+    schedule ships exactly **one** collective — d per round, down from the
+    2d payload+scale pairs this path used to issue. Every received wire
+    buffer splits back into (int8 payload, scale) with one static slice and
+    folds into the accumulator through the fused ``dequant_accumulate_2d``
+    kernel (dequant + scale + add in one HBM pass per neighbor). The local
+    term stays full precision, so the int8 error only enters through the
+    (small) edge weights. Note the scale is per-buffer rather than
+    per-leaf, so the error bound is governed by the buffer-wide amax.
 
-    ``alive`` has :func:`mix_dense_masked` semantics, as in
+    ``alive`` has :func:`mix_dense_masked` semantics and ``gates``
+    (per-schedule floats) the time-varying semantics, both exactly as in
     :func:`ppermute_mix_packed`: the renormalizing denominator is a handful
     of scalar ops, the self term is rescaled up front, and each sender's
-    (renormalized) alive weight rides into its fused dequant-accumulate pass
-    — the masked round does the same HBM traffic as the unmasked one.
+    renormalized gate x alive weight rides into its fused
+    dequant-accumulate pass — masked or gated rounds do the same HBM
+    traffic as plain ones.
     """
     from repro.kernels.quant_gossip import ops as qops
 
     if pack_spec is None:
         pack_spec = packing.make_pack_spec(tree)
     idx = _client_index(axis_names)
-    self_w = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
     live = _live_schedules(spec)
-    perms = [p for p, _, _ in live]
+    perms = [p for _, p, _, _ in live]
     c = float(spec.edge_weight)
-    if alive is None:
-        self_scale = self_w
+    if alive is None and gates is None:
+        self_scale = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
         recv_alive = [None] * len(perms)
     else:
-        alive_vec = _local_alive_vec(spec, alive, idx, live)
-        a_self, src_a = alive_vec[0], alive_vec[1:]
-        inv = 1.0 / jnp.maximum(self_w + c * jnp.sum(src_a), 1e-12)
-        self_scale = a_self * self_w * inv + (1.0 - a_self)
+        self_w = _local_raw_weights(spec, idx, 0, gates)[0]
+        contrib = _local_contrib_vec(spec, idx, live, alive, gates)
+        a_self, src_a = contrib[0], contrib[1:]
+        wa0 = self_w * a_self
+        tot = wa0 + c * jnp.sum(src_a)
+        # no renormalizable mass => identity row REPLACES the renormalized
+        # term (inv zeroed, so tiny fractional mass cannot double-count)
+        ok = (tot > 1e-12).astype(jnp.float32)
+        inv = ok / jnp.maximum(tot, 1e-12)
+        self_scale = a_self * wa0 * inv + (1.0 - a_self) + a_self * (1.0 - ok)
         recv_alive = [a_self * src_a[k] * inv for k in range(len(perms))]
 
     out_bufs = []
     for buf in packing.pack_tree(tree, pack_spec):
         q, scale = qops.quantize_packed(buf, block_rows=pack_spec.block_rows,
                                         impl=impl)
+        wire = qops.fold_scale_into_wire(q, scale)
         acc = self_scale.astype(buf.dtype) * buf
         for p, a in zip(perms, recv_alive):
-            rq = jax.lax.ppermute(q, axis_names, perm=p)
-            rs = jax.lax.ppermute(scale, axis_names, perm=p)
+            rq, rs = qops.split_wire(jax.lax.ppermute(wire, axis_names,
+                                                      perm=p))
             acc = qops.dequant_accumulate_packed(
                 rq, rs, c, acc, a, block_rows=pack_spec.block_rows, impl=impl)
         out_bufs.append(acc)

@@ -56,10 +56,15 @@ def _mix_alive_kernel(x_ref, w_ref, a_ref, o_ref):
     """
     x = x_ref[...]
     wa = w_ref[...].astype(jnp.float32) * a_ref[...].astype(jnp.float32)
-    inv = 1.0 / jnp.maximum(jnp.sum(wa), 1e-12)
+    tot = jnp.sum(wa)
+    # no renormalizable mass (all contributors gated/masked away) => the
+    # identity fallback REPLACES the renormalized term: inv is zeroed so
+    # tiny fractional mass cannot add a second copy of the row
+    ok = (tot > 1e-12).astype(jnp.float32)
+    inv = ok / jnp.maximum(tot, 1e-12)
     a_self = a_ref[0, 0].astype(jnp.float32)
-    # dead self => identity row: weight 1 on x[0], 0 elsewhere
-    eff0 = a_self * wa[0, 0] * inv + (1.0 - a_self)
+    # dead self => identity row (weight 1 on x[0], 0 elsewhere)
+    eff0 = a_self * wa[0, 0] * inv + (1.0 - a_self) + a_self * (1.0 - ok)
     acc = eff0 * x[0].astype(jnp.float32)
     for k in range(1, x.shape[0]):  # K is small (d+1), unrolled on the VPU
         acc = acc + (a_self * wa[k, 0] * inv) * x[k].astype(jnp.float32)

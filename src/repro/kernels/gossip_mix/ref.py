@@ -17,9 +17,13 @@ def gossip_mix(stack: jax.Array, weights: jax.Array,
         w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (stack.ndim - 1))
         return jnp.sum(w * stack.astype(jnp.float32), axis=0).astype(stack.dtype)
     wa = weights.astype(jnp.float32) * alive.astype(jnp.float32)
-    inv = 1.0 / jnp.maximum(jnp.sum(wa), 1e-12)
+    tot = jnp.sum(wa)
+    # no renormalizable mass => identity fallback REPLACES the renormalized
+    # term (inv zeroed, so tiny fractional mass cannot double-count)
+    ok = tot > 1e-12
+    inv = jnp.where(ok, 1.0 / jnp.maximum(tot, 1e-12), 0.0)
     a_self = alive.astype(jnp.float32)[0]
     eff = a_self * wa * inv
-    eff = eff.at[0].add(1.0 - a_self)
+    eff = eff.at[0].add((1.0 - a_self) + a_self * (1.0 - ok))
     w = eff.reshape((-1,) + (1,) * (stack.ndim - 1))
     return jnp.sum(w * stack.astype(jnp.float32), axis=0).astype(stack.dtype)

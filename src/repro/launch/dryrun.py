@@ -60,7 +60,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             lowered = setup.step_fn.lower(
                 params_lib.shape_structs(setup.param_struct),
                 setup.input_specs["batch"], setup.input_specs["lr"],
-                setup.input_specs["alive"])
+                setup.input_specs["alive"], setup.input_specs["gates"])
             extra = {
                 "n_clients": setup.n_clients,
                 "overlay": setup.overlay.name if setup.overlay else None,
@@ -70,6 +70,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                                   if setup.gossip_spec else None),
                 "gossip_impl": par.gossip_impl,
             }
+            if setup.pack_spec is not None:
+                # packed-padding overhead of the per-device gossip buffers
+                # (ROADMAP follow-up: smoke models pad ~17%, real archs
+                # should be <<1%)
+                extra["packing"] = analysis.packing_report(setup.pack_spec)
         else:
             setup = steps.build_serve_step(cfg, shape, mesh)
             lowered = setup.step_fn.lower(

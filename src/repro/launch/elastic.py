@@ -26,11 +26,20 @@ fresh `jax.jit` trace per straggler-set change, i.e. potentially per round.
 Passing the mask as data moves the renormalization into the (already fused)
 mixing reduction, whose cost is a handful of scalar ops per tile.
 
+Time-varying overlays ride the identical mechanism: an optional
+:class:`repro.overlay.plan.RoundPlan` supplies a per-schedule gate vector
+each round (one-peer rotation, random subsets, throttling), shipped as a
+second data argument next to ``alive`` and folded into the same fused
+renormalization — so the *topology of the round* changes every round with
+zero recompiles, and gates compose transparently with straggler masking and
+splice repair (plans are stateless in the round index, so a repair that
+changes the schedule count needs no plan surgery).
+
 The default step builder runs the stacked simulator round
 (`gossip.mix_packed_stacked`: vmapped local DFedAvgM + packed gather-mix on
 one device); pass ``step_builder`` to drop in the production shard_map step
 (`launch.steps.build_train_step` has the same ``(params, batches, lr,
-alive)`` calling convention).
+alive, gates)`` calling convention).
 """
 from __future__ import annotations
 
@@ -44,10 +53,17 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core import dfedavg, failures as failures_lib, gossip as gossip_lib
 from repro.core.topology import Overlay
+from repro.overlay import plan as plan_lib
+from repro.overlay.plan import RoundPlan
 
 PyTree = Any
 
-# (spec, trainer) -> round_fn(params, batches, lr, alive) -> (params, losses)
+# (spec, trainer) -> round_fn(params, batches, lr, alive, gates)
+#                       -> (params, losses)
+# NOTE for production wrappers around launch.steps.build_train_step: that
+# builder decides gate engagement from DFLConfig.round_plan at trace time,
+# so the config's round_plan must name the same plan family as
+# ``trainer.plan`` — a "static" config silently ignores the shipped gates.
 StepBuilder = Callable[[gossip_lib.GossipSpec, "ElasticTrainer"], Callable]
 
 
@@ -60,12 +76,14 @@ class ElasticTrainer:
     straggler_rounds: int = 1
     failure_rounds: int = 3
     step_builder: StepBuilder | None = None
+    plan: RoundPlan | None = None  # time-varying round plan (gate source)
 
     def __post_init__(self):
         self.health = failures_lib.HealthTracker(
             self.overlay.n, self.straggler_rounds, self.failure_rounds)
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         self.n_traces = 0          # jit traces of the round fn (see step())
+        self.round_no = 0          # round index feeding the plan's gates
         self.repairs: list[dict] = []
         self._round = self._build(self.spec)
 
@@ -73,13 +91,21 @@ class ElasticTrainer:
         """One jitted round: vmapped local DFedAvgM + packed masked gossip.
 
         Called exactly once per membership (the spec is baked in as a
-        static closure); the alive mask is a traced argument, so every
-        straggler pattern reuses the same executable.
+        static closure); the alive mask and the round plan's gates are
+        traced arguments, so every straggler pattern and every per-round
+        topology (one-peer rotation, subsets, throttling) reuses the same
+        executable.
         """
         if self.step_builder is not None:
             return self.step_builder(spec, self)
+        # build-time decision: without an active plan (None or static) the
+        # gate pathway is OFF so a plain run keeps the exact (possibly
+        # negative-w0) Chow weights of the PR-1/PR-2 engine; with a real
+        # plan, gates are traced data. plan_lib.is_active is the one shared
+        # predicate — it matches steps.py's `round_plan != "static"` rule
+        use_plan = plan_lib.is_active(self.plan)
 
-        def round_fn(params, batches, lr, alive):
+        def round_fn(params, batches, lr, alive, gates):
             self.n_traces += 1  # python side effect: runs only when tracing
             def client(p, b):
                 v = jax.tree.map(jnp.zeros_like, p)
@@ -87,8 +113,16 @@ class ElasticTrainer:
                                                  self.dcfg, lr=lr)
                 return p, loss
             params, losses = jax.vmap(client)(params, batches)
-            return gossip_lib.mix_packed_stacked(params, spec, alive), losses
+            mixed = gossip_lib.mix_packed_stacked(
+                params, spec, alive, gates=gates if use_plan else None)
+            return mixed, losses
         return jax.jit(round_fn)
+
+    def gates_for_round(self, rnd: int | None = None) -> jax.Array:
+        """This round's per-schedule gate vector (all-ones without a plan)."""
+        rnd = self.round_no if rnd is None else rnd
+        return jnp.asarray(plan_lib.gates_for(self.plan, rnd,
+                                              self.spec.degree))
 
     @property
     def n_clients(self) -> int:
@@ -134,10 +168,13 @@ class ElasticTrainer:
         return params, client_state, old2new
 
     def step(self, params: PyTree, batches: PyTree, lr: float):
-        """Run one round under the current health mask (no rebuilds here)."""
+        """Run one round under the current health mask and the round plan's
+        gates (no rebuilds here — both are data arguments)."""
         alive = jnp.asarray(self.health.alive_mask())
+        gates = self.gates_for_round()
+        self.round_no += 1
         return self._round(params, batches, jnp.asarray(lr, jnp.float32),
-                           alive)
+                           alive, gates)
 
     def checkpoint(self, rnd: int, params: PyTree) -> None:
         if self.ckpt is not None:

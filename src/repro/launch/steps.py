@@ -16,15 +16,19 @@ This is where the paper's technique meets the device grid:
   `"dense"` is the paper-naive dense mixing einsum (the §Perf baseline).
 
   The train step takes a per-client ``alive`` 0/1 vector as its **fourth,
-  donated argument** — a replicated (n_clients,) f32 array threaded into the
-  gossip island as plain data. On the packed paths (and the dense reference)
-  dead senders are masked out of the reduction and survivors renormalize
-  over their live in-degree (`mix_dense_masked` semantics), so transient
-  stragglers cost **zero recompiles**: the round's liveness is a step
-  argument, never baked into the traced graph. Only membership *changes*
-  (splice repair rebuilding the overlay) re-jit. The per-leaf ppermute
-  baselines ignore the mask — the packed engine is the only
-  failure-handling path (see `core/failures.py`).
+  donated argument** and a per-schedule ``gates`` float vector (the
+  time-varying round plan, `repro.overlay.plan`) as its **fifth, donated
+  argument** — replicated f32 arrays threaded into the gossip island as
+  plain data. On the packed paths (and the dense reference) dead senders
+  and gated-off schedules are masked out of the reduction and survivors
+  renormalize over their gated live in-degree (`mix_dense_gated`
+  semantics), so transient stragglers AND round-plan changes (one-peer
+  rotation, schedule subsets, throttling) cost **zero recompiles**: the
+  round's liveness and topology-of-the-round are step arguments, never
+  baked into the traced graph. Only membership *changes* (splice repair
+  rebuilding the overlay) re-jit. The per-leaf ppermute baselines ignore
+  both — the packed engine is the only failure/plan-handling path (see
+  `core/failures.py`, `repro.overlay`).
 * **serve steps** (prefill / decode) run on the raw production mesh with
   TP ("model") x batch-DP ("data"/"pod") and sequence-sharded KV caches.
 
@@ -77,7 +81,10 @@ def add_client_axis(struct: PyTree, n: int) -> PyTree:
 
 
 def build_overlay(n: int, dfl: DFLConfig) -> topology.Overlay | None:
-    """Overlay for `n` clients; degenerate sizes handled explicitly."""
+    """Overlay for `n` clients from the graph-family registry
+    (:mod:`repro.overlay.registry`); degenerate sizes handled explicitly."""
+    from repro.overlay import registry as overlay_registry
+
     if n < 2:
         return None
     if n == 2:
@@ -85,30 +92,30 @@ def build_overlay(n: int, dfl: DFLConfig) -> topology.Overlay | None:
             n=2, schedules=[np.array([1, 0])], name="pair")
     if dfl.topology == "ring" or n == 3:
         return topology.ring_overlay(n)
-    if dfl.topology == "complete":
-        # complete graph as n-1 cyclic-shift schedules (all-to-all form)
-        scheds = [np.roll(np.arange(n), -k) for k in range(1, n)]
-        return topology.Overlay(n=n, schedules=scheds, name="complete")
     d = min(dfl.degree, n - 1)
-    if d % 2 == 1 and n % 2 == 1:
-        d = max(2, d - 1)
-    return topology.expander_overlay(n, d, seed=dfl.seed)
+    if dfl.topology == "expander" and d % 2 == 1 and n % 2 == 1:
+        d = max(2, d - 1)  # odd degree needs a perfect matching (even n)
+    overlay, _meta = overlay_registry.build(dfl.topology, n, degree=d,
+                                            seed=dfl.seed)
+    return overlay
 
 
 # ------------------------------------------------------------ train round
 @dataclasses.dataclass(frozen=True)
 class TrainSetup:
-    # jitted (params, batch, lr, alive) -> (params, metrics); params and the
-    # (n_clients,) f32 alive vector are DONATED — ship a fresh mask per round
+    # jitted (params, batch, lr, alive, gates) -> (params, metrics); params,
+    # the (n_clients,) f32 alive vector, and the (n_schedules,) f32 gate
+    # vector are DONATED — ship a fresh mask + round-plan gates per round
     step_fn: Any
     param_specs: PyTree            # PartitionSpecs (client-stacked)
     param_struct: PyTree           # Leaf pytree (client-stacked)
-    input_specs: dict              # ShapeDtypeStructs for (batch, lr, alive)
+    input_specs: dict              # ShapeDtypeStructs: batch, lr, alive, gates
     in_shardings: Any
     overlay: topology.Overlay | None
     gossip_spec: gossip_lib.GossipSpec | None
     dfl_mesh: Mesh
     n_clients: int
+    pack_spec: packing_lib.PackSpec | None = None  # packed-gossip layout
 
 
 def _train_rules(caxes: tuple[str, ...], zero3: bool = True) -> dict:
@@ -144,7 +151,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     gspec = gossip_spec_override
     if gspec is None and overlay is not None:
         gspec = gossip_lib.make_gossip_spec(overlay)
-    mix_mat = overlay.mixing_matrix() if overlay is not None else None
+    n_sched = gspec.degree if gspec is not None else 0
 
     # ---- parameter structure + sharding
     struct1 = api.param_struct()
@@ -208,11 +215,29 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         pack_spec = packing_lib.make_pack_spec(
             local_shard_structs(struct, pspecs, dmesh))
 
-    def gossip_fn(params, alive):
+    # build-time decision: the gate pathway only engages when the config
+    # names a real round plan. A static run keeps the exact (possibly
+    # negative-w0) Chow weights of the plain engine — gating with all-ones
+    # would clamp those rows to the lazy variant and silently change
+    # numerics (the gates argument is still accepted and simply unused).
+    # The name is validated so a typo errors instead of silently flipping
+    # the gate semantics; this rule must agree with plan_lib.is_active
+    # (see launch/elastic.py's StepBuilder note).
+    from repro.overlay import plan as plan_lib
+    if dfl.round_plan not in plan_lib.PLAN_NAMES:
+        raise ValueError(f"unknown round_plan {dfl.round_plan!r}; "
+                         f"available: {', '.join(plan_lib.PLAN_NAMES)}")
+    use_gates = dfl.round_plan != "static"
+
+    def gossip_fn(params, alive, gates):
         if gspec is None or overlay is None:
             return params
         if par.gossip_impl == "dense":
-            return gossip_lib.mix_dense_masked(params, mix_mat, alive)
+            # paper-naive dense baseline, on the gated+masked effective
+            # matrix (gates/alive are traced data here too)
+            return gossip_lib.mix_dense(
+                params, gossip_lib.gated_mixing_matrix(
+                    gspec, gates if use_gates else None, alive))
 
         packed = par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant")
         if par.gossip_impl == "ppermute_packed":
@@ -227,16 +252,19 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             mixer = gossip_lib.ppermute_mix
         axis = caxes if len(caxes) > 1 else caxes[0]
 
-        def body(p, alive_vec):
+        def body(p, alive_vec, gate_vec):
             local = jax.tree.map(lambda x: x[0], p)       # client-local shard
-            # alive rides into the island replicated; only the packed
-            # executors are failure-aware (per-leaf baselines ignore it)
-            mixed = (mixer(local, gspec, axis, alive=alive_vec) if packed
+            # alive + round-plan gates ride into the island replicated; only
+            # the packed executors are failure/plan-aware (per-leaf
+            # baselines ignore both, and a static config drops the gate
+            # pathway at trace time)
+            mixed = (mixer(local, gspec, axis, alive=alive_vec,
+                           gates=gate_vec if use_gates else None) if packed
                      else mixer(local, gspec, axis))
             return jax.tree.map(lambda x: x[None], mixed)
 
-        return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P()),
-                                  out_specs=pspecs)(params, alive)
+        return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P(), P()),
+                                  out_specs=pspecs)(params, alive, gates)
 
     # activation constraints visible inside the vmapped client round
     act_rules = {}
@@ -260,13 +288,13 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             act_rules["expert_weights"] = NamedSharding(dmesh, P(None, None, "tp"))
             act_rules["expert_weights_t"] = NamedSharding(dmesh, P(None, "tp", None))
 
-    def train_step(params, batch, lr, alive):
+    def train_step(params, batch, lr, alive, gates):
         with activation_sharding(act_rules):
             # spmd_axis_name threads the client mesh axes through every
             # sharding constraint inside the vmapped round
             params, loss = jax.vmap(client_round, in_axes=(0, 0, None),
                                     spmd_axis_name=caxes)(params, batch, lr)
-            params = gossip_fn(params, alive)
+            params = gossip_fn(params, alive, gates)
         return params, {"loss": jnp.mean(loss)}
 
     in_shardings = (
@@ -274,24 +302,27 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         jax.tree.map(lambda s: NamedSharding(dmesh, s), batch_pspec),
         NamedSharding(dmesh, P()),
         NamedSharding(dmesh, P()),
+        NamedSharding(dmesh, P()),
     )
     out_shardings = (
         jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
         NamedSharding(dmesh, P()),
     )
-    # alive (argnum 3) is donated with the params: each round ships a fresh
-    # liveness vector and the previous one is dead weight. Consequence:
-    # callers must NOT reuse a cached device array across rounds (it is
-    # consumed); build the mask per round (ElasticTrainer does)
+    # alive (argnum 3) and the round-plan gates (argnum 4) are donated with
+    # the params: each round ships a fresh liveness vector + gate vector and
+    # the previous ones are dead weight. Consequence: callers must NOT
+    # reuse a cached device array across rounds (it is consumed); build the
+    # mask/gates per round (ElasticTrainer does)
     step = jax.jit(train_step, in_shardings=in_shardings,
-                   out_shardings=out_shardings, donate_argnums=(0, 3))
+                   out_shardings=out_shardings, donate_argnums=(0, 3, 4))
     return TrainSetup(
         step_fn=step, param_specs=pspecs, param_struct=struct,
         input_specs={"batch": batch_specs,
                      "lr": jax.ShapeDtypeStruct((), jnp.float32),
-                     "alive": jax.ShapeDtypeStruct((n_cl,), jnp.float32)},
+                     "alive": jax.ShapeDtypeStruct((n_cl,), jnp.float32),
+                     "gates": jax.ShapeDtypeStruct((n_sched,), jnp.float32)},
         in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
-        dfl_mesh=dmesh, n_clients=n_cl)
+        dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec)
 
 
 # ------------------------------------------------------------- serve steps

@@ -30,6 +30,7 @@ from repro.core.topology import Overlay
 from repro.launch.steps import build_overlay
 from repro.models import lstm as lstm_model
 from repro.models import params as params_lib
+from repro.overlay import plan as overlay_plan
 
 PyTree = Any
 
@@ -42,6 +43,7 @@ class SimTrainer:
     loss_fn: Callable
     dcfg: dfedavg.DFedAvgMConfig
     ckpt: CheckpointManager | None = None
+    plan: overlay_plan.RoundPlan | None = None  # time-varying gates source
 
     def __post_init__(self):
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
@@ -49,8 +51,12 @@ class SimTrainer:
         self._round_fn = self._build(self.spec)
 
     def _build(self, spec):
+        # no active plan (None or static) => gate pathway off at build time
+        # (exact Chow weights; shared predicate with ElasticTrainer/steps.py)
+        use_plan = overlay_plan.is_active(self.plan)
+
         @partial(jax.jit, static_argnames=())
-        def round_fn(params, batches, lr, alive):
+        def round_fn(params, batches, lr, alive, gates):
             def client(p, b):
                 v = jax.tree.map(jnp.zeros_like, p)
                 p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
@@ -58,9 +64,14 @@ class SimTrainer:
                 return p, loss
 
             params, losses = jax.vmap(client)(params, batches)
-            params = gossip_lib.mix_packed_stacked(params, spec, alive)
+            params = gossip_lib.mix_packed_stacked(
+                params, spec, alive, gates=gates if use_plan else None)
             return params, losses
         return round_fn
+
+    def _gates(self, rnd: int) -> jnp.ndarray:
+        return jnp.asarray(overlay_plan.gates_for(self.plan, rnd,
+                                                  self.spec.degree))
 
     # ---------------------------------------------------------- failures
     def set_stragglers(self, alive_mask: np.ndarray) -> None:
@@ -100,7 +111,8 @@ class SimTrainer:
             batches = batch_fn(rnd)
             params, losses = self._round_fn(params, batches,
                                             jnp.asarray(lr_fn(rnd), jnp.float32),
-                                            jnp.asarray(self._alive))
+                                            jnp.asarray(self._alive),
+                                            self._gates(rnd))
             rec = {"round": rnd,
                    "train_loss": float(jnp.mean(losses)),
                    "seconds": round(time.time() - t0, 3)}
@@ -115,8 +127,8 @@ class SimTrainer:
 # --------------------------------------------------------------- char-LM app
 def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 local_steps=3, batch=8, seq=64, lr=0.5, momentum=0.9,
-                ckpt_dir=None, seed=0, drop_fraction=0.0, drop_round=10
-                ) -> list[dict]:
+                ckpt_dir=None, seed=0, drop_fraction=0.0, drop_round=10,
+                round_plan="static") -> list[dict]:
     from repro.data import federated, pipeline, shakespeare
 
     toks, vocab = shakespeare.corpus()
@@ -131,13 +143,17 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
         jnp.arange(n_clients))
     del one
 
-    dfl = DFLConfig(topology=topology, degree=degree, seed=seed)
+    dfl = DFLConfig(topology=topology, degree=degree, seed=seed,
+                    round_plan=round_plan)
     overlay = build_overlay(n_clients, dfl)
     dcfg = dfedavg.DFedAvgMConfig(local_steps=local_steps, lr=lr,
                                   momentum=momentum)
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    # a "static" plan is inert (is_active: gate pathway stays off)
+    plan = overlay_plan.make_plan(dfl.round_plan, k=dfl.plan_k,
+                                  fraction=dfl.plan_fraction, seed=seed)
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
-                         dcfg=dcfg, ckpt=ckpt)
+                         dcfg=dcfg, ckpt=ckpt, plan=plan)
 
     # held-out evaluation: last 10% of the corpus
     ev = pipeline.TokenBatcher(tokens=toks, spans=[(int(len(toks) * .9),
@@ -181,8 +197,14 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--topology", default="expander",
-                    choices=["expander", "ring", "complete"])
+                    help="any family in repro.overlay.registry "
+                         "(expander, ring, complete, torus, hypercube, "
+                         "random_regular, onepeer_exp, erdos_renyi)")
     ap.add_argument("--degree", type=int, default=4)
+    ap.add_argument("--plan", default="static",
+                    choices=["static", "one_peer", "random_subset",
+                             "throttle"],
+                    help="time-varying round plan (gates-as-data)")
     ap.add_argument("--local-steps", type=int, default=3)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
@@ -194,7 +216,8 @@ def main() -> None:
                        topology=args.topology, degree=args.degree,
                        local_steps=args.local_steps, lr=args.lr,
                        ckpt_dir=args.ckpt_dir,
-                       drop_fraction=args.drop_fraction)
+                       drop_fraction=args.drop_fraction,
+                       round_plan=args.plan)
     for rec in hist:
         print(json.dumps(rec))
     if args.out:

@@ -1,0 +1,27 @@
+"""Overlay lab: graph families, graph -> overlay conversion, round plans.
+
+The paper's contribution is the overlay itself; this package makes it a
+first-class, sweepable subsystem on top of the packed gossip engine:
+
+* :mod:`repro.overlay.registry` — named graph families (ring, torus,
+  hypercube, random d-regular, one-peer exponential, Erdos-Renyi, complete,
+  the paper's §4 expander), each returning an
+  :class:`~repro.core.topology.Overlay` plus a comparison metadata record.
+* :mod:`repro.overlay.convert` — the §4 "arbitrary given graph" pathway:
+  Misra-Gries edge coloring (+ Euler-tour splitting for high degrees) turns
+  any connected adjacency matrix into <= Delta+1 permutation schedules the
+  packed engine executes directly.
+* :mod:`repro.overlay.plan` — time-varying round plans: per-schedule gate
+  vectors shipped as donated step data (one-peer rotation, random subsets,
+  bandwidth throttling) with zero retraces across rounds.
+"""
+from repro.overlay.convert import overlay_from_adjacency  # noqa: F401
+from repro.overlay.plan import (  # noqa: F401
+    OnePeerPlan,
+    RandomSubsetPlan,
+    RoundPlan,
+    StaticPlan,
+    ThrottlePlan,
+    make_plan,
+)
+from repro.overlay.registry import build, names, overlay_meta  # noqa: F401

@@ -1,0 +1,260 @@
+"""Graph -> Overlay conversion (paper §4: "an arbitrary given graph").
+
+The packed gossip engine executes *permutation schedules* (one
+``lax.ppermute`` each), not adjacency matrices. This module turns any
+connected simple graph into that form by decomposing its edge set into
+matchings, each of which is an involution schedule (``s[u] = v, s[v] = u``
+for every colored edge, fixed points elsewhere):
+
+* **edge coloring** (`misra_gries_edge_coloring`): the Misra-Gries
+  constructive proof of Vizing's theorem colors the edges of a graph with
+  maximum degree Delta using at most **Delta + 1** colors in O(V*E). Each
+  color class is a matching, so an arbitrary graph becomes at most
+  Delta + 1 schedules — within one of the information-theoretic floor
+  (a matching covers each node at most once, so Delta schedules are
+  necessary).
+* **Euler-tour splitting** (`euler_split`): for high-degree graphs the
+  O(V*E) fan/path recoloring gets slow, so `overlay_from_adjacency` first
+  halves the graph recursively along Euler circuits (Gabow's divide step:
+  walking an Euler circuit and assigning edges alternately to the two
+  halves splits every vertex degree as evenly as possible), colors the
+  low-degree leaves, and concatenates — a few extra colors
+  (<= Delta + O(log Delta)) for a near-linear-time decomposition.
+
+The resulting :class:`~repro.core.topology.Overlay` reproduces the input
+exactly: ``overlay.multigraph_adjacency() == adj`` (each edge lands in
+exactly one matching), and every schedule is its own inverse, so the
+schedule set is trivially closed under inverse as `Overlay` requires.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import spectral
+from repro.core.topology import Overlay
+
+__all__ = [
+    "misra_gries_edge_coloring",
+    "euler_split",
+    "matchings_to_schedules",
+    "overlay_from_adjacency",
+]
+
+
+def _validate_adjacency(adj: np.ndarray) -> np.ndarray:
+    adj = np.asarray(adj)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if not np.array_equal(adj, adj.T):
+        raise ValueError("adjacency must be symmetric (undirected graph)")
+    if np.any(np.diag(adj) != 0):
+        raise ValueError("adjacency must have zero diagonal (no self-loops)")
+    if not np.isin(adj, (0, 1)).all():
+        raise ValueError("adjacency must be 0/1 (simple graph)")
+    return adj.astype(np.int64)
+
+
+def misra_gries_edge_coloring(adj: np.ndarray) -> list[dict[int, int]]:
+    """Proper edge coloring with <= max_degree + 1 colors (Vizing bound).
+
+    Returns one ``{u: v, v: u}`` matching dict per color (empty classes
+    dropped). Misra & Gries (1992): color edges one at a time; when the
+    obvious color is taken, rotate a *maximal fan* of colored edges around
+    one endpoint and invert an alternating *cd-path* to free it up.
+    """
+    adj = _validate_adjacency(adj)
+    n = adj.shape[0]
+    max_deg = int(adj.sum(axis=1).max()) if n else 0
+    n_colors = max_deg + 1
+    # color[u][v] = color of edge {u,v} (or -1); by_color[u][c] = partner of
+    # u on color c (or -1). Both views kept in sync for O(1) queries.
+    color = -np.ones((n, n), dtype=np.int64)
+    by_color = -np.ones((n, n_colors + 1), dtype=np.int64)
+
+    def set_color(u: int, v: int, c: int) -> None:
+        old = color[u, v]
+        if old >= 0:
+            by_color[u, old] = -1
+            by_color[v, old] = -1
+        color[u, v] = color[v, u] = c
+        by_color[u, c] = v
+        by_color[v, c] = u
+
+    def free_color(u: int) -> int:
+        return int(np.argmin(by_color[u, :n_colors] >= 0))
+
+    us, vs = np.nonzero(np.triu(adj, k=1))
+    for u, v in zip(us.tolist(), vs.tolist()):
+        # maximal fan of u starting at v: distinct colored neighbors
+        # f_0=v, f_1, ... where color(u, f_{i+1}) is free on f_i
+        fan = [v]
+        in_fan = {v}
+        candidates = [w for w in np.nonzero(adj[u])[0].tolist()
+                      if color[u, w] >= 0]
+        grew = True
+        while grew:
+            grew = False
+            last = fan[-1]
+            for w in candidates:
+                if w not in in_fan and by_color[last, color[u, w]] < 0:
+                    fan.append(w)
+                    in_fan.add(w)
+                    grew = True
+                    break
+        c = free_color(u)
+        d = free_color(fan[-1])
+        if by_color[u, d] >= 0:
+            # invert the cd-path through u (edges alternate d, c, d, ...);
+            # path is simple because each vertex has <= 1 edge per color
+            x, col = u, d
+            path: list[tuple[int, int]] = []
+            while by_color[x, col] >= 0:
+                y = int(by_color[x, col])
+                path.append((x, y))
+                x, col = y, (c if col == d else d)
+                assert len(path) <= n, "cd-path cycled: coloring corrupt"
+            # swap c <-> d along the path: clear first, then reassign —
+            # flipping in place would transiently duplicate a color at the
+            # shared vertex of consecutive path edges and corrupt by_color
+            flipped = [d if int(color[x, y]) == c else c for x, y in path]
+            for x, y in path:
+                old = int(color[x, y])
+                by_color[x, old] = -1
+                by_color[y, old] = -1
+                color[x, y] = color[y, x] = -1
+            for (x, y), col in zip(path, flipped):
+                set_color(x, y, col)
+        # after the inversion d is free on u; rotate the shortest fan
+        # prefix that (a) is still a fan under the post-inversion coloring
+        # and (b) ends at a vertex with d free, then color its edge d
+        w_idx = None
+        for i, w in enumerate(fan):
+            if i > 0:
+                col = int(color[u, fan[i]])
+                if col < 0 or by_color[fan[i - 1], col] >= 0:
+                    break  # inversion broke the fan beyond this prefix
+            if by_color[w, d] < 0:
+                w_idx = i
+                break
+        assert w_idx is not None, "Misra-Gries lemma violated"
+        # rotate: shift each fan edge's color down one position. Snapshot the
+        # new colors and clear the old ones first — assigning in place would
+        # transiently duplicate a color at u and corrupt the by_color view.
+        shifted = [int(color[u, fan[i + 1]]) for i in range(w_idx)]
+        for i in range(w_idx + 1):
+            old = int(color[u, fan[i]])
+            if old >= 0:
+                by_color[u, old] = -1
+                by_color[fan[i], old] = -1
+                color[u, fan[i]] = color[fan[i], u] = -1
+        for i in range(w_idx):
+            set_color(u, fan[i], shifted[i])
+        set_color(u, fan[w_idx], d)
+
+    matchings: list[dict[int, int]] = [dict() for _ in range(n_colors)]
+    for u, v in zip(us.tolist(), vs.tolist()):
+        c = int(color[u, v])
+        assert 0 <= c < n_colors and u not in matchings[c] \
+            and v not in matchings[c], "edge coloring invariant violated"
+        matchings[c][u] = v
+        matchings[c][v] = u
+    return [m for m in matchings if m]
+
+
+def euler_split(adj: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split a graph into two subgraphs with per-vertex degree split as
+    evenly as possible (|d1 - d2| <= 2), by walking Euler circuits and
+    assigning edges alternately to the halves.
+
+    Odd-degree vertices are handled with the standard dummy-vertex trick
+    (a virtual node adjacent to every odd vertex makes all degrees even,
+    and its incident edges are discarded from the split).
+    """
+    adj = _validate_adjacency(adj)
+    n = adj.shape[0]
+    odd = np.nonzero(adj.sum(axis=1) % 2 == 1)[0]
+    rem = np.zeros((n + 1, n + 1), dtype=np.int64)  # unused edge capacity
+    rem[:n, :n] = adj
+    rem[odd, n] = 1
+    rem[n, odd] = 1
+    nbr_lists = [np.nonzero(rem[u])[0].tolist() for u in range(n + 1)]
+    ptr = [0] * (n + 1)  # monotone: capacity only ever decreases
+    deg = rem.sum(axis=1)
+    halves = (np.zeros((n, n), dtype=np.int64),
+              np.zeros((n, n), dtype=np.int64))
+    side = 0
+    for start in range(n + 1):
+        while deg[start] > 0:
+            # stack-based Hierholzer: popped order is one closed circuit
+            stack, trail = [start], []
+            while stack:
+                x = stack[-1]
+                lst = nbr_lists[x]
+                while ptr[x] < len(lst) and rem[x, lst[ptr[x]]] == 0:
+                    ptr[x] += 1
+                if ptr[x] == len(lst):
+                    trail.append(stack.pop())
+                    continue
+                y = lst[ptr[x]]
+                rem[x, y] -= 1
+                rem[y, x] -= 1
+                deg[x] -= 1
+                deg[y] -= 1
+                stack.append(y)
+            # assign the circuit's edges alternately to the halves; dummy
+            # edges are skipped but still flip the side, which is what
+            # splits the odd-degree endpoints evenly
+            for a, b in zip(trail, trail[1:]):
+                if a != n and b != n:
+                    halves[side][a, b] = halves[side][b, a] = 1
+                side ^= 1
+    return halves
+
+
+_EULER_CUTOFF = 12  # Misra-Gries directly below this max degree
+
+
+def matchings_to_schedules(n: int, matchings: list[dict[int, int]]
+                           ) -> list[np.ndarray]:
+    """Each matching becomes an involution schedule (fixed points for
+    uncovered nodes) — exactly one ppermute on the packed engine."""
+    schedules = []
+    for m in matchings:
+        s = np.arange(n, dtype=np.int64)
+        for u, v in m.items():
+            s[u] = v
+        schedules.append(s)
+    return schedules
+
+
+def overlay_from_adjacency(adj: np.ndarray, name: str = "converted", *,
+                           euler_cutoff: int = _EULER_CUTOFF,
+                           require_connected: bool = True) -> Overlay:
+    """Convert an arbitrary connected simple graph into a schedule-based
+    :class:`Overlay` the packed gossip engine can execute.
+
+    The edge set decomposes into <= Delta + 1 matchings (Vizing, via
+    Misra-Gries), each shipped as one involution schedule / one
+    ``lax.ppermute`` per round; graphs with max degree above
+    ``euler_cutoff`` are first halved recursively along Euler circuits
+    (a few extra colors, near-linear time). The conversion is lossless:
+    ``overlay.multigraph_adjacency()`` equals ``adj``.
+    """
+    adj = _validate_adjacency(adj)
+    if require_connected and not spectral.is_connected(adj):
+        raise ValueError("graph is disconnected; gossip cannot reach "
+                         "consensus (pass require_connected=False to force)")
+
+    def decompose(a: np.ndarray) -> list[dict[int, int]]:
+        if int(a.sum()) == 0:
+            return []
+        if int(a.sum(axis=1).max()) <= euler_cutoff:
+            return misra_gries_edge_coloring(a)
+        left, right = euler_split(a)
+        return decompose(left) + decompose(right)
+
+    matchings = decompose(adj)
+    schedules = matchings_to_schedules(adj.shape[0], matchings)
+    if not schedules:
+        raise ValueError("graph has no edges")
+    return Overlay(n=adj.shape[0], schedules=schedules, name=name)

@@ -1,0 +1,147 @@
+"""Time-varying round plans: per-schedule gates shipped as step *data*.
+
+A :class:`RoundPlan` maps a round index to a float gate vector over the
+overlay's schedules. The gates ride into the jitted train step as a donated
+``(n_schedules,)`` f32 argument — exactly the PR-2 alive-as-data design —
+and fold into the packed mixing reduction's existing per-sender weight
+operands (`gossip.ppermute_mix_packed(..., gates=...)`), which renormalize
+over the *gated* in-degree inside the same fused HBM pass. Consequences:
+
+* **zero retraces**: one-peer rotation, randomized schedule subsets, and
+  bandwidth-throttled rounds all reuse ONE executable — the gate values are
+  data, never trace structure. Only membership changes (splice repair)
+  re-jit, exactly as before.
+* the full d-schedule pool stays compiled in: a gated-off schedule still
+  issues its (cheap, fully overlappable) ppermute and contributes weight
+  zero. That trades wire bytes for compile stability; if a deployment needs
+  the bytes back, precompile one executable per gate *support* from a small
+  pool — the plan's supports are few (see the ROADMAP design record).
+
+Plans are stateless in the round index (``gates(rnd, n_schedules)``), so a
+splice repair that changes the schedule count mid-run needs no plan surgery.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "RoundPlan",
+    "StaticPlan",
+    "OnePeerPlan",
+    "RandomSubsetPlan",
+    "ThrottlePlan",
+    "make_plan",
+    "gates_for",
+    "is_active",
+    "PLAN_NAMES",
+]
+
+# every name make_plan accepts; config validation (launch.steps) checks
+# against this so a typo'd DFLConfig.round_plan errors instead of silently
+# flipping the gate pathway on
+PLAN_NAMES = ("static", "one_peer", "random_subset", "throttle")
+
+
+def is_active(plan: "RoundPlan | None") -> bool:
+    """Whether a plan engages the gate pathway. THE single predicate both
+    trainers use, and it must agree with the production step builder's
+    config-side rule (``DFLConfig.round_plan != "static"``): a static plan
+    is equivalent to no plan, so it keeps the gate pathway OFF — gating
+    with all-ones is NOT a no-op on overlays whose Chow self-weight is
+    negative (the gated branch clamps them to the lazy variant)."""
+    return plan is not None and plan.name != "static"
+
+
+def gates_for(plan: "RoundPlan | None", rnd: int,
+              n_schedules: int) -> np.ndarray:
+    """The round's gate vector: all-ones when no plan is configured (the
+    shared helper both trainers ship into the jitted step)."""
+    if plan is None:
+        return np.ones(n_schedules, dtype=np.float32)
+    return plan.gates(rnd, n_schedules)
+
+
+class RoundPlan:
+    """Base: all schedules on every round (same as no plan)."""
+
+    name = "static"
+
+    def gates(self, rnd: int, n_schedules: int) -> np.ndarray:
+        return np.ones(n_schedules, dtype=np.float32)
+
+
+class StaticPlan(RoundPlan):
+    pass
+
+
+@dataclasses.dataclass
+class OnePeerPlan(RoundPlan):
+    """One-peer rotation: round r exchanges only over schedule r mod S.
+
+    Over the ``onepeer_exp`` family this is the one-peer exponential
+    rotation; over a matching-union family it is a deterministic
+    time-varying matching sequence. Per-round mixing degree is 1, and S
+    consecutive rounds cover the whole pool.
+    """
+
+    offset: int = 0
+    name: str = "one_peer"
+
+    def gates(self, rnd: int, n_schedules: int) -> np.ndarray:
+        g = np.zeros(n_schedules, dtype=np.float32)
+        if n_schedules:
+            g[(rnd + self.offset) % n_schedules] = 1.0
+        return g
+
+
+@dataclasses.dataclass
+class RandomSubsetPlan(RoundPlan):
+    """Randomized matching subsets: k schedules drawn per round (stateless:
+    the draw is seeded by (seed, rnd), so replay/resume sees the same plan)."""
+
+    k: int = 1
+    seed: int = 0
+    name: str = "random_subset"
+
+    def gates(self, rnd: int, n_schedules: int) -> np.ndarray:
+        g = np.zeros(n_schedules, dtype=np.float32)
+        if n_schedules:
+            rng = np.random.default_rng((self.seed, rnd))
+            k = min(max(int(self.k), 1), n_schedules)
+            g[rng.choice(n_schedules, size=k, replace=False)] = 1.0
+        return g
+
+
+@dataclasses.dataclass
+class ThrottlePlan(RoundPlan):
+    """Bandwidth throttle: only ceil(fraction * S) schedules gossip per
+    round, rotating through the pool so coverage stays uniform over time."""
+
+    fraction: float = 0.5
+    name: str = "throttle"
+
+    def gates(self, rnd: int, n_schedules: int) -> np.ndarray:
+        g = np.zeros(n_schedules, dtype=np.float32)
+        if n_schedules:
+            m = min(n_schedules,
+                    max(1, int(np.ceil(self.fraction * n_schedules))))
+            start = (rnd * m) % n_schedules
+            g[(start + np.arange(m)) % n_schedules] = 1.0
+        return g
+
+
+def make_plan(name: str, *, k: int = 1, fraction: float = 0.5,
+              seed: int = 0) -> RoundPlan:
+    """Config-level factory (`DFLConfig.round_plan`)."""
+    if name == "static":
+        return StaticPlan()
+    if name == "one_peer":
+        return OnePeerPlan()
+    if name == "random_subset":
+        return RandomSubsetPlan(k=k, seed=seed)
+    if name == "throttle":
+        return ThrottlePlan(fraction=fraction)
+    raise ValueError(f"unknown round plan {name!r}; available: "
+                     f"{', '.join(PLAN_NAMES)}")

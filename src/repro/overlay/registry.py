@@ -1,0 +1,246 @@
+"""Graph-family registry: named overlay constructions, selectable by config.
+
+Every family is a function ``(n, degree, seed) -> Overlay`` registered under a
+string name; :func:`build` adds a uniform metadata record (degree, spectral
+gap, Chow lambda, mixing time) so sweeps and configs can treat the topology as
+a first-class, comparable component instead of a hardcoded enum.
+
+Families (beyond the paper's ring / expander / complete):
+
+* ``torus``       — 2D wrap-around grid (4 cyclic-shift schedules). The
+                    classic datacenter/ICI-native topology; kappa grows as
+                    O(n) vs the ring's O(n^2).
+* ``hypercube``   — n = 2^k, one XOR-involution schedule per dimension;
+                    log2(n)-regular with O(1) spectral gap growth.
+* ``random_regular`` — union of d independent random perfect matchings.
+                    Near-Ramanujan w.h.p. (Friedman), the standard
+                    "near-optimal d-regular expander" reference family.
+* ``onepeer_exp`` — exponential graph: shifts by +-2^j. Designed for the
+                    one-peer round plans (`repro.overlay.plan`): gating one
+                    schedule per round gives the provably-efficient one-peer
+                    exponential rotation at degree-1 per-round cost.
+* ``erdos_renyi`` — G(n, ln n / n), converted to schedules through the
+                    Misra-Gries decomposition (`repro.overlay.convert`) —
+                    the "arbitrary given graph" pathway exercised end to end.
+
+``ring``, ``expander`` (paper §4 virtual ring spaces), and ``complete`` are
+registered too, so ``DFLConfig.topology`` can name any family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core import spectral, topology
+from repro.core.topology import Overlay
+from repro.overlay import convert
+
+__all__ = [
+    "register",
+    "names",
+    "get_family",
+    "build",
+    "overlay_meta",
+    "torus_overlay",
+    "hypercube_overlay",
+    "random_regular_overlay",
+    "onepeer_exponential_overlay",
+]
+
+# family fn: (n, degree, seed) -> Overlay  (degree/seed ignored where moot)
+Family = Callable[[int, int, int], Overlay]
+
+_FAMILIES: dict[str, Family] = {}
+
+
+def register(name: str):
+    def deco(fn: Family) -> Family:
+        if name in _FAMILIES:
+            raise ValueError(f"overlay family {name!r} already registered")
+        _FAMILIES[name] = fn
+        return fn
+    return deco
+
+
+def names() -> list[str]:
+    return sorted(_FAMILIES)
+
+
+def get_family(name: str) -> Family:
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown overlay family {name!r}; available: {names()}") from None
+
+
+def overlay_meta(overlay: Overlay) -> dict:
+    """Uniform comparison record for one overlay (host-side, numpy)."""
+    rep = overlay.spectral_report()
+    meta = {
+        "family": overlay.name,
+        "n": overlay.n,
+        "n_schedules": len(overlay.schedules),
+        "degree_max": rep.degree_max,
+        "connected": rep.connected,
+        "kappa": rep.kappa,
+        "is_ramanujan": rep.is_ramanujan,
+    }
+    if rep.connected:
+        w = overlay.chow_weights()
+        meta.update(lam=w.lam, spectral_gap=1.0 - w.lam,
+                    mixing_time_1e3=spectral.mixing_time(w.lam))
+    else:
+        meta.update(lam=1.0, spectral_gap=0.0, mixing_time_1e3=float("inf"))
+    return meta
+
+
+def build(name: str, n: int, degree: int = 4, seed: int = 0
+          ) -> tuple[Overlay, dict]:
+    """Build a named family at size n; returns (overlay, metadata)."""
+    overlay = get_family(name)(n, degree, seed)
+    return overlay, overlay_meta(overlay)
+
+
+# ------------------------------------------------------------------ families
+@register("ring")
+def _ring(n: int, degree: int, seed: int) -> Overlay:
+    return topology.ring_overlay(n)
+
+
+@register("expander")
+def _expander(n: int, degree: int, seed: int) -> Overlay:
+    return topology.expander_overlay(n, degree, seed=seed)
+
+
+@register("complete")
+def _complete(n: int, degree: int, seed: int) -> Overlay:
+    # n-1 cyclic shifts: shift-by-k's inverse is shift-by-(n-k), present for
+    # every k, so the set is closed under inverse (all-to-all form)
+    if n < 3:
+        raise ValueError("complete needs n >= 3")
+    scheds = [np.roll(np.arange(n), -k) for k in range(1, n)]
+    return Overlay(n=n, schedules=scheds, name="complete")
+
+
+def _torus_dims(n: int) -> tuple[int, int]:
+    """Most-square factorization r*c = n with r, c >= 3."""
+    for r in range(int(math.isqrt(n)), 2, -1):
+        if n % r == 0 and n // r >= 3:
+            return r, n // r
+    raise ValueError(f"torus needs n = r*c with r, c >= 3; n={n} does not "
+                     "factor that way")
+
+
+@register("torus")
+def torus_overlay(n: int, degree: int = 4, seed: int = 0) -> Overlay:
+    """2D torus on the most-square r x c grid: 4 cyclic-shift schedules
+    (row +-1, col +-1), the wrap-around mesh the hardware itself uses."""
+    r, c = _torus_dims(n)
+    a, b = np.divmod(np.arange(n), c)
+    scheds = [
+        ((a + 1) % r) * c + b,          # row successor
+        ((a - 1) % r) * c + b,          # row predecessor
+        a * c + (b + 1) % c,            # col successor
+        a * c + (b - 1) % c,            # col predecessor
+    ]
+    return Overlay(n=n, schedules=[s.astype(np.int64) for s in scheds],
+                   name=f"torus-{r}x{c}")
+
+
+@register("hypercube")
+def hypercube_overlay(n: int, degree: int = 0, seed: int = 0) -> Overlay:
+    """Boolean k-cube (n = 2^k): one XOR involution per dimension."""
+    k = n.bit_length() - 1
+    if n < 4 or (1 << k) != n:
+        raise ValueError(f"hypercube needs n a power of two >= 4, got {n}")
+    idx = np.arange(n, dtype=np.int64)
+    scheds = [idx ^ (1 << j) for j in range(k)]
+    return Overlay(n=n, schedules=scheds, name=f"hypercube-{k}d")
+
+
+def _matching_avoiding(n: int, rng: np.random.Generator,
+                       used: np.ndarray, tries: int = 32) -> np.ndarray | None:
+    """Random perfect matching avoiding the 0/1 ``used`` edge set: shuffle,
+    then pair each node with a random non-used partner (retry when stuck)."""
+    for _ in range(tries):
+        pool = list(rng.permutation(n))
+        s = np.arange(n, dtype=np.int64)
+        ok = True
+        while pool:
+            u = pool.pop()
+            options = [v for v in pool if not used[u, v]]
+            if not options:
+                ok = False
+                break
+            v = options[rng.integers(len(options))]
+            pool.remove(v)
+            s[u], s[v] = v, u
+        if ok:
+            return s
+    return None
+
+
+@register("random_regular")
+def random_regular_overlay(n: int, degree: int = 4, seed: int = 0,
+                           max_tries: int = 64) -> Overlay:
+    """d-regular graph as a union of d random perfect matchings (n even);
+    each matching is drawn conditioned to avoid the union so far (plain
+    independent draws collide with probability ~1 at small n), and the
+    whole draw retries until connected. Friedman's theorem: random regular
+    graphs are near-Ramanujan (lambda_2 <= 2 sqrt(d-1) + eps) w.h.p."""
+    if n % 2 != 0:
+        raise ValueError("random_regular needs even n (perfect matchings)")
+    if degree < 2:
+        raise ValueError("random_regular needs degree >= 2")
+    if degree >= n:
+        raise ValueError(f"degree {degree} needs n > degree, got n={n}")
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        used = np.zeros((n, n), dtype=bool)
+        scheds: list[np.ndarray] = []
+        for _d in range(degree):
+            s = _matching_avoiding(n, rng, used)
+            if s is None:
+                break
+            scheds.append(s)
+            used[np.arange(n), s] = True
+            used[s, np.arange(n)] = True
+        if len(scheds) < degree:
+            continue
+        ov = Overlay(n=n, schedules=scheds, name=f"random-regular-d{degree}")
+        if spectral.is_connected(ov.multigraph_adjacency()):
+            return ov
+    raise RuntimeError(
+        f"could not draw a simple connected {degree}-regular matching union")
+
+
+@register("onepeer_exp")
+def onepeer_exponential_overlay(n: int, degree: int = 0, seed: int = 0
+                                ) -> Overlay:
+    """Exponential graph: shifts by +-2^j for 2^j < n. The full graph is
+    ~2 log2(n)-regular with O(1/log n) gap; under a one-peer round plan it
+    is the provably-efficient one-peer exponential rotation."""
+    if n < 3:
+        raise ValueError("onepeer_exp needs n >= 3")
+    idx = np.arange(n, dtype=np.int64)
+    scheds, seen = [], set()
+    j = 0
+    while (1 << j) < n:
+        for shift in (1 << j, -(1 << j)):
+            s = (idx + shift) % n
+            key = tuple(s.tolist())
+            if key not in seen:   # 2^j == n/2: +shift and -shift coincide
+                seen.add(key)
+                scheds.append(s)
+        j += 1
+    return Overlay(n=n, schedules=scheds, name="onepeer-exp")
+
+
+@register("erdos_renyi")
+def _erdos_renyi(n: int, degree: int, seed: int) -> Overlay:
+    adj = topology.erdos_renyi_adjacency(n, seed=seed)
+    return convert.overlay_from_adjacency(adj.astype(np.int64),
+                                          name="erdos-renyi")

@@ -176,6 +176,27 @@ def roofline(cost: dict, hlo_text: str, world: int) -> Roofline:
         while_trips=hc.while_trip_counts)
 
 
+def packing_report(pack_spec) -> dict:
+    """Padding overhead of a packed-gossip layout (`core.packing.PackSpec`).
+
+    The packed engine pads each per-dtype flat buffer up to a
+    (block_rows x 128)-element tile multiple; every padded byte is shipped
+    over ICI d times per round and read by every fused reduction pass, so
+    the overhead fraction is a direct multiplier on the gossip roofline
+    terms. Smoke-sized models pad heavily (a tile is 128 KiB of f32); real
+    architectures should sit well under 1%.
+    """
+    payload = int(pack_spec.payload_bytes)
+    padded = int(pack_spec.padded_bytes)
+    return {
+        "n_leaves": pack_spec.n_leaves,
+        "n_buffers": pack_spec.n_buffers,
+        "payload_bytes": payload,
+        "padded_bytes": padded,
+        "pad_overhead": (padded / payload - 1.0) if payload else 0.0,
+    }
+
+
 def model_flops_train(n_active_params: int, n_tokens: int) -> float:
     """6 N D — fwd (2ND) + bwd (4ND)."""
     return 6.0 * n_active_params * n_tokens

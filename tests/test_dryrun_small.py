@@ -31,7 +31,8 @@ _HARNESS = textwrap.dedent("""
         lowered = setup.step_fn.lower(P.shape_structs(setup.param_struct),
                                       setup.input_specs["batch"],
                                       setup.input_specs["lr"],
-                                      setup.input_specs["alive"])
+                                      setup.input_specs["alive"],
+                                      setup.input_specs["gates"])
     else:
         shape = ShapeConfig("s", 64, 8, kind)
         setup = steps.build_serve_step(cfg, shape, mesh)

@@ -380,7 +380,8 @@ class TestPackedCollectiveCount:
             cfg = registry.reduced("qwen2.5-3b")  # single-dtype param tree
             shape = ShapeConfig("t", 64, 8, "train")
             counts = {}
-            for gi in ("ppermute_packed", "ppermute"):
+            for gi in ("ppermute_packed", "ppermute_packed_quant",
+                       "ppermute"):
                 par = ParallelConfig(clients_per_pod=4, local_steps=2,
                                      grad_accum=2, gossip_impl=gi)
                 setup = steps.build_train_step(cfg, shape, mesh, par,
@@ -388,12 +389,15 @@ class TestPackedCollectiveCount:
                 lowered = setup.step_fn.lower(
                     P.shape_structs(setup.param_struct),
                     setup.input_specs["batch"], setup.input_specs["lr"],
-                    setup.input_specs["alive"])
+                    setup.input_specs["alive"], setup.input_specs["gates"])
                 counts[gi] = lowered.as_text().count("collective_permute")
             n_leaves = len(jax.tree.leaves(
                 P.shape_structs(setup.param_struct)))
             d = setup.gossip_spec.degree
             assert counts["ppermute_packed"] == d, counts
+            # quant path: the f32 scale is folded into the int8 wire buffer,
+            # so it too ships exactly d collectives (was 2d payload+scale)
+            assert counts["ppermute_packed_quant"] == d, counts
             assert counts["ppermute"] == d * n_leaves, (counts, n_leaves)
             print("PERMUTE_COUNT_OK", counts, "d=", d, "leaves=", n_leaves)
         """)

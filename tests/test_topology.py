@@ -64,6 +64,52 @@ class TestJoin:
         assert ov.n == 13
         assert ov.spectral_report().connected
 
+    def test_add_node_schedule_structure(self):
+        """Joins keep every schedule a valid permutation, keep the schedule
+        set closed under inverse, and splice the new node into each ring
+        (ring degree 2 per space; the matching keeps a fixed point)."""
+        ov = topology.expander_overlay(12, 5, seed=3)  # 2 rings + matching
+        ov2 = ov.add_node(np.random.default_rng(0))
+        assert len(ov2.schedules) == len(ov.schedules)
+        keys = {tuple(s.tolist()) for s in ov2.schedules}
+        for s in ov2.schedules:
+            assert np.array_equal(np.sort(s), np.arange(13))
+            assert tuple(np.argsort(s).tolist()) in keys  # inverse present
+        invs = [np.array_equal(np.argsort(s), s) for s in ov2.schedules]
+        assert sum(invs) == 1                   # the matching survived
+        matching = ov2.schedules[invs.index(True)]
+        assert matching[12] == 12               # degree deficit until rebuild
+        # the new node rides every ring: degree 2 per ring space
+        ring_adj = np.zeros((13, 13))
+        idx = np.arange(13)
+        for s, inv in zip(ov2.schedules, invs):
+            if not inv:
+                ring_adj[idx, s] += 1
+        assert ring_adj[12].sum() == 2 * (ov2.coords.shape[1])
+        assert ov2.coords.shape == (13, ov.coords.shape[1])
+
+    def test_add_node_then_remove_round_trips_membership(self):
+        """Join + immediate failure of the joined node keeps a valid,
+        connected overlay on the original membership."""
+        ov = topology.expander_overlay(10, 4, seed=1)
+        ov2 = ov.add_node(np.random.default_rng(4))
+        repaired, old2new = ov2.remove_nodes([10])
+        assert repaired.n == 10
+        np.testing.assert_array_equal(old2new[:10], np.arange(10))
+        assert repaired.spectral_report().connected
+        assert repaired.chow_weights().lam < 1.0
+
+    def test_joins_keep_spectral_gap_sane(self):
+        """Growth must not collapse connectivity: lambda stays bounded away
+        from 1 through repeated joins (fresh rings re-randomize)."""
+        ov = topology.expander_overlay(16, 4, seed=0)
+        rng = np.random.default_rng(7)
+        base = ov.chow_weights().lam
+        for _ in range(6):
+            ov = ov.add_node(rng)
+        lam = ov.chow_weights().lam
+        assert lam < 1.0 and lam < base + 0.15
+
 
 class TestRepair:
     def test_single_failure_splice(self):
