@@ -7,7 +7,11 @@ death with splice repair — and reports:
   * rounds/sec per phase (healthy vs straggler-churn vs post-repair);
   * the jit trace count (`n_traces`): straggler churn must add ZERO traces
     (the alive mask is a step argument); each membership change adds exactly
-    one.
+    one. The same guard runs for the **pipelined** trainer (gossip_delay=1):
+    the in-flight snapshot is step state, never trace structure;
+  * a delayed-vs-sync convergence proxy: final mean-square distance to the
+    shared quadratic target after the same scripted churn, gossip_delay=0 vs
+    1 — one-round staleness costs a bounded constant, not divergence.
 
 Output: the usual ``name,us_per_call,derived`` CSV rows, plus one JSON
 record written to ``<out>/elastic.json`` (default ``experiments/bench/``;
@@ -16,7 +20,9 @@ re-runs overwrite it, dryrun-cache style) with the bench JSON schema::
     {"bench": "elastic", "n_clients", "degree", "dim", "rounds",
      "phases": {name: {"rounds", "seconds", "rounds_per_sec"}},
      "n_traces", "expected_traces", "repairs": [{"dead", "n_after"}],
-     "plan": [[round, [dead ids]], ...]}
+     "plan": [[round, [dead ids]], ...],
+     "delayed": {"n_traces", "expected_traces", "rounds_per_sec",
+                 "proxy_sync", "proxy_delayed"}}
 """
 from __future__ import annotations
 
@@ -105,7 +111,54 @@ def run(n_clients: int = 16, degree: int = 4, dim: int = 4096,
         "plan": [[int(e[0]), [int(i) for i in e[1]]] for e in plan.events],
     }
     assert trainer.n_traces == expected, (trainer.n_traces, expected)
+    rec["delayed"] = run_delayed(n_clients=n_clients, degree=degree, dim=dim,
+                                 rounds=2 * rounds_per_phase, seed=seed)
     return rec
+
+
+def run_delayed(n_clients: int = 16, degree: int = 4, dim: int = 4096,
+                rounds: int = 16, seed: int = 0) -> dict:
+    """Pipelined (gossip_delay=1) vs synchronous trainer under identical
+    straggler churn: retrace guard + convergence proxy + rounds/sec."""
+    r = np.random.default_rng(seed)
+    targets = jnp.zeros((n_clients, dim), jnp.float32)  # consensus: origin
+    proxies = {}
+    timing = {}
+    traces = {}
+    for name, delay in (("sync", 0), ("delayed", 1)):
+        trainer = ElasticTrainer(
+            overlay=expander_overlay(n_clients, degree, seed=seed),
+            loss_fn=quad_loss,
+            dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
+            straggler_rounds=1, failure_rounds=10**9, gossip_delay=delay)
+        params = {"w": jnp.asarray(r.standard_normal((n_clients, dim)),
+                                   jnp.float32)}
+        rng = np.random.default_rng(seed + 1)
+        t0 = time.perf_counter()
+        for rnd in range(rounds):
+            mask = (rng.random(n_clients) > 0.25).astype(np.float32)
+            if mask.sum() < 2:
+                mask[:] = 1.0
+            params, _, _ = trainer.observe_heartbeats(mask, params)
+            params, _ = trainer.step(params, _batches(targets, 2), 0.2)
+        jax.block_until_ready(params)
+        timing[name] = rounds / (time.perf_counter() - t0)
+        proxies[name] = float(jnp.mean(jnp.square(params["w"])))
+        traces[name] = trainer.n_traces
+        # the pipelined retrace guard: churn is data in BOTH modes
+        assert trainer.n_traces == 1, (name, trainer.n_traces)
+    emit(f"elastic/delayed_vs_sync/n{n_clients}-d{degree}", 0.0,
+         f"proxy_sync={proxies['sync']:.6f};"
+         f"proxy_delayed={proxies['delayed']:.6f};"
+         f"rps_sync={timing['sync']:.2f};"
+         f"rps_delayed={timing['delayed']:.2f};"
+         f"n_traces={traces['delayed']}")
+    return {"n_traces": traces["delayed"], "expected_traces": 1,
+            "rounds": rounds,
+            "rounds_per_sec": round(timing["delayed"], 2),
+            "rounds_per_sec_sync": round(timing["sync"], 2),
+            "proxy_sync": proxies["sync"],
+            "proxy_delayed": proxies["delayed"]}
 
 
 def main(rounds: int = 8, out_dir: str | None = "experiments/bench") -> None:

@@ -8,8 +8,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core import spectral, topology
 from repro.core.mixing import chow_matrix
 from benchmarks.common import emit

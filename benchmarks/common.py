@@ -1,7 +1,6 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
-import json
 import time
 from typing import Callable
 
@@ -10,9 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dfedavg, failures as failures_lib, gossip
-from repro.core.topology import (Overlay, complete_adjacency,
-                                 erdos_renyi_adjacency, expander_overlay,
-                                 ring_overlay)
+from repro.core.topology import (complete_adjacency, erdos_renyi_adjacency,
+                                 expander_overlay, ring_overlay)
 from repro.core.mixing import chow_matrix
 
 

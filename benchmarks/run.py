@@ -39,7 +39,7 @@ def main() -> None:
     suite = [
         ("spectral", lambda: bench_spectral.main()),
         ("kernels", lambda: bench_kernels.main()),
-        ("comm", lambda: bench_comm.main()),
+        ("comm", lambda: bench_comm.main(fast=args.fast)),
         ("overlay", lambda: bench_overlay.main(rounds=3 * rounds)),
         ("mnist", lambda: bench_mnist.main(rounds=rounds)),
         ("lm", lambda: bench_lm.main(rounds=rounds + 4)),

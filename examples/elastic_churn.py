@@ -12,7 +12,6 @@ What to watch in the output:
 
     PYTHONPATH=src python examples/elastic_churn.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

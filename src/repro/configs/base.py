@@ -182,10 +182,21 @@ class ParallelConfig:
     attn_mode: Literal["heads", "sequence"] = "heads"  # TP choice for attention
     # gossip executor: "ppermute_packed" (default: flat-buffer payloads, d
     # collectives/round + fused Pallas reduction), "ppermute_packed_quant"
-    # (packed + int8 wire payloads), per-leaf "ppermute"/"ppermute_quant"
-    # baselines, or the paper-naive "dense" mixing einsum
+    # (packed + int8 wire payloads, per-row-block scales riding in the wire
+    # buffer), "ppermute_packed_async" (pipelined: with gossip_delay=1 the d
+    # permutes ship the *previous* round's snapshot, so they depend only on
+    # step inputs and overlap with the local-step scan), per-leaf
+    # "ppermute"/"ppermute_quant" baselines, or the paper-naive "dense"
+    # mixing einsum
     gossip_impl: Literal["dense", "ppermute", "ppermute_quant",
-                         "ppermute_packed", "ppermute_packed_quant"] = "ppermute_packed"
+                         "ppermute_packed", "ppermute_packed_quant",
+                         "ppermute_packed_async"] = "ppermute_packed"
+    # pipelined-gossip delay (only meaningful with "ppermute_packed_async"):
+    # 0 = synchronous semantics, bit-identical to "ppermute_packed"
+    # (regression-pinned); 1 = one-round-delayed mixing — round t mixes the
+    # in-flight snapshot of round t-1's post-local-step params, so the wire
+    # transfer hides behind a full local-step scan
+    gossip_delay: int = 0
     local_steps: int = 2          # K inside the lowered round (scan)
     use_fused_sgdm: bool = True
     grad_accum: int = 4           # microbatches per local step (memory knob)

@@ -51,6 +51,17 @@ plain data through one executable. Gates compose with ``alive``: contributor
 weight = gate[schedule] x alive[sender]. For 0/1 gates the fused reduction
 matches :func:`mix_dense_gated` bit-for-bit in f32 on one-peer rounds (see
 its docstring for the exact scope; 0/1 factors are exact in floating point).
+
+Pipelined (one-round-delayed) gossip rides on top of the packed engine: the
+``*_delayed`` executors mix this round's *fresh* local-step output with the
+**previous** round's packed snapshot, carried across rounds as donated step
+state. Because the snapshot is a step *input*, its d ppermutes have no data
+dependency on the local-step scan and XLA's latency-hiding scheduler can run
+the wire transfer under the whole scan — per-round wall-clock becomes
+max(compute, comm) instead of compute + comm (asynchronous decentralized SGD
+in the style of overlap-SGP). :func:`mix_dense_delayed` is the dense oracle
+pinning the semantics; ``gossip_delay=0`` keeps the synchronous executors
+untouched (bit-identical).
 """
 from __future__ import annotations
 
@@ -72,11 +83,15 @@ __all__ = [
     "mix_dense",
     "mix_dense_masked",
     "mix_dense_gated",
+    "mix_dense_delayed",
     "mix_schedules",
     "mix_packed_stacked",
+    "mix_packed_stacked_delayed",
+    "pack_state_stacked",
     "ppermute_mix",
     "ppermute_mix_quantized",
     "ppermute_mix_packed",
+    "ppermute_mix_packed_delayed",
     "ppermute_mix_packed_quantized",
 ]
 
@@ -287,6 +302,40 @@ def mix_dense_gated(tree: PyTree, spec: GossipSpec,
     return jax.tree.map(_mix, tree)
 
 
+def mix_dense_delayed(fresh: PyTree, delayed: PyTree, spec: GossipSpec,
+                      gates: jax.Array | None = None,
+                      alive: jax.Array | None = None) -> PyTree:
+    """Dense oracle for one-round-delayed (pipelined) gossip.
+
+    Row i combines its own **fresh** value (this round's post-local-step
+    params) with its neighbors' **delayed** values (their post-local-step
+    params from the *previous* round, the in-flight snapshot)::
+
+        out_i = w_i0 * fresh_i + sum_s w_i,1+s * delayed[recv_from[s][i]]
+
+    with the exact :func:`alive_weight_table` weights — the self column
+    (incl. folded fixed-point edge weight) always applies to the fresh value,
+    matching the packed executors where fixed-point schedules deliver zeros.
+    With ``delayed == fresh`` this is the synchronous gated/masked mixing,
+    so delay is purely a data-staleness change, never a weight change. The
+    reduction is an explicit multiply-then-sum in schedule order, so for 0/1
+    gates/masks it matches the packed delayed executors with the same
+    bit-for-bit scope as :func:`mix_dense_gated`.
+    """
+    table = alive_weight_table(spec, alive, gates)
+    gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+
+    def _mix(xf, xd):
+        ff = xf.reshape(xf.shape[0], -1).astype(jnp.float32)
+        fd = xd.reshape(xd.shape[0], -1).astype(jnp.float32)
+        out = table[:, 0][:, None] * ff
+        for s, idx in enumerate(gathers):
+            out = out + table[:, 1 + s][:, None] * jnp.take(fd, idx, axis=0)
+        return out.astype(xf.dtype).reshape(xf.shape)
+
+    return jax.tree.map(_mix, fresh, delayed)
+
+
 def _static_weight_table(spec: GossipSpec) -> jax.Array:
     """All-alive weight table (host-side constant): (n, S+1)."""
     w0 = np.asarray(spec.self_weights, np.float32)[:, None]
@@ -344,8 +393,7 @@ def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
     executables.
     """
     if pack_spec is None:
-        pack_spec = packing.make_pack_spec(jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree))
+        pack_spec = _stacked_pack_spec(tree)
     w = (_static_weight_table(spec) if alive is None and gates is None
          else alive_weight_table(spec, alive, gates))
     gathers = [jnp.asarray(rf) for rf in spec.recv_from]
@@ -358,6 +406,63 @@ def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
         out_bufs.append(out.astype(buf.dtype))
     return jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
         tuple(out_bufs))
+
+
+def _stacked_pack_spec(tree: PyTree) -> packing.PackSpec:
+    """PackSpec of the client-stacked tree's per-client slice."""
+    return packing.make_pack_spec(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree))
+
+
+def pack_state_stacked(tree: PyTree,
+                       pack_spec: packing.PackSpec | None = None
+                       ) -> tuple[jax.Array, ...]:
+    """Pack a client-stacked pytree into per-dtype ``(n, rows, 128)``
+    snapshot buffers — the in-flight state of the delayed (pipelined) gossip
+    round. Used once to prime the pipeline (round 0 mixes the *initial*
+    params as its delayed snapshot) and by the delayed executors every round.
+    The layout depends only on the parameter structure, never on the
+    topology, so a splice repair remaps the snapshot by the same ``old2new``
+    row permutation as the params (see ``launch/elastic.py``)."""
+    if pack_spec is None:
+        pack_spec = _stacked_pack_spec(tree)
+    return jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+
+
+def mix_packed_stacked_delayed(tree: PyTree,
+                               snapshot: tuple[jax.Array, ...],
+                               spec: GossipSpec,
+                               alive: jax.Array | None = None, *,
+                               gates: jax.Array | None = None,
+                               pack_spec: packing.PackSpec | None = None
+                               ) -> tuple[PyTree, tuple[jax.Array, ...]]:
+    """Stacked-axis pipelined gossip: the simulator / elastic-runtime
+    counterpart of :func:`ppermute_mix_packed_delayed`.
+
+    ``tree`` is this round's fresh post-local-step state; ``snapshot`` is the
+    previous round's :func:`pack_state_stacked` output (what is "on the
+    wire"). Each schedule gathers from the *snapshot* while the self term
+    stays fresh — :func:`mix_dense_delayed` semantics, with the same
+    alive/gates weight table as the synchronous path. Returns the mixed tree
+    and the new snapshot (this round's packed fresh state), to be carried as
+    step state. With ``snapshot == pack_state_stacked(tree)`` the result is
+    bit-identical to :func:`mix_packed_stacked` (same stack, same einsum).
+    """
+    if pack_spec is None:
+        pack_spec = _stacked_pack_spec(tree)
+    w = (_static_weight_table(spec) if alive is None and gates is None
+         else alive_weight_table(spec, alive, gates))
+    gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+    fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+    out_bufs = []
+    for buf, snap in zip(fresh, snapshot):
+        stack = jnp.stack([buf] + [jnp.take(snap, idx, axis=0)
+                                   for idx in gathers], axis=1)
+        out = jnp.einsum("nk,nk...->n...", w, stack.astype(jnp.float32))
+        out_bufs.append(out.astype(buf.dtype))
+    mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
+        tuple(out_bufs))
+    return mixed, fresh
 
 
 def _axis_size(name: str) -> jax.Array | int:
@@ -552,26 +657,88 @@ def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
     return packing.unpack_tree(tuple(out_bufs), pack_spec)
 
 
+def ppermute_mix_packed_delayed(tree: PyTree,
+                                state_bufs: tuple[jax.Array, ...],
+                                spec: GossipSpec,
+                                axis_names: str | tuple[str, ...], *,
+                                pack_spec: packing.PackSpec | None = None,
+                                mix_impl: str = "auto",
+                                alive: jax.Array | None = None,
+                                gates: jax.Array | None = None
+                                ) -> tuple[PyTree, tuple[jax.Array, ...]]:
+    """Pipelined packed gossip (``gossip_delay=1``): d collectives/round on
+    the *previous* round's snapshot, overlapped with this round's compute.
+
+    ``state_bufs`` is the carried in-flight state: the per-device packed
+    buffers of last round's post-local-step shard tree (this function's
+    second return value, primed with the initial params). Each schedule
+    ppermutes the **snapshot**, not the fresh buffer — the permutes' operand
+    is a step *input*, so they have no data dependency on the local-step
+    scan that produced ``tree`` and XLA's async collectives
+    (permute-start/permute-done) run the wire transfer under the scan. The
+    fused ``gossip_mix_2d`` reduction then combines the fresh self buffer
+    with the d delayed received buffers using the *identical* raw-weight /
+    alive / gates operands as :func:`ppermute_mix_packed` — delay changes
+    which round's bytes are on the wire, never the mixing weights
+    (:func:`mix_dense_delayed` is the oracle). Feeding
+    ``state_bufs == pack_tree(tree)`` reproduces the synchronous executor
+    bit-for-bit, which is the delay=0 regression anchor.
+
+    Returns ``(mixed tree, new state_bufs)`` where the new state is this
+    round's fresh packed buffers (what round t+1 will mix).
+    """
+    from repro.kernels.gossip_mix import ops as mix_ops
+
+    if pack_spec is None:
+        pack_spec = packing.make_pack_spec(tree)
+    idx = _client_index(axis_names)
+    live = _live_schedules(spec)
+    perms = [p for _, p, _, _ in live]
+    weights = _local_raw_weights(spec, idx, len(perms), gates)
+    alive_vec = (None if alive is None and gates is None
+                 else _local_contrib_vec(spec, idx, live, alive, gates))
+
+    fresh = packing.pack_tree(tree, pack_spec)
+    out_bufs = []
+    for buf, prev in zip(fresh, state_bufs):
+        # all ppermutes read the carried snapshot (a step input): no dep on
+        # the scan, so the scheduler can start them at program entry
+        received = [jax.lax.ppermute(prev, axis_names, perm=p) for p in perms]
+        stack = jnp.stack([buf] + received)
+        out_bufs.append(mix_ops.gossip_mix_packed(
+            stack, weights, alive_vec, block_rows=pack_spec.block_rows,
+            impl=mix_impl))
+    return packing.unpack_tree(tuple(out_bufs), pack_spec), fresh
+
+
 def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
                                   axis_names: str | tuple[str, ...], *,
                                   pack_spec: packing.PackSpec | None = None,
                                   impl: str = "auto",
                                   alive: jax.Array | None = None,
-                                  gates: jax.Array | None = None) -> PyTree:
+                                  gates: jax.Array | None = None,
+                                  block_scales: bool = True) -> PyTree:
     """Packed gossip with int8 wire payloads (4x/2x fewer ICI bytes).
 
-    The packed buffer quantizes once through the Pallas ``quantize_2d``
-    kernel (per-buffer symmetric scale), and the 4-byte f32 scale is
-    **folded into the shipped int8 buffer** as one trailing lane row
-    (:func:`~repro.kernels.quant_gossip.ops.fold_scale_into_wire`), so each
-    schedule ships exactly **one** collective — d per round, down from the
-    2d payload+scale pairs this path used to issue. Every received wire
-    buffer splits back into (int8 payload, scale) with one static slice and
-    folds into the accumulator through the fused ``dequant_accumulate_2d``
-    kernel (dequant + scale + add in one HBM pass per neighbor). The local
-    term stays full precision, so the int8 error only enters through the
-    (small) edge weights. Note the scale is per-buffer rather than
-    per-leaf, so the error bound is governed by the buffer-wide amax.
+    The packed buffer quantizes once through the Pallas quantize kernel,
+    and the f32 scales are **folded into the shipped int8 buffer** as
+    trailing lane rows (:func:`~repro.kernels.quant_gossip.ops.
+    fold_scales_into_wire`), so each schedule ships exactly **one**
+    collective — d per round, down from the 2d payload+scale pairs this
+    path used to issue. Every received wire buffer splits back into
+    (int8 payload, scales) with static slices and folds into the
+    accumulator through the fused ``dequant_accumulate_2d`` kernel family
+    (dequant + scale + add in one HBM pass per neighbor). The local term
+    stays full precision, so the int8 error only enters through the
+    (small) edge weights.
+
+    ``block_scales`` (default) quantizes with **one scale per row-block
+    kernel tile** instead of per buffer: a tile of small-magnitude
+    parameters (norm gains, biases) no longer inherits the quantization
+    step of the buffer-wide amax, which closes the PR-1 follow-up. The
+    scales ride the same wire buffer (32 per lane row), so the collective
+    count is unchanged; ``block_scales=False`` keeps the PR-3 per-buffer
+    format.
 
     ``alive`` has :func:`mix_dense_masked` semantics and ``gates``
     (per-schedule floats) the time-varying semantics, both exactly as in
@@ -606,15 +773,28 @@ def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
         recv_alive = [a_self * src_a[k] * inv for k in range(len(perms))]
 
     out_bufs = []
-    for buf in packing.pack_tree(tree, pack_spec):
-        q, scale = qops.quantize_packed(buf, block_rows=pack_spec.block_rows,
-                                        impl=impl)
-        wire = qops.fold_scale_into_wire(q, scale)
+    for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
+        if block_scales:
+            q, scales = qops.quantize_packed_blockwise(
+                buf, block_rows=pack_spec.block_rows, impl=impl)
+            wire = qops.fold_scales_into_wire(q, scales)
+        else:
+            q, scale = qops.quantize_packed(
+                buf, block_rows=pack_spec.block_rows, impl=impl)
+            wire = qops.fold_scale_into_wire(q, scale)
+        n_blocks = pack_spec.buffer_blocks(b)
         acc = self_scale.astype(buf.dtype) * buf
         for p, a in zip(perms, recv_alive):
-            rq, rs = qops.split_wire(jax.lax.ppermute(wire, axis_names,
-                                                      perm=p))
-            acc = qops.dequant_accumulate_packed(
-                rq, rs, c, acc, a, block_rows=pack_spec.block_rows, impl=impl)
+            rwire = jax.lax.ppermute(wire, axis_names, perm=p)
+            if block_scales:
+                rq, rs = qops.split_wire_blockwise(rwire, n_blocks)
+                acc = qops.dequant_accumulate_packed_blockwise(
+                    rq, rs, c, acc, a, block_rows=pack_spec.block_rows,
+                    impl=impl)
+            else:
+                rq, rs = qops.split_wire(rwire)
+                acc = qops.dequant_accumulate_packed(
+                    rq, rs, c, acc, a, block_rows=pack_spec.block_rows,
+                    impl=impl)
         out_bufs.append(acc)
     return packing.unpack_tree(tuple(out_bufs), pack_spec)

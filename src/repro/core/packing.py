@@ -33,8 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["LANE", "PACK_BLOCK_ROWS", "LeafSlot", "PackSpec",
-           "make_pack_spec", "pack_tree", "unpack_tree"]
+__all__ = ["LANE", "PACK_BLOCK_ROWS", "SCALE_BYTES", "LeafSlot", "PackSpec",
+           "make_pack_spec", "pack_tree", "unpack_tree", "scale_rows"]
 
 PyTree = Any
 
@@ -43,6 +43,16 @@ LANE = 128
 # buffers are directly consumable without repadding; 256 rows is a multiple of
 # every dtype's sublane minimum (f32:8, bf16:16, int8:32).
 PACK_BLOCK_ROWS = 256
+# bytes per f32 quantization scale folded into an int8 wire buffer
+SCALE_BYTES = 4
+
+
+def scale_rows(n_blocks: int) -> int:
+    """Trailing lane rows an int8 wire buffer needs to carry `n_blocks`
+    per-row-block f32 quant scales (4 bytes each, lane-folded like the PR-3
+    wire format). One row carries LANE // SCALE_BYTES = 32 scales, so the
+    wire overhead stays <= 1 row per 32 tile blocks (each >= 32 KiB)."""
+    return (SCALE_BYTES * n_blocks + LANE - 1) // LANE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +95,11 @@ class PackSpec:
 
     def buffer_shape(self, b: int) -> tuple[int, int]:
         return (self.buffer_rows[b], LANE)
+
+    def buffer_blocks(self, b: int) -> int:
+        """Row-block (kernel tile) count of buffer ``b`` — also the number of
+        per-block quant scales its int8 wire buffer carries."""
+        return self.buffer_rows[b] // self.block_rows
 
     @property
     def payload_elements(self) -> int:

@@ -2,9 +2,19 @@
 
 Beyond-paper optimization for the *collective* roofline term: gossip payloads
 are symmetrically quantized to int8 before the ppermute, cutting ICI bytes 4x
-(f32) or 2x (bf16). The global amax reduction is a cheap jnp reduce in the
-wrapper; the kernels do the per-tile scale/round/clip and the fused
+(f32) or 2x (bf16). The amax reduction is a cheap jnp reduce in the wrapper;
+the kernels do the per-tile scale/round/clip and the fused
 dequantize-accumulate.
+
+Two scale granularities share the same kernel bodies:
+
+* per-buffer (`quantize_2d` / `dequant_accumulate_2d`): one f32 scale for the
+  whole buffer — error is governed by the buffer-wide amax;
+* per-row-block (`quantize_2d_blockwise` / `dequant_accumulate_2d_blockwise`):
+  one f32 scale per (block_rows x LANE) kernel tile, selected by the grid
+  index map — a tile of small-magnitude parameters no longer inherits the
+  quantization step of the buffer's global amax. Only the scalar-operand
+  BlockSpecs differ; the payload traffic is identical.
 """
 from __future__ import annotations
 
@@ -75,3 +85,49 @@ def dequant_accumulate_2d(q: jax.Array, scale_c: jax.Array, acc: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((rows, LANE), acc.dtype),
         interpret=interpret,
     )(q, scale_c.reshape(1, n_scalars).astype(jnp.float32), acc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_2d_blockwise(x: jax.Array, scales: jax.Array, *,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = False) -> jax.Array:
+    """Per-row-block quantize: ``scales`` is (n_blocks,), one f32 scale per
+    (block_rows, LANE) tile; tile i reads scales[i] via the grid index map."""
+    rows, lane = x.shape
+    assert lane == LANE and rows % block_rows == 0
+    n_blocks = rows // block_rows
+    assert scales.shape == (n_blocks,), (scales.shape, n_blocks)
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(n_blocks,),
+        in_specs=[blk, pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.int8),
+        interpret=interpret,
+    )(x, scales.reshape(n_blocks, 1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dequant_accumulate_2d_blockwise(q: jax.Array, scale_c: jax.Array,
+                                    acc: jax.Array, *,
+                                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                                    interpret: bool = False) -> jax.Array:
+    """Per-row-block fused dequant-accumulate: ``scale_c`` is (n_blocks, 2)
+    rows of (scale_b, c) or (n_blocks, 3) rows of (scale_b, c, alive weight) —
+    tile i reads its own row, same kernel body as the per-buffer variant."""
+    rows, lane = q.shape
+    assert lane == LANE and rows % block_rows == 0
+    n_blocks = rows // block_rows
+    n_scalars = scale_c.shape[-1]
+    assert scale_c.shape == (n_blocks, n_scalars) and n_scalars in (2, 3), \
+        scale_c.shape
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        _dequant_acc_kernel,
+        grid=(n_blocks,),
+        in_specs=[blk, pl.BlockSpec((1, n_scalars), lambda i: (i, 0)), blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), acc.dtype),
+        interpret=interpret,
+    )(q, scale_c.astype(jnp.float32), acc)

@@ -88,6 +88,93 @@ def split_wire(wire: jax.Array) -> tuple[jax.Array, jax.Array]:
     return wire[:-1], scale
 
 
+# ------------------------------------- per-row-block wire format: one f32
+# scale per (block_rows, LANE) kernel tile instead of per buffer, so a tile
+# of small-magnitude parameters (a norm, a bias run) no longer inherits the
+# quantization step of the buffer-wide amax (the PR-1 follow-up). All
+# n_blocks scales ride inside the shipped int8 buffer as lane-folded
+# trailing rows (4 bytes each, 32 scales per row — the PR-3 fold
+# generalized), so the gossip round still ships exactly d collectives.
+def fold_scales_into_wire(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """(rows, LANE) int8 + (n_blocks,) f32 -> (rows + scale_rows, LANE) int8
+    wire buffer (see :func:`repro.core.packing.scale_rows`)."""
+    from repro.core import packing
+    n_blocks = scales.shape[0]
+    tail_rows = packing.scale_rows(n_blocks)
+    sbytes = jax.lax.bitcast_convert_type(
+        scales.astype(jnp.float32), jnp.int8).reshape(-1)
+    tail = jnp.zeros((tail_rows * q.shape[1],), jnp.int8)
+    tail = tail.at[:sbytes.shape[0]].set(sbytes)
+    return jnp.concatenate([q, tail.reshape(tail_rows, q.shape[1])], axis=0)
+
+
+def split_wire_blockwise(wire: jax.Array,
+                         n_blocks: int) -> tuple[jax.Array, jax.Array]:
+    """Invert :func:`fold_scales_into_wire`: (payload, (n_blocks,) f32
+    scales). All slices are static given ``n_blocks`` (baked from the
+    PackSpec), so this is jit-friendly like PR-3's :func:`split_wire`."""
+    from repro.core import packing
+    tail_rows = packing.scale_rows(n_blocks)
+    sbytes = wire[-tail_rows:].reshape(-1)[:packing.SCALE_BYTES * n_blocks]
+    scales = jax.lax.bitcast_convert_type(
+        sbytes.reshape(n_blocks, packing.SCALE_BYTES), jnp.float32)
+    return wire[:-tail_rows], scales.reshape(n_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def quantize_packed_blockwise(buf: jax.Array, *,
+                              block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                              impl: str = "auto"
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Per-row-block int8 quantize of a pre-packed (rows, LANE) buffer:
+    returns (q, (n_blocks,) f32 scales), scale b = block-b amax / 127."""
+    rows, lane = buf.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (buf.shape, block_rows)
+    n_blocks = rows // block_rows
+    amax = jnp.max(jnp.abs(buf.astype(jnp.float32)
+                           .reshape(n_blocks, block_rows * lane)), axis=1)
+    scales = jnp.maximum(amax, 1e-12) / 127.0
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.quantize_blockwise(buf, scales, block_rows), scales
+    q = _k.quantize_2d_blockwise(buf, scales, block_rows=block_rows,
+                                 interpret=(impl == "pallas_interpret"))
+    return q, scales
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def dequant_accumulate_packed_blockwise(q: jax.Array, scales: jax.Array,
+                                        c, acc: jax.Array, alive=None, *,
+                                        block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                                        impl: str = "auto") -> jax.Array:
+    """Fused acc + alive * c * dequant(q) with per-row-block scales — same
+    single HBM pass as :func:`dequant_accumulate_packed`; only the scalar
+    operand grows to one (scale_b, c[, alive]) row per tile."""
+    rows, lane = q.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (q.shape, block_rows)
+    assert acc.shape == q.shape, (acc.shape, q.shape)
+    n_blocks = rows // block_rows
+    assert scales.shape == (n_blocks,), (scales.shape, n_blocks)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        eff_c = jnp.asarray(c, jnp.float32)
+        if alive is not None:
+            eff_c = eff_c * jnp.asarray(alive, jnp.float32)
+        return _ref.dequant_accumulate_blockwise(q, scales, eff_c, acc,
+                                                 block_rows)
+    cols = [scales.astype(jnp.float32),
+            jnp.broadcast_to(jnp.asarray(c, jnp.float32), (n_blocks,))]
+    if alive is not None:
+        cols.append(jnp.broadcast_to(jnp.asarray(alive, jnp.float32),
+                                     (n_blocks,)))
+    sc = jnp.stack(cols, axis=1)
+    return _k.dequant_accumulate_2d_blockwise(
+        q, sc, acc, block_rows=block_rows,
+        interpret=(impl == "pallas_interpret"))
+
+
 # ------------------------------------------------- packed (rows, LANE) fast path
 @functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
 def quantize_packed(buf: jax.Array, *, block_rows: int = _k.DEFAULT_BLOCK_ROWS,

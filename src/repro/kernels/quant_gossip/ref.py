@@ -15,3 +15,25 @@ def dequant_accumulate(q: jax.Array, scale: jax.Array, c: jax.Array,
     return (acc.astype(jnp.float32)
             + c.astype(jnp.float32) * scale.astype(jnp.float32)
             * q.astype(jnp.float32)).astype(acc.dtype)
+
+
+def _per_row(scales: jax.Array, rows: int, block_rows: int) -> jax.Array:
+    """(n_blocks,) per-block scales -> (rows, 1) per-row broadcast."""
+    return jnp.repeat(scales.astype(jnp.float32), block_rows)[:rows, None]
+
+
+def quantize_blockwise(x: jax.Array, scales: jax.Array,
+                       block_rows: int) -> jax.Array:
+    """Per-row-block oracle: row r uses scales[r // block_rows]."""
+    s = _per_row(scales, x.shape[0], block_rows)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequant_accumulate_blockwise(q: jax.Array, scales: jax.Array,
+                                 c: jax.Array, acc: jax.Array,
+                                 block_rows: int) -> jax.Array:
+    s = _per_row(scales, q.shape[0], block_rows)
+    return (acc.astype(jnp.float32)
+            + c.astype(jnp.float32) * s * q.astype(jnp.float32)
+            ).astype(acc.dtype)

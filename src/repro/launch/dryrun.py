@@ -57,10 +57,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     with mesh:
         if shape.kind == "train":
             setup = steps.build_train_step(cfg, shape, mesh, par, dfl)
-            lowered = setup.step_fn.lower(
+            step_args = [
                 params_lib.shape_structs(setup.param_struct),
                 setup.input_specs["batch"], setup.input_specs["lr"],
-                setup.input_specs["alive"], setup.input_specs["gates"])
+                setup.input_specs["alive"], setup.input_specs["gates"]]
+            if "inflight" in setup.input_specs:  # pipelined gossip state
+                step_args.append(setup.input_specs["inflight"])
+            lowered = setup.step_fn.lower(*step_args)
             extra = {
                 "n_clients": setup.n_clients,
                 "overlay": setup.overlay.name if setup.overlay else None,
@@ -69,11 +72,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "gossip_lambda": (setup.gossip_spec.lam
                                   if setup.gossip_spec else None),
                 "gossip_impl": par.gossip_impl,
+                "gossip_delay": setup.gossip_delay,
             }
             if setup.pack_spec is not None:
-                # packed-padding overhead of the per-device gossip buffers
-                # (ROADMAP follow-up: smoke models pad ~17%, real archs
-                # should be <<1%)
+                # per-device gossip-buffer padding, measured per cell via
+                # roofline/analysis.packing_report (and across every arch by
+                # bench_comm.padding_by_arch: full-size trees pad <= 0.003%,
+                # smoke 17-38% — a smoke-model artifact, not a wire cost)
                 extra["packing"] = analysis.packing_report(setup.pack_spec)
         else:
             setup = steps.build_serve_step(cfg, shape, mesh)
@@ -151,7 +156,8 @@ def main() -> None:
     ap.add_argument("--label", default="", help="config-variant tag (perf runs)")
     ap.add_argument("--gossip", default=None,
                     choices=["dense", "ppermute", "ppermute_quant",
-                             "ppermute_packed", "ppermute_packed_quant"])
+                             "ppermute_packed", "ppermute_packed_quant",
+                             "ppermute_packed_async"])
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -170,7 +176,11 @@ def main() -> None:
                     continue
                 par = registry.parallel_for(arch)
                 if args.gossip:
-                    par = dataclasses.replace(par, gossip_impl=args.gossip)
+                    # the async impl is only interesting pipelined; delay=0
+                    # would lower to HLO identical to ppermute_packed
+                    delay = 1 if args.gossip == "ppermute_packed_async" else 0
+                    par = dataclasses.replace(par, gossip_impl=args.gossip,
+                                              gossip_delay=delay)
                 try:
                     rec = run_cell(arch, shape.name, mk, par=par,
                                    label=args.label)

@@ -35,11 +35,23 @@ zero recompiles, and gates compose transparently with straggler masking and
 splice repair (plans are stateless in the round index, so a repair that
 changes the schedule count needs no plan surgery).
 
+Pipelined gossip (``gossip_delay=1``) is the third rider on the design: the
+round mixes the **previous** round's packed snapshot
+(`gossip.mix_packed_stacked_delayed`, `mix_dense_delayed` semantics) and the
+snapshot is carried as trainer state — primed from the initial params at the
+first step, threaded through every round, and **remapped through splice
+repair together with the params** (its layout depends only on the parameter
+structure, so `old2new` row compaction is exact; the spec/degree change from
+the repair only alters who gathers from it). Delay composes with alive masks
+and round-plan gates unchanged, and keeps the same retrace accounting: churn
+and plans are data, membership changes re-jit once.
+
 The default step builder runs the stacked simulator round
 (`gossip.mix_packed_stacked`: vmapped local DFedAvgM + packed gather-mix on
 one device); pass ``step_builder`` to drop in the production shard_map step
 (`launch.steps.build_train_step` has the same ``(params, batches, lr,
-alive, gates)`` calling convention).
+alive, gates)`` calling convention — its pipelined variant additionally
+threads the in-flight snapshot, see `launch.steps.TrainSetup`).
 """
 from __future__ import annotations
 
@@ -77,14 +89,37 @@ class ElasticTrainer:
     failure_rounds: int = 3
     step_builder: StepBuilder | None = None
     plan: RoundPlan | None = None  # time-varying round plan (gate source)
+    # 1 = pipelined gossip: each round mixes the PREVIOUS round's packed
+    # snapshot (mix_dense_delayed semantics) and the snapshot is carried as
+    # trainer state — see _inflight. 0 = synchronous (unchanged path).
+    gossip_delay: int = 0
 
     def __post_init__(self):
+        if self.gossip_delay not in (0, 1):
+            raise ValueError(f"gossip_delay must be 0 or 1, "
+                             f"got {self.gossip_delay}")
+        if self.gossip_delay and self.step_builder is not None:
+            # the production pipelined step threads its own in-flight state
+            # (mesh-leading-dims layout, primed via TrainSetup.init_inflight)
+            # with a different argument order than this trainer's stacked
+            # round — wrapping it here would silently mis-thread the state,
+            # so the combination is rejected until a production wrapper
+            # protocol exists. Use the stacked delayed round (step_builder
+            # =None) or drive launch.steps.build_train_step directly.
+            raise ValueError("gossip_delay=1 is not supported together with "
+                             "a custom step_builder; the pipelined "
+                             "production step manages its own in-flight "
+                             "state (launch.steps.TrainSetup)")
         self.health = failures_lib.HealthTracker(
             self.overlay.n, self.straggler_rounds, self.failure_rounds)
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         self.n_traces = 0          # jit traces of the round fn (see step())
         self.round_no = 0          # round index feeding the plan's gates
         self.repairs: list[dict] = []
+        # delayed mode's in-flight snapshot (pack_state_stacked of last
+        # round's post-local-step params); primed lazily at the first step
+        # so round 0 mixes the caller's initial params
+        self._inflight = None
         self._round = self._build(self.spec)
 
     def _build(self, spec: gossip_lib.GossipSpec):
@@ -105,14 +140,27 @@ class ElasticTrainer:
         # predicate — it matches steps.py's `round_plan != "static"` rule
         use_plan = plan_lib.is_active(self.plan)
 
+        def client(p, b, lr):
+            v = jax.tree.map(jnp.zeros_like, p)
+            p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
+                                             self.dcfg, lr=lr)
+            return p, loss
+
+        if self.gossip_delay:
+            def round_fn(params, inflight, batches, lr, alive, gates):
+                self.n_traces += 1  # python side effect: only runs on trace
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                mixed, inflight = gossip_lib.mix_packed_stacked_delayed(
+                    params, inflight, spec, alive,
+                    gates=gates if use_plan else None)
+                return mixed, losses, inflight
+            return jax.jit(round_fn)
+
         def round_fn(params, batches, lr, alive, gates):
             self.n_traces += 1  # python side effect: runs only when tracing
-            def client(p, b):
-                v = jax.tree.map(jnp.zeros_like, p)
-                p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
-                                                 self.dcfg, lr=lr)
-                return p, loss
-            params, losses = jax.vmap(client)(params, batches)
+            params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                params, batches, lr)
             mixed = gossip_lib.mix_packed_stacked(
                 params, spec, alive, gates=gates if use_plan else None)
             return mixed, losses
@@ -154,11 +202,14 @@ class ElasticTrainer:
         if not len(dead):
             return params, client_state, None
 
-        bundle = params if client_state is None else (params, client_state)
+        # the in-flight snapshot rides the same remap as params: its layout
+        # depends only on the parameter structure (never on the topology),
+        # so dropping the dead rows keeps the delayed semantics exact — the
+        # survivors' next round still mixes the survivors' last snapshot
+        bundle = (params, client_state, self._inflight)
         self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
             self.overlay, list(dead), bundle)
-        params, client_state = (bundle if client_state is not None
-                                else (bundle, None))
+        params, client_state, self._inflight = bundle
         self.repairs.append({"dead": [int(d) for d in dead],
                              "n_after": self.overlay.n})
         # survivors carry their in-flight heartbeat counters to the
@@ -169,12 +220,19 @@ class ElasticTrainer:
 
     def step(self, params: PyTree, batches: PyTree, lr: float):
         """Run one round under the current health mask and the round plan's
-        gates (no rebuilds here — both are data arguments)."""
+        gates (no rebuilds here — both are data arguments). In delayed mode
+        the in-flight snapshot is threaded through as trainer state."""
         alive = jnp.asarray(self.health.alive_mask())
         gates = self.gates_for_round()
         self.round_no += 1
-        return self._round(params, batches, jnp.asarray(lr, jnp.float32),
-                           alive, gates)
+        lr = jnp.asarray(lr, jnp.float32)
+        if self.gossip_delay:
+            if self._inflight is None:  # prime: round 0 mixes the initial
+                self._inflight = gossip_lib.pack_state_stacked(params)
+            params, losses, self._inflight = self._round(
+                params, self._inflight, batches, lr, alive, gates)
+            return params, losses
+        return self._round(params, batches, lr, alive, gates)
 
     def checkpoint(self, rnd: int, params: PyTree) -> None:
         if self.ckpt is not None:

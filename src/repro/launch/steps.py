@@ -13,7 +13,12 @@ This is where the paper's technique meets the device grid:
   reduction pass; `"ppermute_packed_quant"` additionally ships int8 payloads
   through the Pallas quantize / dequant-accumulate kernels; `"ppermute"` /
   `"ppermute_quant"` are the per-leaf baselines (d x n_leaves collectives);
-  `"dense"` is the paper-naive dense mixing einsum (the §Perf baseline).
+  `"dense"` is the paper-naive dense mixing einsum (the §Perf baseline);
+  `"ppermute_packed_async"` + `gossip_delay=1` is the **pipelined** packed
+  engine: the step carries last round's packed snapshot as donated state,
+  so the d ppermutes read a step *input* and overlap with the local-step
+  scan (one-round-delayed mixing, `gossip.mix_dense_delayed` semantics);
+  with `gossip_delay=0` it is bit-identical to `"ppermute_packed"`.
 
   The train step takes a per-client ``alive`` 0/1 vector as its **fourth,
   donated argument** and a per-schedule ``gates`` float vector (the
@@ -105,17 +110,25 @@ def build_overlay(n: int, dfl: DFLConfig) -> topology.Overlay | None:
 class TrainSetup:
     # jitted (params, batch, lr, alive, gates) -> (params, metrics); params,
     # the (n_clients,) f32 alive vector, and the (n_schedules,) f32 gate
-    # vector are DONATED — ship a fresh mask + round-plan gates per round
+    # vector are DONATED — ship a fresh mask + round-plan gates per round.
+    # Pipelined mode (gossip_impl="ppermute_packed_async", gossip_delay=1)
+    # appends the in-flight snapshot as a DONATED sixth argument and a third
+    # output: (params, batch, lr, alive, gates, inflight) ->
+    # (params, metrics, inflight). Prime it once with init_inflight(params)
+    # (round 0 then mixes the initial params as its delayed snapshot).
     step_fn: Any
     param_specs: PyTree            # PartitionSpecs (client-stacked)
     param_struct: PyTree           # Leaf pytree (client-stacked)
-    input_specs: dict              # ShapeDtypeStructs: batch, lr, alive, gates
+    input_specs: dict              # ShapeDtypeStructs: batch, lr, alive,
+    #                                gates (+ inflight in pipelined mode)
     in_shardings: Any
     overlay: topology.Overlay | None
     gossip_spec: gossip_lib.GossipSpec | None
     dfl_mesh: Mesh
     n_clients: int
     pack_spec: packing_lib.PackSpec | None = None  # packed-gossip layout
+    gossip_delay: int = 0          # 1 = pipelined (one-round-delayed) gossip
+    init_inflight: Any = None      # jitted params -> in-flight snapshot
 
 
 def _train_rules(caxes: tuple[str, ...], zero3: bool = True) -> dict:
@@ -211,9 +224,23 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     # mixing is elementwise, so each device mixes its local shard in place —
     # no resharding, and every ppermute ships only shard-sized payloads)
     pack_spec = None
-    if par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant"):
+    if par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant",
+                           "ppermute_packed_async"):
         pack_spec = packing_lib.make_pack_spec(
             local_shard_structs(struct, pspecs, dmesh))
+
+    # pipelined gossip: delay=1 is only meaningful (and only legal) on the
+    # async packed impl; the async impl with delay=0 degrades to the exact
+    # synchronous packed path (bit-identical — the regression anchor)
+    if par.gossip_delay not in (0, 1):
+        raise ValueError(f"gossip_delay must be 0 or 1, got {par.gossip_delay}")
+    if par.gossip_delay == 1 and par.gossip_impl != "ppermute_packed_async":
+        raise ValueError("gossip_delay=1 requires "
+                         "gossip_impl='ppermute_packed_async', got "
+                         f"{par.gossip_impl!r}")
+    use_delay = (par.gossip_impl == "ppermute_packed_async"
+                 and par.gossip_delay == 1 and gspec is not None
+                 and overlay is not None)
 
     # build-time decision: the gate pathway only engages when the config
     # names a real round plan. A static run keeps the exact (possibly
@@ -239,8 +266,11 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                 params, gossip_lib.gated_mixing_matrix(
                     gspec, gates if use_gates else None, alive))
 
-        packed = par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant")
-        if par.gossip_impl == "ppermute_packed":
+        packed = par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant",
+                                     "ppermute_packed_async")
+        if par.gossip_impl in ("ppermute_packed", "ppermute_packed_async"):
+            # the async impl with gossip_delay=0 IS the synchronous packed
+            # executor (bit-identical); delay=1 never reaches gossip_fn
             mixer = functools.partial(gossip_lib.ppermute_mix_packed,
                                       pack_spec=pack_spec)
         elif par.gossip_impl == "ppermute_packed_quant":
@@ -265,6 +295,51 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
 
         return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P(), P()),
                                   out_specs=pspecs)(params, alive, gates)
+
+    # ---- pipelined gossip state (delay=1): the in-flight snapshot is the
+    # per-device packed buffer of last round's post-local-step shards. Its
+    # global representation carries one leading dim per mesh axis (each
+    # sharded over that axis), so the fully-manual island sees exactly one
+    # (rows, LANE) block per device — the state never reshards.
+    axis_names = tuple(dmesh.axis_names)
+    axis_sizes = tuple(int(dmesh.shape[a]) for a in axis_names)
+    inflight_structs = inflight_pspecs = None
+    if use_delay:
+        inflight_pspecs = tuple(P(*axis_names, None, None)
+                                for _ in range(pack_spec.n_buffers))
+        inflight_structs = tuple(
+            jax.ShapeDtypeStruct(axis_sizes + pack_spec.buffer_shape(b),
+                                 jnp.dtype(pack_spec.buffer_dtypes[b]))
+            for b in range(pack_spec.n_buffers))
+        lead = (1,) * len(axis_sizes)
+
+        def gossip_fn_delayed(params, alive, gates, inflight):
+            def body(p, alive_vec, gate_vec, state):
+                local = jax.tree.map(lambda x: x[0], p)
+                state_local = tuple(s.reshape(s.shape[-2:]) for s in state)
+                mixed, new_state = gossip_lib.ppermute_mix_packed_delayed(
+                    local, state_local, gspec, caxes if len(caxes) > 1
+                    else caxes[0], pack_spec=pack_spec, alive=alive_vec,
+                    gates=gate_vec if use_gates else None)
+                return (jax.tree.map(lambda x: x[None], mixed),
+                        tuple(s.reshape(lead + s.shape) for s in new_state))
+
+            return mesh_lib.shard_map(
+                body, dmesh, in_specs=(pspecs, P(), P(), inflight_pspecs),
+                out_specs=(pspecs, inflight_pspecs))(params, alive, gates,
+                                                     inflight)
+
+        def snapshot_fn(params):
+            """Prime the pipeline: pack the current post-mix params into the
+            in-flight layout (round 0 then mixes the initial params as its
+            delayed snapshot — the mix_dense_delayed convention)."""
+            def body(p):
+                local = jax.tree.map(lambda x: x[0], p)
+                bufs = packing_lib.pack_tree(local, pack_spec)
+                return tuple(b.reshape(lead + b.shape) for b in bufs)
+
+            return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs,),
+                                      out_specs=inflight_pspecs)(params)
 
     # activation constraints visible inside the vmapped client round
     act_rules = {}
@@ -297,32 +372,61 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             params = gossip_fn(params, alive, gates)
         return params, {"loss": jnp.mean(loss)}
 
+    def train_step_delayed(params, batch, lr, alive, gates, inflight):
+        # the d ppermutes inside gossip_fn_delayed read only `inflight` (a
+        # step input), so the scheduler overlaps them with this scan
+        with activation_sharding(act_rules):
+            params, loss = jax.vmap(client_round, in_axes=(0, 0, None),
+                                    spmd_axis_name=caxes)(params, batch, lr)
+            params, inflight = gossip_fn_delayed(params, alive, gates,
+                                                 inflight)
+        return params, {"loss": jnp.mean(loss)}, inflight
+
+    param_shardings = jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs)
     in_shardings = (
-        jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
+        param_shardings,
         jax.tree.map(lambda s: NamedSharding(dmesh, s), batch_pspec),
         NamedSharding(dmesh, P()),
         NamedSharding(dmesh, P()),
         NamedSharding(dmesh, P()),
     )
     out_shardings = (
-        jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs),
+        param_shardings,
         NamedSharding(dmesh, P()),
     )
+    input_specs = {"batch": batch_specs,
+                   "lr": jax.ShapeDtypeStruct((), jnp.float32),
+                   "alive": jax.ShapeDtypeStruct((n_cl,), jnp.float32),
+                   "gates": jax.ShapeDtypeStruct((n_sched,), jnp.float32)}
     # alive (argnum 3) and the round-plan gates (argnum 4) are donated with
     # the params: each round ships a fresh liveness vector + gate vector and
     # the previous ones are dead weight. Consequence: callers must NOT
     # reuse a cached device array across rounds (it is consumed); build the
     # mask/gates per round (ElasticTrainer does)
-    step = jax.jit(train_step, in_shardings=in_shardings,
-                   out_shardings=out_shardings, donate_argnums=(0, 3, 4))
+    init_inflight = None
+    if use_delay:
+        inflight_shardings = tuple(NamedSharding(dmesh, s)
+                                   for s in inflight_pspecs)
+        in_shardings = in_shardings + (inflight_shardings,)
+        out_shardings = out_shardings + (inflight_shardings,)
+        input_specs["inflight"] = inflight_structs
+        # the snapshot (argnum 5) is donated too: the step consumes last
+        # round's in-flight buffers and emits this round's
+        step = jax.jit(train_step_delayed, in_shardings=in_shardings,
+                       out_shardings=out_shardings,
+                       donate_argnums=(0, 3, 4, 5))
+        init_inflight = jax.jit(snapshot_fn, in_shardings=(param_shardings,),
+                                out_shardings=inflight_shardings)
+    else:
+        step = jax.jit(train_step, in_shardings=in_shardings,
+                       out_shardings=out_shardings, donate_argnums=(0, 3, 4))
     return TrainSetup(
         step_fn=step, param_specs=pspecs, param_struct=struct,
-        input_specs={"batch": batch_specs,
-                     "lr": jax.ShapeDtypeStruct((), jnp.float32),
-                     "alive": jax.ShapeDtypeStruct((n_cl,), jnp.float32),
-                     "gates": jax.ShapeDtypeStruct((n_sched,), jnp.float32)},
+        input_specs=input_specs,
         in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
-        dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec)
+        dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec,
+        gossip_delay=par.gossip_delay if use_delay else 0,
+        init_inflight=init_inflight)
 
 
 # ------------------------------------------------------------- serve steps

@@ -44,10 +44,17 @@ class SimTrainer:
     dcfg: dfedavg.DFedAvgMConfig
     ckpt: CheckpointManager | None = None
     plan: overlay_plan.RoundPlan | None = None  # time-varying gates source
+    # 1 = pipelined gossip (mix the previous round's packed snapshot,
+    # mix_dense_delayed semantics); 0 = synchronous (unchanged)
+    gossip_delay: int = 0
 
     def __post_init__(self):
+        if self.gossip_delay not in (0, 1):
+            raise ValueError(f"gossip_delay must be 0 or 1, "
+                             f"got {self.gossip_delay}")
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         self._alive = np.ones(self.overlay.n, dtype=np.float32)
+        self._inflight = None  # delayed mode's carried snapshot
         self._round_fn = self._build(self.spec)
 
     def _build(self, spec):
@@ -55,15 +62,27 @@ class SimTrainer:
         # (exact Chow weights; shared predicate with ElasticTrainer/steps.py)
         use_plan = overlay_plan.is_active(self.plan)
 
+        def client(p, b, lr):
+            v = jax.tree.map(jnp.zeros_like, p)
+            p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
+                                             self.dcfg, lr=lr)
+            return p, loss
+
+        if self.gossip_delay:
+            @partial(jax.jit, static_argnames=())
+            def round_fn(params, inflight, batches, lr, alive, gates):
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                params, inflight = gossip_lib.mix_packed_stacked_delayed(
+                    params, inflight, spec, alive,
+                    gates=gates if use_plan else None)
+                return params, losses, inflight
+            return round_fn
+
         @partial(jax.jit, static_argnames=())
         def round_fn(params, batches, lr, alive, gates):
-            def client(p, b):
-                v = jax.tree.map(jnp.zeros_like, p)
-                p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
-                                                 self.dcfg, lr=lr)
-                return p, loss
-
-            params, losses = jax.vmap(client)(params, batches)
+            params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                params, batches, lr)
             params = gossip_lib.mix_packed_stacked(
                 params, spec, alive, gates=gates if use_plan else None)
             return params, losses
@@ -83,9 +102,12 @@ class SimTrainer:
         self._alive = np.asarray(alive_mask, dtype=np.float32)
 
     def repair(self, dead: list[int], params: PyTree) -> PyTree:
-        """Permanent failures: splice repair, state remap, re-jit."""
-        self.overlay, self.spec, params, old2new = failures_lib.repair_and_remap(
-            self.overlay, dead, params)
+        """Permanent failures: splice repair, state remap, re-jit. The
+        delayed-mode in-flight snapshot rides the same row compaction."""
+        bundle = (params, self._inflight)
+        self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
+            self.overlay, dead, bundle)
+        params, self._inflight = bundle
         # surviving stragglers keep their mask through the index compaction
         survivors = old2new >= 0
         new_alive = np.ones(self.overlay.n, dtype=np.float32)
@@ -109,10 +131,17 @@ class SimTrainer:
                     self.set_stragglers(mask)
             t0 = time.time()
             batches = batch_fn(rnd)
-            params, losses = self._round_fn(params, batches,
-                                            jnp.asarray(lr_fn(rnd), jnp.float32),
-                                            jnp.asarray(self._alive),
-                                            self._gates(rnd))
+            lr_t = jnp.asarray(lr_fn(rnd), jnp.float32)
+            if self.gossip_delay:
+                if self._inflight is None:  # prime with the initial params
+                    self._inflight = gossip_lib.pack_state_stacked(params)
+                params, losses, self._inflight = self._round_fn(
+                    params, self._inflight, batches, lr_t,
+                    jnp.asarray(self._alive), self._gates(rnd))
+            else:
+                params, losses = self._round_fn(params, batches, lr_t,
+                                                jnp.asarray(self._alive),
+                                                self._gates(rnd))
             rec = {"round": rnd,
                    "train_loss": float(jnp.mean(losses)),
                    "seconds": round(time.time() - t0, 3)}
@@ -128,7 +157,7 @@ class SimTrainer:
 def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 local_steps=3, batch=8, seq=64, lr=0.5, momentum=0.9,
                 ckpt_dir=None, seed=0, drop_fraction=0.0, drop_round=10,
-                round_plan="static") -> list[dict]:
+                round_plan="static", gossip_delay=0) -> list[dict]:
     from repro.data import federated, pipeline, shakespeare
 
     toks, vocab = shakespeare.corpus()
@@ -153,7 +182,8 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
     plan = overlay_plan.make_plan(dfl.round_plan, k=dfl.plan_k,
                                   fraction=dfl.plan_fraction, seed=seed)
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
-                         dcfg=dcfg, ckpt=ckpt, plan=plan)
+                         dcfg=dcfg, ckpt=ckpt, plan=plan,
+                         gossip_delay=gossip_delay)
 
     # held-out evaluation: last 10% of the corpus
     ev = pipeline.TokenBatcher(tokens=toks, spans=[(int(len(toks) * .9),
@@ -205,6 +235,8 @@ def main() -> None:
                     choices=["static", "one_peer", "random_subset",
                              "throttle"],
                     help="time-varying round plan (gates-as-data)")
+    ap.add_argument("--gossip-delay", type=int, default=0, choices=[0, 1],
+                    help="1 = pipelined (one-round-delayed) gossip")
     ap.add_argument("--local-steps", type=int, default=3)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
@@ -217,7 +249,7 @@ def main() -> None:
                        local_steps=args.local_steps, lr=args.lr,
                        ckpt_dir=args.ckpt_dir,
                        drop_fraction=args.drop_fraction,
-                       round_plan=args.plan)
+                       round_plan=args.plan, gossip_delay=args.gossip_delay)
     for rec in hist:
         print(json.dumps(rec))
     if args.out:

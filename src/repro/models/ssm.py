@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import SSMConfig
 from repro.models import layers as L
 from repro.models.params import Leaf
 

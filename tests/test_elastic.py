@@ -45,7 +45,8 @@ def test_elastic_full_lifecycle(tmp_path):
     assert trainer.n_clients == n
 
     # rounds 2-3: client 5 misses heartbeats -> straggler, then dead
-    alive = np.ones(n); alive[5] = 0
+    alive = np.ones(n)
+    alive[5] = 0
     params, _, old2new = trainer.observe_heartbeats(alive, params)  # straggler
     assert trainer.n_clients == n and old2new is None
     params, _losses = trainer.step(params, _batches(targets, 2), 0.3)
@@ -80,7 +81,8 @@ def test_straggler_round_keeps_progress():
                              loss_fn=quad_loss, dcfg=cfg,
                              straggler_rounds=1, failure_rounds=99)
     params = {"w": jnp.ones((n, dim))}
-    alive = np.ones(n); alive[0] = 0
+    alive = np.ones(n)
+    alive[0] = 0
     for rnd in range(6):
         params, _, _ = trainer.observe_heartbeats(alive, params)
         params, _ = trainer.step(params, _batches(targets, 1), 0.5)
@@ -152,7 +154,8 @@ def test_old2new_remaps_client_state_through_death():
                             (1, dim))}
     opt_state = {"slot": jnp.arange(n, dtype=jnp.float32) * 100.0}
 
-    alive = np.ones(n); alive[3] = 0; alive[7] = 0
+    alive = np.ones(n)
+    alive[[3, 7]] = 0
     trainer.health.observe(alive)  # first miss: stragglers
     params2, opt2, old2new = trainer.observe_heartbeats(alive, params,
                                                         opt_state)
@@ -182,7 +185,8 @@ def test_health_counters_survive_repair():
                              straggler_rounds=1, failure_rounds=3)
     params = {"w": jnp.zeros((n, 2))}
     # client 2 dies (3 misses); client 6 is mid-flight (2 misses so far)
-    alive = np.ones(n); alive[2] = 0
+    alive = np.ones(n)
+    alive[2] = 0
     trainer.health.observe(alive)
     trainer.health.observe(alive)
     alive[6] = 0
@@ -193,7 +197,8 @@ def test_health_counters_survive_repair():
     assert new6 in trainer.health.stragglers()
     # one more miss for (old) client 6 -> it is declared dead, solely
     # because its pre-repair counter survived the remap
-    alive2 = np.ones(n - 1); alive2[new6] = 0
+    alive2 = np.ones(n - 1)
+    alive2[new6] = 0
     trainer.health.observe(alive2)
     trainer.health.observe(alive2)
     assert new6 in trainer.health.dead()
@@ -235,6 +240,108 @@ def test_elastic_packed_matches_dense_masked_reference():
                                    np.asarray(ref["w"]),
                                    rtol=2e-5, atol=2e-5)
     assert trainer.n_traces == 1
+
+
+def test_delayed_zero_retrace_under_churn_and_plan():
+    """Pipelined trainer (gossip_delay=1): straggler churn AND an active
+    one-peer round plan must reuse ONE executable — the in-flight snapshot
+    is step state, never trace structure."""
+    from repro.overlay.plan import OnePeerPlan
+
+    n, dim = 10, 3
+    targets = jnp.zeros((n, dim))
+    cfg = dfedavg.DFedAvgMConfig(local_steps=1, lr=0.2, momentum=0.0)
+    trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=0),
+                             loss_fn=quad_loss, dcfg=cfg,
+                             straggler_rounds=1, failure_rounds=99,
+                             gossip_delay=1, plan=OnePeerPlan())
+    params = {"w": jnp.ones((n, dim))}
+    rng = np.random.default_rng(0)
+    for rnd in range(8):
+        alive = (rng.random(n) > 0.3).astype(np.float32)
+        if rnd == 3:
+            alive[:] = 1.0
+        params, _, old2new = trainer.observe_heartbeats(alive, params)
+        assert old2new is None
+        params, _ = trainer.step(params, _batches(targets, 1), 0.2)
+    assert trainer.n_traces == 1, trainer.n_traces
+
+
+def test_delayed_trainer_matches_dense_delayed_reference():
+    """Acceptance: the pipelined trainer under scripted straggler churn
+    matches a manual loop with the mix_dense_delayed oracle — the delayed
+    snapshot is the previous round's post-local-step state, primed with the
+    initial params."""
+    n, dim = 10, 5
+    r = np.random.default_rng(2)
+    targets = jnp.asarray(r.standard_normal((n, dim)), jnp.float32)
+    cfg = dfedavg.DFedAvgMConfig(local_steps=2, lr=0.3, momentum=0.5)
+    overlay = expander_overlay(n, 4, seed=3)
+    trainer = ElasticTrainer(overlay=overlay, loss_fn=quad_loss, dcfg=cfg,
+                             straggler_rounds=1, failure_rounds=99,
+                             gossip_delay=1)
+    params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
+    ref = {"w": params["w"]}
+    snap = {"w": params["w"]}          # y_{-1} := initial params
+    spec = trainer.spec
+
+    def local(p, b):
+        def client(pc, bc):
+            v = jax.tree.map(jnp.zeros_like, pc)
+            pc, _, loss = dfedavg.local_round(pc, v, bc, quad_loss, cfg,
+                                              lr=0.3)
+            return pc, loss
+        return jax.vmap(client)(p, b)
+
+    rng = np.random.default_rng(0)
+    for rnd in range(6):
+        mask = (rng.random(n) > 0.25).astype(np.float32)
+        if mask.sum() < 2:
+            mask[:] = 1.0
+        params, _, _ = trainer.observe_heartbeats(mask, params)
+        batches = _batches(targets, 2)
+        params, _ = trainer.step(params, batches, 0.3)
+        w, _ = local(ref, batches)
+        ref = gossip.mix_dense_delayed(w, snap, spec, None,
+                                       jnp.asarray(mask))
+        snap = w
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(ref["w"]),
+                                   rtol=2e-5, atol=2e-5)
+    assert trainer.n_traces == 1
+
+
+def test_delayed_inflight_survives_repair():
+    """The in-flight snapshot must follow the survivors through splice
+    repair by the same old2new row compaction as the params (and the step
+    after the repair must run on the remapped snapshot)."""
+    n, dim = 12, 4
+    r = np.random.default_rng(1)
+    targets = jnp.asarray(r.standard_normal((n, dim)), jnp.float32)
+    cfg = dfedavg.DFedAvgMConfig(local_steps=2, lr=0.1, momentum=0.5)
+    trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=0),
+                             loss_fn=quad_loss, dcfg=cfg,
+                             straggler_rounds=1, failure_rounds=2,
+                             gossip_delay=1)
+    params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
+    params, _ = trainer.step(params, _batches(targets, 2), 0.1)  # primes
+    alive = np.ones(n)
+    alive[5] = 0
+    params, _, old2new = trainer.observe_heartbeats(alive, params)
+    assert old2new is None                       # straggler, not dead yet
+    params, _ = trainer.step(params, _batches(targets, 2), 0.1)
+    pre = [np.asarray(b) for b in trainer._inflight]
+    params, _, old2new = trainer.observe_heartbeats(alive, params)  # dead
+    assert old2new is not None and old2new[5] == -1
+    survivors = np.arange(n) != 5
+    for b_pre, b_post in zip(pre, trainer._inflight):
+        assert np.asarray(b_post).shape[0] == n - 1
+        np.testing.assert_array_equal(np.asarray(b_post), b_pre[survivors])
+    surv_targets = jnp.concatenate([targets[:5], targets[6:]])
+    params, _ = trainer.step(params, _batches(surv_targets, 2), 0.1)
+    assert params["w"].shape[0] == n - 1
+    assert bool(jnp.isfinite(params["w"]).all())
+    assert trainer.n_traces == 2                 # one re-jit per membership
 
 
 def test_failure_plan_and_masks():

@@ -77,7 +77,9 @@ class TestShardMapGossip:
     """ppermute path == stacked-gather path, on real (fake-device) meshes."""
 
     def test_ppermute_matches_schedules(self):
-        import subprocess, sys, textwrap
+        import subprocess
+        import sys
+        import textwrap
         code = textwrap.dedent("""
             import os
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -117,7 +119,8 @@ class TestFailureAdjustedGossip:
     def test_alive_adjusted_rows_sum_to_one(self):
         ov = topology.expander_overlay(12, 4, seed=0)
         spec = gossip.make_gossip_spec(ov)
-        alive = np.ones(12); alive[[2, 7]] = 0
+        alive = np.ones(12)
+        alive[[2, 7]] = 0
         adj = failures.alive_adjusted_spec(spec, alive)
         # reconstruct the effective matrix
         m = np.diag(list(adj.self_weights))
@@ -137,7 +140,8 @@ class TestFailureAdjustedGossip:
         ov = topology.expander_overlay(8, 4, seed=1)
         spec = gossip.make_gossip_spec(ov)
         x = _tree(8, seed=4)
-        alive = np.ones(8); alive[3] = 0
+        alive = np.ones(8)
+        alive[3] = 0
         adj = failures.alive_adjusted_spec(spec, alive)
         y = gossip.mix_schedules(x, adj)
         np.testing.assert_allclose(y["a"][3], x["a"][3])  # dead keeps params
@@ -147,7 +151,8 @@ class TestFailureAdjustedGossip:
         effective matrix row-for-row (the packed engine's masking math)."""
         ov = topology.expander_overlay(12, 4, seed=0)
         spec = gossip.make_gossip_spec(ov)
-        alive = np.ones(12, np.float32); alive[[2, 7]] = 0
+        alive = np.ones(12, np.float32)
+        alive[[2, 7]] = 0
         table = np.asarray(gossip.alive_weight_table(spec, jnp.asarray(alive)))
         # scatter the table back into an n x n matrix
         m = np.zeros((12, 12))
@@ -181,6 +186,90 @@ class TestFailureAdjustedGossip:
             for k in x:
                 np.testing.assert_allclose(got[k], ref[k],
                                            rtol=2e-5, atol=2e-5)
+
+
+class TestDelayedGossip:
+    """Pipelined (one-round-delayed) mixing: the stacked delayed executor
+    against the mix_dense_delayed oracle, and the delay=0 anchors."""
+
+    def test_delayed_stacked_matches_dense_delayed(self):
+        ov = topology.expander_overlay(10, 4, seed=2)
+        spec = gossip.make_gossip_spec(ov)
+        fresh = _tree(10, seed=5)
+        prev = _tree(10, seed=6)
+        snap = gossip.pack_state_stacked(prev)
+        got, new_snap = gossip.mix_packed_stacked_delayed(fresh, snap, spec)
+        ref = gossip.mix_dense_delayed(fresh, prev, spec)
+        for k in fresh:
+            np.testing.assert_allclose(got[k], ref[k], rtol=2e-5, atol=2e-5)
+        # the new in-flight state is this round's packed fresh tree
+        want = gossip.pack_state_stacked(fresh)
+        for a, b in zip(new_snap, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_delayed_composes_with_alive_and_gates(self):
+        ov = topology.expander_overlay(12, 4, seed=0)
+        spec = gossip.make_gossip_spec(ov)
+        fresh, prev = _tree(12, seed=7), _tree(12, seed=8)
+        snap = gossip.pack_state_stacked(prev)
+        r = np.random.default_rng(0)
+        for t in range(3):
+            alive = (r.random(12) > 0.3).astype(np.float32)
+            if alive.sum() < 2:
+                alive[:] = 1
+            gates = np.zeros(spec.degree, np.float32)
+            gates[t % spec.degree] = 1.0  # one-peer round
+            got, _ = gossip.mix_packed_stacked_delayed(
+                fresh, snap, spec, jnp.asarray(alive),
+                gates=jnp.asarray(gates))
+            ref = gossip.mix_dense_delayed(fresh, prev, spec,
+                                           jnp.asarray(gates),
+                                           jnp.asarray(alive))
+            for k in fresh:
+                np.testing.assert_allclose(got[k], ref[k],
+                                           rtol=2e-5, atol=2e-5)
+
+    def test_self_snapshot_is_bitwise_sync(self):
+        """delay=0 anchor: feeding the CURRENT tree as the snapshot must
+        reproduce the synchronous packed executor bit-for-bit (identical
+        stack, identical einsum)."""
+        ov = topology.expander_overlay(8, 4, seed=1)
+        spec = gossip.make_gossip_spec(ov)
+        x = _tree(8, seed=9)
+        got, _ = gossip.mix_packed_stacked_delayed(
+            x, gossip.pack_state_stacked(x), spec)
+        sync = gossip.mix_packed_stacked(x, spec)
+        for k in x:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(sync[k]))
+
+    def test_dense_delayed_with_fresh_equals_sync_oracle(self):
+        ov = topology.expander_overlay(10, 4, seed=3)
+        spec = gossip.make_gossip_spec(ov)
+        x = _tree(10, seed=10)
+        got = gossip.mix_dense_delayed(x, x, spec)
+        ref = gossip.mix_dense(x, ov.mixing_matrix())
+        for k in x:
+            np.testing.assert_allclose(got[k], ref[k], rtol=2e-5, atol=2e-5)
+
+    def test_delayed_recursion_reaches_consensus(self):
+        """One-round staleness slows mixing but still contracts to
+        consensus (the convergence story of asynchronous gossip)."""
+        n = 16
+        ov = topology.expander_overlay(n, 4, seed=0)
+        spec = gossip.make_gossip_spec(ov)
+        r = np.random.default_rng(0)
+        x = {"w": jnp.asarray(r.standard_normal((n, 24)), jnp.float32)}
+        y = x
+
+        def disagreement(t):
+            mean = jnp.mean(t["w"], 0, keepdims=True)
+            return float(jnp.linalg.norm(t["w"] - mean))
+
+        d0 = disagreement(x)
+        for _ in range(20):
+            x, y = gossip.mix_dense_delayed(x, y, spec), x
+        assert disagreement(x) < 0.05 * d0
 
 
 def _check_executors_agree(n, d, seed):

@@ -1,7 +1,6 @@
 """Roofline tooling tests: scan-aware HLO cost analyzer vs ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import analysis, hw
@@ -83,7 +82,9 @@ class TestRooflineTerms:
 
 class TestCollectiveParsing:
     def test_ppermute_bytes_counted(self):
-        import subprocess, sys, textwrap
+        import subprocess
+        import sys
+        import textwrap
         code = textwrap.dedent("""
             import os
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -6,8 +6,6 @@ complete >> ring in rounds-to-accuracy; robustness under failures).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core import dfedavg, failures, gossip, topology
 from repro.data import federated, mnist, pipeline
