@@ -107,27 +107,54 @@ def _merge_record(out_dir: str, updates: dict) -> None:
         json.dump(record, f, indent=1)
 
 
-def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
-    """Measured per-round wall-clock: synchronous vs pipelined (delay=1)
-    packed gossip at equal payload — the tentpole claim of the pipelined
-    engine, executed on whatever backend is present.
+def wire_bytes_per_round(dim: int, degree: int) -> dict:
+    """Per-client wire bytes one gossip round ships for a ``(dim,)`` f32
+    payload, per engine codec (d collectives x the codec's wire buffer —
+    the int8 codecs fold their scales INTO the wire, so the overhead rows
+    are counted here too)."""
+    import jax
+    import numpy as np
+    from repro.core import engine as engine_lib
+    from repro.core import packing
 
-    Both modes run the identical stacked engine (vmapped local DFedAvgM +
-    packed mixing) on the same (n, dim) payload; only the dataflow differs —
-    the delayed round's gathers/permutes read the carried snapshot (a step
-    input), so the scheduler may run the communication under the local-step
-    scan. On a TPU/ICI backend that turns compute + comm into
-    max(compute, comm); on a host-CPU run the two modes do identical total
-    work and the ratio mostly reflects the shorter critical path, so treat
-    the CPU number as a floor, not the claim. The "arch_shard" config sizes
-    the payload like a real per-client gossip shard (16M f32 = 64 MiB — the
-    order of a ~1B-param bf16 model split over an 8-wide fsdp x tp block),
-    i.e. a non-smoke payload.
+    ps = packing.make_pack_spec(
+        {"w": jax.ShapeDtypeStruct((dim,), "float32")})
+    out = {}
+    for name in engine_lib.CODECS:
+        codec = engine_lib.get_codec(name)
+        total = 0
+        for b in range(ps.n_buffers):
+            s = codec.wire_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
+            total += int(np.prod(s.shape)) * s.dtype.itemsize
+        out[name] = degree * total
+    return out
+
+
+def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
+    """Measured per-round wall-clock: synchronous f32 vs pipelined
+    (delay=1) f32 vs pipelined **int8** (async+quant, the free engine
+    composition) packed gossip at equal payload — executed on whatever
+    backend is present.
+
+    All modes run the identical stacked engine (vmapped local DFedAvgM +
+    packed mixing) on the same (n, dim) payload; only the dataflow and the
+    wire codec differ — the delayed rounds' gathers/permutes read the
+    carried snapshot (a step input), so the scheduler may run the
+    communication under the local-step scan, and the quantized codec ships
+    (and carries) 4x fewer wire bytes. On a TPU/ICI backend that turns
+    compute + comm into max(compute, comm/4); on a host-CPU run the modes
+    do near-identical total work and the ratio mostly reflects the shorter
+    critical path, so treat the CPU number as a floor, not the claim. The
+    "arch_shard" config sizes the payload like a real per-client gossip
+    shard (16M f32 = 64 MiB — the order of a ~1B-param bf16 model split
+    over an 8-wide fsdp x tp block), i.e. a non-smoke payload. The JSON
+    record also carries the per-codec wire bytes/round (exact, from the
+    wire structs).
     """
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.core import dfedavg, gossip
+    from repro.core import dfedavg, engine as engine_lib, gossip
     from repro.core.topology import expander_overlay
 
     def quad_loss(params, batch):
@@ -137,6 +164,9 @@ def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
     dcfg = dfedavg.DFedAvgMConfig(local_steps=local_steps, lr=0.05,
                                   momentum=0.9)
     spec = gossip.make_gossip_spec(expander_overlay(n, d, seed=0))
+    quant_ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="stacked",
+                                      codec="int8_block", delay=1), spec)
     configs = {"smoke": 1 << 16}
     if not fast:
         configs["arch_shard"] = 1 << 24
@@ -160,6 +190,15 @@ def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
             params, inflight, spec)
         return params, inflight, losses
 
+    @jax.jit
+    def delayed_quant_round(params, inflight, batches, lr):
+        # async+quant: same round, int8 wire snapshot (zero extra code —
+        # the composition IS the engine cell)
+        params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+            params, batches, lr)
+        params, inflight = quant_ex(params, state=inflight)
+        return params, inflight, losses
+
     record = {}
     r = np.random.default_rng(0)
     for name, dim in configs.items():
@@ -175,7 +214,7 @@ def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
         # driver never blocks, and the pipelined mode's point is exactly the
         # cross-dependency freedom); median over trials absorbs host-timer
         # drift on shared machines
-        sync_trials, delayed_trials = [], []
+        trials = {"sync": [], "delayed": [], "delayed_quant": []}
         for _trial in range(3):
             p = jax.tree.map(jnp.copy, params0)
             p, _ = sync_round(p, batches, lr)      # warm the jit cache
@@ -184,7 +223,7 @@ def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
             for _ in range(reps):
                 p, _ = sync_round(p, batches, lr)
             jax.block_until_ready(p)
-            sync_trials.append((time.perf_counter() - t0) / reps)
+            trials["sync"].append((time.perf_counter() - t0) / reps)
 
             p = jax.tree.map(jnp.copy, params0)
             snap = gossip.pack_state_stacked(p)
@@ -194,27 +233,42 @@ def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
             for _ in range(reps):
                 p, snap, _ = delayed_round(p, snap, batches, lr)
             jax.block_until_ready(p)
-            delayed_trials.append((time.perf_counter() - t0) / reps)
-        timings["sync"] = float(np.median(sync_trials))
-        timings["delayed"] = float(np.median(delayed_trials))
+            trials["delayed"].append((time.perf_counter() - t0) / reps)
+
+            p = jax.tree.map(jnp.copy, params0)
+            qsnap = quant_ex.init_state(p)
+            p, qsnap, _ = delayed_quant_round(p, qsnap, batches, lr)  # warm
+            jax.block_until_ready(p)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                p, qsnap, _ = delayed_quant_round(p, qsnap, batches, lr)
+            jax.block_until_ready(p)
+            trials["delayed_quant"].append((time.perf_counter() - t0) / reps)
+        for mode, ts in trials.items():
+            timings[mode] = float(np.median(ts))
 
         speedup = timings["sync"] / timings["delayed"]
+        speedup_quant = timings["sync"] / timings["delayed_quant"]
         record[name] = {
             "n_clients": n, "degree": d, "dim": dim,
             "payload_bytes_per_client": dim * 4,
+            "wire_bytes_per_round": wire_bytes_per_round(dim, d),
             "local_steps": local_steps, "rounds": reps,
             "sync_s_per_round": round(timings["sync"], 5),
             "delayed_s_per_round": round(timings["delayed"], 5),
+            "delayed_quant_s_per_round": round(timings["delayed_quant"], 5),
             "speedup": round(speedup, 4),
+            "speedup_quant": round(speedup_quant, 4),
             "backend": jax.default_backend(),
         }
         emit(f"comm/overlap/{name}/n{n}-d{d}-dim{dim}",
              timings["delayed"] * 1e6,
              f"sync_us={timings['sync'] * 1e6:.0f};"
              f"speedup={speedup:.3f}x;"
+             f"speedup_quant={speedup_quant:.3f}x;"
              f"payload_MB_per_client={dim * 4 / 2**20:.1f};"
              f"backend={jax.default_backend()}")
-        del p, snap
+        del p, snap, qsnap
     return record
 
 

@@ -119,18 +119,26 @@ def run(n_clients: int = 16, degree: int = 4, dim: int = 4096,
 def run_delayed(n_clients: int = 16, degree: int = 4, dim: int = 4096,
                 rounds: int = 16, seed: int = 0) -> dict:
     """Pipelined (gossip_delay=1) vs synchronous trainer under identical
-    straggler churn: retrace guard + convergence proxy + rounds/sec."""
+    straggler churn: retrace guard + convergence proxy + rounds/sec.
+
+    The third line is the **pipelined + quantized** engine composition
+    (gossip_codec="int8_block", delay=1): same churn, int8 wire snapshot —
+    its retrace count must also stay 1 and its convergence proxy must land
+    in the same neighborhood as the f32 pipeline (the int8 error is bounded
+    by the per-tile scales, not compounding)."""
     r = np.random.default_rng(seed)
     targets = jnp.zeros((n_clients, dim), jnp.float32)  # consensus: origin
     proxies = {}
     timing = {}
     traces = {}
-    for name, delay in (("sync", 0), ("delayed", 1)):
+    for name, delay, codec in (("sync", 0, "f32"), ("delayed", 1, "f32"),
+                               ("delayed_quant", 1, "int8_block")):
         trainer = ElasticTrainer(
             overlay=expander_overlay(n_clients, degree, seed=seed),
             loss_fn=quad_loss,
             dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
-            straggler_rounds=1, failure_rounds=10**9, gossip_delay=delay)
+            straggler_rounds=1, failure_rounds=10**9, gossip_delay=delay,
+            gossip_codec=codec)
         params = {"w": jnp.asarray(r.standard_normal((n_clients, dim)),
                                    jnp.float32)}
         rng = np.random.default_rng(seed + 1)
@@ -145,20 +153,28 @@ def run_delayed(n_clients: int = 16, degree: int = 4, dim: int = 4096,
         timing[name] = rounds / (time.perf_counter() - t0)
         proxies[name] = float(jnp.mean(jnp.square(params["w"])))
         traces[name] = trainer.n_traces
-        # the pipelined retrace guard: churn is data in BOTH modes
+        # the pipelined retrace guard: churn is data in EVERY mode,
+        # including the quantized pipeline (the CI bench-smoke gate)
         assert trainer.n_traces == 1, (name, trainer.n_traces)
+    # the quantized pipeline must not diverge from the f32 pipeline
+    assert proxies["delayed_quant"] <= 4 * proxies["delayed"] + 1e-4, proxies
     emit(f"elastic/delayed_vs_sync/n{n_clients}-d{degree}", 0.0,
          f"proxy_sync={proxies['sync']:.6f};"
          f"proxy_delayed={proxies['delayed']:.6f};"
+         f"proxy_delayed_quant={proxies['delayed_quant']:.6f};"
          f"rps_sync={timing['sync']:.2f};"
          f"rps_delayed={timing['delayed']:.2f};"
+         f"rps_delayed_quant={timing['delayed_quant']:.2f};"
          f"n_traces={traces['delayed']}")
     return {"n_traces": traces["delayed"], "expected_traces": 1,
+            "n_traces_quant": traces["delayed_quant"],
             "rounds": rounds,
             "rounds_per_sec": round(timing["delayed"], 2),
             "rounds_per_sec_sync": round(timing["sync"], 2),
+            "rounds_per_sec_quant": round(timing["delayed_quant"], 2),
             "proxy_sync": proxies["sync"],
-            "proxy_delayed": proxies["delayed"]}
+            "proxy_delayed": proxies["delayed"],
+            "proxy_delayed_quant": proxies["delayed_quant"]}
 
 
 def main(rounds: int = 8, out_dir: str | None = "experiments/bench") -> None:

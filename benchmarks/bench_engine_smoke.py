@@ -1,0 +1,120 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=16"
+                           ).strip()
+# ^ MUST precede the first jax import (jax locks the device count on init),
+# which is why this smoke is a standalone module instead of a benchmarks.run
+# suite: run.py imports jax before any suite can set the flag. Appended (not
+# setdefault) so a pre-exported XLA_FLAGS keeps its flags without dropping
+# the fake device count this smoke requires.
+
+"""Pipelined + quantized engine smoke — the CI guard for the composition.
+
+Builds the PRODUCTION train step (launch.steps.build_train_step, fully-
+manual shard_map island) on a 16-fake-device (4, 4) mesh with
+``gossip_impl="ppermute_packed_async"``, ``gossip_delay=1``,
+``gossip_codec="int8_block"`` and hard-asserts the engine acceptance
+criteria on every push:
+
+  * the lowered HLO ships exactly **d** collective-permutes per round and
+    every one of them carries the **int8 wire buffer** (quantize + fold
+    happened before the wire, scales ride inside);
+  * the donated in-flight snapshot is the int8 wire (4x smaller state);
+  * the async impl at ``gossip_delay=0`` still lowers to HLO *textually
+    identical* to ``ppermute_packed`` (no drift from the codec plumbing);
+  * executing rounds under straggler churn + rotating one-peer gates reuses
+    ONE executable (``_cache_size() == 1`` — alive/gates/snapshot are step
+    data, never trace structure).
+
+Usage (CI bench-smoke lane):
+    PYTHONPATH=src python -m benchmarks.bench_engine_smoke
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    from repro.configs import registry
+    from repro.configs.base import DFLConfig, ParallelConfig, ShapeConfig
+    from repro.launch import steps
+    from repro.models import params as params_lib
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    cfg = registry.reduced("qwen2.5-3b")  # single-dtype smoke tree
+    shape = ShapeConfig("t", 64, 8, "train")
+    dfl = DFLConfig(degree=2, round_plan="one_peer")
+
+    texts = {}
+    setups = {}
+    for key, delay, codec in (("packed", 0, "auto"),
+                              ("async_sync", 0, "auto"),
+                              ("async_quant", 1, "int8_block")):
+        par = ParallelConfig(clients_per_pod=4, local_steps=2, grad_accum=2,
+                             gossip_impl=("ppermute_packed" if key == "packed"
+                                          else "ppermute_packed_async"),
+                             gossip_delay=delay, gossip_codec=codec)
+        setup = steps.build_train_step(cfg, shape, mesh, par, dfl)
+        args = [params_lib.shape_structs(setup.param_struct),
+                setup.input_specs["batch"], setup.input_specs["lr"],
+                setup.input_specs["alive"], setup.input_specs["gates"]]
+        if "inflight" in setup.input_specs:
+            args.append(setup.input_specs["inflight"])
+        texts[key] = setup.step_fn.lower(*args).as_text()
+        setups[key] = setup
+
+    # --- d collectives, all of them int8 wire, snapshot dtype int8
+    setup = setups["async_quant"]
+    d = setup.gossip_spec.degree
+    perms = [ln for ln in texts["async_quant"].splitlines()
+             if "collective_permute" in ln]
+    assert len(perms) == d, (len(perms), d)
+    assert all("xi8>" in ln for ln in perms), "non-int8 wire on a permute"
+    assert all(str(s.dtype) == "int8"
+               for s in setup.input_specs["inflight"])
+    # --- delay=0 bit-identity anchor survives the codec plumbing
+    assert texts["async_sync"] == texts["packed"], \
+        "async delay=0 no longer lowers identically to ppermute_packed"
+
+    # --- execute: churn + one-peer gate rotation must reuse ONE executable
+    r = np.random.default_rng(0)
+    structs = params_lib.shape_structs(setup.param_struct)
+    params = jax.tree.map(
+        lambda s, sh: jax.device_put(
+            jnp.asarray(r.standard_normal(s.shape) * 0.02, s.dtype), sh),
+        structs, setup.in_shardings[0])
+    batch = {k: jnp.zeros(v.shape, v.dtype)
+             for k, v in setup.input_specs["batch"].items()}
+    inflight = setup.init_inflight(params)
+    n, d = setup.n_clients, setup.gossip_spec.degree
+    t0 = time.perf_counter()
+    rounds = 3
+    for rnd in range(rounds):
+        alive = (r.random(n) > 0.3).astype(np.float32)
+        if alive.sum() < 2:
+            alive[:] = 1.0
+        gates = np.zeros(d, np.float32)
+        gates[rnd % d] = 1.0
+        params, _m, inflight = setup.step_fn(
+            params, batch, jnp.float32(0.01), jnp.asarray(alive),
+            jnp.asarray(gates), inflight)
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    n_traces = setup.step_fn._cache_size()
+    assert n_traces == 1, f"pipelined+quant step retraced: {n_traces}"
+    for leaf in jax.tree.leaves(params):
+        assert bool(jnp.isfinite(jnp.asarray(leaf, jnp.float32)).all())
+
+    emit("engine_smoke/async_quant/4x4", dt * 1e6 / rounds,
+         f"d_collectives={len(perms)};int8_wire=1;n_traces={n_traces};"
+         f"rounds={rounds};delay0_identity=1")
+    print("ENGINE_SMOKE_OK")
+
+
+if __name__ == "__main__":
+    main()

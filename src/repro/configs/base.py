@@ -197,6 +197,15 @@ class ParallelConfig:
     # in-flight snapshot of round t-1's post-local-step params, so the wire
     # transfer hides behind a full local-step scan
     gossip_delay: int = 0
+    # wire codec override (repro.core.engine): "auto" keeps the impl
+    # alias's historical codec (f32 for the plain impls, int8_block for the
+    # quant impls); "f32" / "int8" (per-buffer scale) / "int8_block" (one
+    # scale per kernel row-block tile) name a codec explicitly. Pipelined +
+    # quantized gossip = "ppermute_packed_async" + gossip_delay=1 +
+    # gossip_codec="int8_block" (the delayed snapshot is then carried AND
+    # shipped in the int8 wire format: d int8 collectives/round, 4x smaller
+    # donated state)
+    gossip_codec: Literal["auto", "f32", "int8", "int8_block"] = "auto"
     local_steps: int = 2          # K inside the lowered round (scan)
     use_fused_sgdm: bool = True
     grad_accum: int = 4           # microbatches per local step (memory knob)

@@ -1,0 +1,484 @@
+"""GossipEngine: ONE gossip executor assembled from three orthogonal layers.
+
+The repo used to carry seven hand-specialized executors (per-leaf f32,
+per-leaf int8, packed f32, packed int8, packed delayed, stacked, stacked
+delayed) whose bodies were copy-pasted variations of the same round. Every
+new lever (quantize the wire, pipeline the wire, simulate on one device)
+multiplied the zoo instead of composing with it — the ROADMAP item
+"pipelined + quantized gossip" could not be wired without this refactor.
+
+The engine factors the round into:
+
+* **WireCodec** — what travels on the wire and how it folds back into the
+  mixing reduction. ``"f32"`` ships the packed buffer unchanged and reduces
+  through the fused ``gossip_mix_2d`` stack pass; ``"int8"`` /
+  ``"int8_block"`` quantize through the Pallas quantize kernels, fold the
+  f32 scale(s) INTO the shipped int8 buffer (one collective per schedule —
+  ``fold_scale(s)_into_wire``), and fold each received wire into the
+  accumulator through the fused ``dequant_accumulate_2d[_blockwise]``
+  kernels. A codec owns encode -> ship -> fused-decode-accumulate; it never
+  sees the topology.
+* **timing** — ``delay=0`` (synchronous: this round's collectives carry this
+  round's post-local-step buffers) or ``delay=1`` (pipelined: the
+  collectives read the PREVIOUS round's snapshot, a donated step input with
+  no data dependency on the local-step scan, so XLA overlaps the wire with
+  compute — ``mix_dense_delayed`` semantics). The carried state is the
+  codec's *wire format*, so delayed x int8 ships int8 bytes and carries a 4x
+  smaller snapshot for free.
+* **substrate** — where the round runs: ``"shard_map"`` (the production
+  ppermute island: d collectives/round over the client mesh axes),
+  ``"stacked"`` (the single-device simulator: gathers on a stacked client
+  axis — the elastic runtime's path), ``"per_leaf"`` (the d x n_leaves
+  ppermute baseline), or ``"dense"`` (the paper-naive mixing einsum).
+
+Alive masks and round-plan gates thread through the ONE shared weight path
+(:func:`repro.core.gossip.alive_weight_table` and its per-client local form)
+for every combination — they are traced step data, never trace structure, so
+straggler churn and per-round topologies retrace nothing.
+
+The payoff that proves the factoring: ``delay=1 x int8`` (pipelined +
+quantized) is a free composition — zero new executor code, exactly d
+collectives/round of int8 wire bytes, and the same zero-retrace / splice-
+repair story as every other cell of the cube. Legacy entry points
+(``gossip.ppermute_mix_packed`` et al.) and legacy ``gossip_impl`` strings
+all resolve here (see ``LEGACY_GOSSIP_IMPLS``); ``sync x f32 x shard_map``
+lowers to HLO textually identical to the pre-refactor ``ppermute_packed``
+path, and ``delay=0`` is bit-identical to sync (both pinned in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip, packing
+from repro.core.gossip import GossipSpec
+
+__all__ = [
+    "CODECS",
+    "SUBSTRATES",
+    "LEGACY_GOSSIP_IMPLS",
+    "GossipEngineConfig",
+    "GossipExecutor",
+    "build_gossip_executor",
+    "get_codec",
+    "parse_gossip_impl",
+]
+
+PyTree = Any
+
+SUBSTRATES = ("shard_map", "stacked", "per_leaf", "dense")
+CODECS = ("f32", "int8", "int8_block")
+
+# legacy ParallelConfig.gossip_impl strings -> (substrate, codec). The delay
+# axis rides separately (ParallelConfig.gossip_delay); "ppermute_packed_async"
+# is the only alias that accepts delay=1, and at delay=0 it IS
+# "ppermute_packed" (identical engine config => textually identical HLO).
+LEGACY_GOSSIP_IMPLS = {
+    "dense": ("dense", "f32"),
+    "ppermute": ("per_leaf", "f32"),
+    "ppermute_quant": ("per_leaf", "int8"),
+    "ppermute_packed": ("shard_map", "f32"),
+    "ppermute_packed_quant": ("shard_map", "int8_block"),
+    "ppermute_packed_async": ("shard_map", "f32"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipEngineConfig:
+    """Static (hashable) engine cell: substrate x codec x timing.
+
+    Attributes:
+      substrate: "shard_map" | "stacked" | "per_leaf" | "dense".
+      codec: "f32" | "int8" (per-buffer scale) | "int8_block" (one scale per
+        kernel row-block tile, the tighter default wire format for quant).
+      delay: 0 = synchronous, 1 = pipelined (one-round-delayed snapshot).
+      mix_impl: kernel implementation knob threaded to the fused
+        gossip_mix / quant kernels ("auto" | "pallas" | "pallas_interpret" |
+        "ref").
+    """
+
+    substrate: str = "shard_map"
+    codec: str = "f32"
+    delay: int = 0
+    mix_impl: str = "auto"
+
+    def __post_init__(self):
+        if self.substrate not in SUBSTRATES:
+            raise ValueError(f"unknown substrate {self.substrate!r}; "
+                             f"available: {', '.join(SUBSTRATES)}")
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; "
+                             f"available: {', '.join(CODECS)}")
+        if self.delay not in (0, 1):
+            raise ValueError(f"delay must be 0 or 1, got {self.delay}")
+        if self.delay and self.substrate not in ("shard_map", "stacked"):
+            raise ValueError("pipelined (delay=1) gossip needs a packed "
+                             f"substrate, got {self.substrate!r}")
+        if self.substrate == "per_leaf" and self.codec == "int8_block":
+            raise ValueError("per-leaf payloads are not tile-aligned; use "
+                             "codec='int8' for the per-leaf baseline")
+        if self.substrate == "dense" and self.codec != "f32":
+            raise ValueError("the dense reference substrate has no wire; "
+                             f"codec must be 'f32', got {self.codec!r}")
+
+
+def parse_gossip_impl(gossip_impl: str, delay: int = 0,
+                      codec: str = "auto") -> GossipEngineConfig:
+    """Parse a legacy ``gossip_impl`` string (+ the ``gossip_delay`` /
+    ``gossip_codec`` knobs) into an engine config.
+
+    ``codec="auto"`` keeps the alias's historical codec (f32 for the plain
+    impls, int8_block for the quant impls); naming a codec overrides it —
+    that is how the pipelined+quantized composition is spelled:
+    ``gossip_impl="ppermute_packed_async", gossip_delay=1,
+    gossip_codec="int8_block"``.
+    """
+    if gossip_impl not in LEGACY_GOSSIP_IMPLS:
+        raise ValueError(f"unknown gossip_impl {gossip_impl!r}; available: "
+                         f"{', '.join(sorted(LEGACY_GOSSIP_IMPLS))}")
+    substrate, alias_codec = LEGACY_GOSSIP_IMPLS[gossip_impl]
+    if codec in (None, "auto"):
+        codec = alias_codec
+    if delay and gossip_impl != "ppermute_packed_async":
+        raise ValueError("gossip_delay=1 requires "
+                         f"gossip_impl='ppermute_packed_async', got "
+                         f"{gossip_impl!r}")
+    return GossipEngineConfig(substrate=substrate, codec=codec, delay=delay)
+
+
+# ------------------------------------------------------------------ codecs
+class _F32Codec:
+    """Identity wire: ship the packed buffer, reduce via the fused stack
+    pass (``gossip_mix_2d``). The encode is literally the buffer, so the
+    delayed snapshot is the packed fresh state — byte-identical to the
+    pre-refactor delayed executors."""
+
+    name = "f32"
+
+    def wire_struct(self, struct: jax.ShapeDtypeStruct,
+                    n_blocks: int) -> jax.ShapeDtypeStruct:
+        return struct
+
+    def encode(self, buf, *, n_blocks, block_rows, impl):
+        return buf
+
+    def decode(self, wire, dtype, *, n_blocks, block_rows):
+        return wire
+
+    def reduce(self, fresh, received, weights, contrib, *, edge_weight,
+               n_blocks, block_rows, impl):
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        stack = jnp.stack([fresh] + received)
+        return mix_ops.gossip_mix_packed(stack, weights, contrib,
+                                         block_rows=block_rows, impl=impl)
+
+    # per-leaf baseline hooks
+    def encode_leaf(self, x, impl):
+        return (x,)
+
+    def decode_leaf(self, parts, dtype, impl):
+        return parts[0]
+
+
+class _Int8Codec:
+    """int8 wire payloads: quantize through the Pallas kernels, bitcast the
+    f32 scale(s) into trailing lane rows of the SAME shipped buffer (one
+    collective per schedule), and fold each received wire into the
+    accumulator through the fused dequant-accumulate kernels. The local term
+    stays full precision, so the int8 error only enters through the (small,
+    renormalized) edge weights."""
+
+    def __init__(self, block_scales: bool):
+        self.block_scales = block_scales
+        self.name = "int8_block" if block_scales else "int8"
+
+    def _tail_rows(self, n_blocks: int) -> int:
+        return packing.scale_rows(n_blocks) if self.block_scales else 1
+
+    def wire_struct(self, struct: jax.ShapeDtypeStruct,
+                    n_blocks: int) -> jax.ShapeDtypeStruct:
+        rows = struct.shape[0] + self._tail_rows(n_blocks)
+        return jax.ShapeDtypeStruct((rows, packing.LANE), jnp.int8)
+
+    def encode(self, buf, *, n_blocks, block_rows, impl):
+        from repro.kernels.quant_gossip import ops as qops
+
+        if self.block_scales:
+            q, scales = qops.quantize_packed_blockwise(
+                buf, block_rows=block_rows, impl=impl)
+            return qops.fold_scales_into_wire(q, scales)
+        q, scale = qops.quantize_packed(buf, block_rows=block_rows, impl=impl)
+        return qops.fold_scale_into_wire(q, scale)
+
+    def decode(self, wire, dtype, *, n_blocks, block_rows):
+        """Plain dequantize (the stacked substrate's gather source); the
+        shard_map substrate never materializes this — it uses the fused
+        :meth:`reduce` accumulation instead."""
+        from repro.kernels.quant_gossip import ops as qops
+
+        if self.block_scales:
+            q, scales = qops.split_wire_blockwise(wire, n_blocks)
+            return qops.dequantize_packed_blockwise(q, scales, dtype,
+                                                    block_rows=block_rows)
+        q, scale = qops.split_wire(wire)
+        return qops.dequantize_packed(q, scale, dtype)
+
+    def reduce(self, fresh, received, weights, contrib, *, edge_weight,
+               n_blocks, block_rows, impl):
+        from repro.kernels.quant_gossip import ops as qops
+
+        c = edge_weight
+        if contrib is None:
+            self_scale = weights[0]
+            recv_w = [None] * len(received)
+        else:
+            a_self, src_a = contrib[0], contrib[1:]
+            wa0 = weights[0] * a_self
+            tot = wa0 + c * jnp.sum(src_a)
+            # no renormalizable mass => identity row REPLACES the
+            # renormalized term (inv zeroed, so tiny fractional mass cannot
+            # double-count)
+            ok = (tot > 1e-12).astype(jnp.float32)
+            inv = ok / jnp.maximum(tot, 1e-12)
+            self_scale = (a_self * wa0 * inv + (1.0 - a_self)
+                          + a_self * (1.0 - ok))
+            recv_w = [a_self * src_a[k] * inv for k in range(len(received))]
+        acc = self_scale.astype(fresh.dtype) * fresh
+        for rwire, a in zip(received, recv_w):
+            if self.block_scales:
+                rq, rs = qops.split_wire_blockwise(rwire, n_blocks)
+                acc = qops.dequant_accumulate_packed_blockwise(
+                    rq, rs, c, acc, a, block_rows=block_rows, impl=impl)
+            else:
+                rq, rs = qops.split_wire(rwire)
+                acc = qops.dequant_accumulate_packed(
+                    rq, rs, c, acc, a, block_rows=block_rows, impl=impl)
+        return acc
+
+    # per-leaf baseline hooks (per-tensor scale; no tile alignment)
+    def encode_leaf(self, x, impl):
+        from repro.kernels.quant_gossip import ops as qops
+
+        return qops.quantize_int8(x, impl=impl)
+
+    def decode_leaf(self, parts, dtype, impl):
+        from repro.kernels.quant_gossip import ops as qops
+
+        return qops.dequantize_int8(parts[0], parts[1], dtype, impl=impl)
+
+
+_CODECS = {
+    "f32": _F32Codec(),
+    "int8": _Int8Codec(block_scales=False),
+    "int8_block": _Int8Codec(block_scales=True),
+}
+
+
+def get_codec(name: str):
+    """Public codec lookup (benches/tests derive wire shapes from it)."""
+    if name not in _CODECS:
+        raise ValueError(f"unknown codec {name!r}; available: "
+                         f"{', '.join(CODECS)}")
+    return _CODECS[name]
+
+
+# --------------------------------------------------------------- executor
+@dataclasses.dataclass(frozen=True)
+class GossipExecutor:
+    """One assembled gossip round. Call signature by timing:
+
+    * sync: ``executor(tree, alive=..., gates=...) -> mixed_tree``
+    * delayed: ``executor(tree, state=..., alive=..., gates=...) ->
+      (mixed_tree, new_state)`` where ``state`` is the codec-wire snapshot
+      of the previous round (prime it with :meth:`init_state`).
+
+    ``tree`` is the client-local shard pytree on the ``shard_map`` /
+    ``per_leaf`` substrates (call inside the island) and the client-stacked
+    pytree on ``stacked`` / ``dense``. ``alive`` / ``gates`` are traced
+    data on the packed substrates (``per_leaf`` and ``dense``-with-gates
+    follow the legacy conventions: per-leaf ignores both).
+    """
+
+    config: GossipEngineConfig
+    spec: GossipSpec
+    axis_names: Any = None
+    pack_spec: packing.PackSpec | None = None
+
+    @property
+    def delayed(self) -> bool:
+        return self.config.delay == 1
+
+    @property
+    def codec(self):
+        return _CODECS[self.config.codec]
+
+    def __call__(self, tree: PyTree, *, state=None, alive=None, gates=None):
+        cfg = self.config
+        if self.delayed and state is None:
+            raise ValueError("delayed executor needs the carried snapshot "
+                             "(prime it with init_state)")
+        if cfg.substrate == "dense":
+            return gossip.mix_dense(
+                tree, gossip.gated_mixing_matrix(self.spec, gates, alive))
+        if cfg.substrate == "per_leaf":
+            return self._per_leaf_round(tree)
+        if cfg.substrate == "stacked":
+            return self._stacked_round(tree, state, alive, gates)
+        return self._shard_map_round(tree, state, alive, gates)
+
+    # ------------------------------------------------- pipelined state
+    def init_state(self, tree: PyTree) -> tuple[jax.Array, ...]:
+        """Prime the pipeline: the codec-wire snapshot of ``tree`` (round 0
+        then mixes the initial params as its delayed snapshot — the
+        ``mix_dense_delayed`` y_{-1} := x_0 convention). The snapshot layout
+        depends only on the parameter structure, never on the topology, so
+        a splice repair remaps it by the same old2new row compaction as the
+        params."""
+        cfg, codec = self.config, self.codec
+        if cfg.substrate == "stacked":
+            pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
+            bufs = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+            return tuple(
+                jax.vmap(lambda x, b=b: codec.encode(
+                    x, n_blocks=pack_spec.buffer_blocks(b),
+                    block_rows=pack_spec.block_rows, impl=cfg.mix_impl))(buf)
+                for b, buf in enumerate(bufs))
+        pack_spec = self.pack_spec or packing.make_pack_spec(tree)
+        return tuple(
+            codec.encode(buf, n_blocks=pack_spec.buffer_blocks(b),
+                         block_rows=pack_spec.block_rows, impl=cfg.mix_impl)
+            for b, buf in enumerate(packing.pack_tree(tree, pack_spec)))
+
+    def state_structs(self) -> tuple[jax.ShapeDtypeStruct, ...]:
+        """Per-device wire shapes of the carried snapshot (requires a baked
+        ``pack_spec``) — what the production step declares as its donated
+        in-flight argument."""
+        if self.pack_spec is None:
+            raise ValueError("state_structs needs a baked pack_spec")
+        ps, codec = self.pack_spec, self.codec
+        return tuple(
+            codec.wire_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
+            for b in range(ps.n_buffers))
+
+    # ---------------------------------------------------- substrates
+    def _shard_map_round(self, tree, state, alive, gates):
+        cfg, codec, spec = self.config, self.codec, self.spec
+        pack_spec = self.pack_spec or packing.make_pack_spec(tree)
+        idx = gossip._client_index(self.axis_names)
+        live = gossip._live_schedules(spec)
+        perms = [p for _, p, _, _ in live]
+        weights = gossip._local_raw_weights(spec, idx, len(perms), gates)
+        contrib = (None if alive is None and gates is None
+                   else gossip._local_contrib_vec(spec, idx, live, alive,
+                                                  gates))
+        out_bufs, new_state = [], []
+        for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
+            n_blocks = pack_spec.buffer_blocks(b)
+            if cfg.delay:
+                # the permutes read the carried snapshot (a step input): no
+                # dep on the local-step scan, so the scheduler can start
+                # them at program entry and hide the wire behind compute
+                wire = state[b]
+                new_state.append(codec.encode(
+                    buf, n_blocks=n_blocks, block_rows=pack_spec.block_rows,
+                    impl=cfg.mix_impl))
+            else:
+                wire = codec.encode(buf, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+            # all ppermutes issued before the reduction so XLA can overlap
+            received = [jax.lax.ppermute(wire, self.axis_names, perm=p)
+                        for p in perms]
+            out_bufs.append(codec.reduce(
+                buf, received, weights, contrib,
+                edge_weight=float(spec.edge_weight), n_blocks=n_blocks,
+                block_rows=pack_spec.block_rows, impl=cfg.mix_impl))
+        mixed = packing.unpack_tree(tuple(out_bufs), pack_spec)
+        if cfg.delay:
+            return mixed, tuple(new_state)
+        return mixed
+
+    def _stacked_round(self, tree, state, alive, gates):
+        cfg, codec, spec = self.config, self.codec, self.spec
+        pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
+        w = (gossip._static_weight_table(spec)
+             if alive is None and gates is None
+             else gossip.alive_weight_table(spec, alive, gates))
+        gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+        fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        out_bufs, new_state = [], []
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+
+            def enc(x, b=b):
+                return codec.encode(x, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+
+            if cfg.codec == "f32":
+                src = state[b] if cfg.delay else buf
+            else:
+                wire = state[b] if cfg.delay else jax.vmap(enc)(buf)
+                src = jax.vmap(lambda x: codec.decode(
+                    x, buf.dtype, n_blocks=n_blocks,
+                    block_rows=pack_spec.block_rows))(wire)
+            # self row stays the FRESH full-precision buffer; only the
+            # gathered neighbor rows go through the codec / the snapshot
+            stack = jnp.stack([buf] + [jnp.take(src, idx, axis=0)
+                                       for idx in gathers], axis=1)
+            out = jnp.einsum("nk,nk...->n...", w, stack.astype(jnp.float32))
+            out_bufs.append(out.astype(buf.dtype))
+            if cfg.delay:
+                new_state.append(buf if cfg.codec == "f32"
+                                 else jax.vmap(enc)(buf))
+        mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
+            tuple(out_bufs))
+        if cfg.delay:
+            return mixed, tuple(new_state)
+        return mixed
+
+    def _per_leaf_round(self, tree):
+        cfg, codec, spec = self.config, self.codec, self.spec
+        idx = gossip._client_index(self.axis_names)
+        self_w = jnp.asarray(spec.self_weights)[idx]
+        perms = [list(pairs) for pairs in spec.perms if len(pairs) > 0]
+
+        def _mix(x):
+            parts = codec.encode_leaf(x, cfg.mix_impl)
+            received = [
+                codec.decode_leaf(
+                    tuple(jax.lax.ppermute(part, self.axis_names, perm=p)
+                          for part in parts), x.dtype, cfg.mix_impl)
+                for p in perms
+            ]
+            out = self_w.astype(x.dtype) * x
+            c = jnp.asarray(spec.edge_weight, dtype=x.dtype)
+            for r in received:
+                out = out + c * r
+            return out
+
+        return jax.tree.map(_mix, tree)
+
+
+def build_gossip_executor(config: GossipEngineConfig, spec: GossipSpec, *,
+                          axis_names=None,
+                          pack_spec: packing.PackSpec | None = None
+                          ) -> GossipExecutor:
+    """Assemble one gossip executor from an engine cell.
+
+    ``axis_names`` names the client mesh axis/axes and is required on the
+    ``shard_map`` / ``per_leaf`` substrates (the executor is called inside
+    the fully-manual island); the stacked / dense substrates run on a
+    client-stacked pytree and ignore it. Pass ``pack_spec`` (built
+    host-side from shape structs) to bake the packed layout into the jitted
+    step; it is derived from the tree at call time otherwise.
+    """
+    if config.substrate in ("shard_map", "per_leaf") and axis_names is None:
+        raise ValueError(f"substrate {config.substrate!r} runs inside "
+                         "shard_map and needs axis_names")
+    return GossipExecutor(config=config, spec=spec, axis_names=axis_names,
+                          pack_spec=pack_spec)

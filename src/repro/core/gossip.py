@@ -1,36 +1,30 @@
-"""Gossip executors: how a mixing round `w <- M w` actually runs.
+"""Gossip semantics: specs, dense oracles, and the legacy executor surface.
 
-Five executors, one semantics:
+This module owns the *meaning* of a mixing round `w <- M w`:
 
-1. ``mix_dense``      — dense ``einsum('cd,d...->c...')`` over a stacked client
-                        axis. The reference / oracle; also what a *naive* port
-                        of the paper's simulator does on a TPU mesh (XLA turns
-                        it into an all-gather of every client's parameters —
-                        this is the paper-faithful baseline in §Perf).
-2. ``mix_schedules``  — gather-based evaluation of the schedule decomposition
-                        on a stacked client axis (simulator fast path; oracle
-                        for the ppermute paths).
-3. ``ppermute_mix``   — per-leaf shard_map path: one ``jax.lax.ppermute`` per
-                        (schedule x pytree leaf) along the client mesh axes +
-                        an unfused weighted sum. d single-hop exchanges per
-                        leaf, no gather. Kept as the packed path's baseline.
-4. ``ppermute_mix_packed`` — the production path: the parameter pytree is
-                        packed into one lane-aligned ``(rows, 128)`` flat
-                        buffer per dtype (:mod:`repro.core.packing`), so a
-                        round is **d ppermutes total** (one per schedule,
-                        independent of leaf count — fewer, larger,
-                        overlappable collectives) and the weighted reduction
-                        of self + d received buffers is **one HBM pass**
-                        through the fused ``gossip_mix_2d`` Pallas kernel.
-5. ``ppermute_mix_packed_quantized`` — packed + int8 payloads: the packed
-                        buffer quantizes through the Pallas ``quantize_2d``
-                        kernel (4x/2x fewer ICI bytes) and each received
-                        buffer folds in via the fused ``dequant_accumulate_2d``
-                        kernel. (``ppermute_mix_quantized`` is the per-leaf
-                        jnp-level equivalent.)
+* :class:`GossipSpec` — the static, hashable round description baked into
+  the jitted step (schedules as ppermute pairs + recv_from gather tables +
+  Chow weights);
+* the dense oracles (``mix_dense``, ``mix_dense_masked``,
+  ``mix_dense_gated``, ``mix_dense_delayed``) and the gather reference
+  ``mix_schedules`` — the ground truth every executor is tested against;
+* the ONE shared weight path (:func:`alive_weight_table` /
+  :func:`gated_mixing_matrix` and the per-client local forms
+  ``_local_raw_weights`` / ``_local_contrib_vec``) that turns traced
+  ``alive`` masks and per-schedule ``gates`` into renormalized mixing
+  weights for every variant.
 
-A :class:`GossipSpec` is the static, hashable description baked into the
-jitted step.
+The executors themselves are assembled by :mod:`repro.core.engine` from
+three orthogonal layers — WireCodec (f32 / int8 / int8_block wire format)
+x timing (sync / one-round-delayed pipeline) x substrate (shard_map
+ppermute island / stacked simulator / per-leaf baseline / dense) — and the
+seven pre-engine entry points below (``ppermute_mix``,
+``ppermute_mix_quantized``, ``ppermute_mix_packed``,
+``ppermute_mix_packed_quantized``, ``ppermute_mix_packed_delayed``,
+``mix_packed_stacked``, ``mix_packed_stacked_delayed``) are thin aliases
+that each name one engine cell. New compositions (e.g. pipelined +
+quantized: ``delay=1 x int8``) need no new executor code — build them with
+``engine.build_gossip_executor`` directly.
 
 Failure awareness (paper §5.2) lives on the packed paths: the packed
 executors (and the stacked :func:`mix_packed_stacked` simulator counterpart)
@@ -391,21 +385,15 @@ def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
     vector, :mod:`repro.overlay.plan`) makes the round time-varying the same
     way — one-peer rotation and schedule subsets are weight changes, not new
     executables.
+
+    Engine cell: ``stacked x f32 x sync`` (:mod:`repro.core.engine`).
     """
-    if pack_spec is None:
-        pack_spec = _stacked_pack_spec(tree)
-    w = (_static_weight_table(spec) if alive is None and gates is None
-         else alive_weight_table(spec, alive, gates))
-    gathers = [jnp.asarray(rf) for rf in spec.recv_from]
-    bufs = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
-    out_bufs = []
-    for buf in bufs:
-        stack = jnp.stack([buf] + [jnp.take(buf, idx, axis=0)
-                                   for idx in gathers], axis=1)
-        out = jnp.einsum("nk,nk...->n...", w, stack.astype(jnp.float32))
-        out_bufs.append(out.astype(buf.dtype))
-    return jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
-        tuple(out_bufs))
+    from repro.core import engine as engine_lib
+
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="stacked", codec="f32"),
+        spec, pack_spec=pack_spec)
+    return ex(tree, alive=alive, gates=gates)
 
 
 def _stacked_pack_spec(tree: PyTree) -> packing.PackSpec:
@@ -447,22 +435,16 @@ def mix_packed_stacked_delayed(tree: PyTree,
     and the new snapshot (this round's packed fresh state), to be carried as
     step state. With ``snapshot == pack_state_stacked(tree)`` the result is
     bit-identical to :func:`mix_packed_stacked` (same stack, same einsum).
+
+    Engine cell: ``stacked x f32 x delayed`` (:mod:`repro.core.engine`).
     """
-    if pack_spec is None:
-        pack_spec = _stacked_pack_spec(tree)
-    w = (_static_weight_table(spec) if alive is None and gates is None
-         else alive_weight_table(spec, alive, gates))
-    gathers = [jnp.asarray(rf) for rf in spec.recv_from]
-    fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
-    out_bufs = []
-    for buf, snap in zip(fresh, snapshot):
-        stack = jnp.stack([buf] + [jnp.take(snap, idx, axis=0)
-                                   for idx in gathers], axis=1)
-        out = jnp.einsum("nk,nk...->n...", w, stack.astype(jnp.float32))
-        out_bufs.append(out.astype(buf.dtype))
-    mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
-        tuple(out_bufs))
-    return mixed, fresh
+    from repro.core import engine as engine_lib
+
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="stacked", codec="f32",
+                                      delay=1),
+        spec, pack_spec=pack_spec)
+    return ex(tree, state=snapshot, alive=alive, gates=gates)
 
 
 def _axis_size(name: str) -> jax.Array | int:
@@ -488,23 +470,15 @@ def ppermute_mix(tree: PyTree, spec: GossipSpec,
     Every leaf holds the *local shard* of the local client's value; the client
     axis is the mesh axis/axes in ``axis_names``. All ppermutes are issued
     before any sums so XLA can overlap them.
+
+    Engine cell: ``per_leaf x f32 x sync`` (:mod:`repro.core.engine`).
     """
-    idx = _client_index(axis_names)
-    self_w = jnp.asarray(spec.self_weights)[idx]
+    from repro.core import engine as engine_lib
 
-    def _mix(x):
-        received = [
-            jax.lax.ppermute(x, axis_names, perm=list(pairs))
-            for pairs in spec.perms
-            if len(pairs) > 0
-        ]
-        out = self_w.astype(x.dtype) * x
-        c = jnp.asarray(spec.edge_weight, dtype=x.dtype)
-        for r in received:
-            out = out + c * r
-        return out
-
-    return jax.tree.map(_mix, tree)
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="per_leaf", codec="f32"),
+        spec, axis_names=axis_names)
+    return ex(tree)
 
 
 def ppermute_mix_quantized(tree: PyTree, spec: GossipSpec,
@@ -515,28 +489,15 @@ def ppermute_mix_quantized(tree: PyTree, spec: GossipSpec,
     neighbors dequantize before the weighted sum. The *local* term stays full
     precision, so quantization error only enters through the (small) edge
     weights.
+
+    Engine cell: ``per_leaf x int8 x sync`` (:mod:`repro.core.engine`).
     """
-    from repro.kernels.quant_gossip import ops as qops
+    from repro.core import engine as engine_lib
 
-    idx = _client_index(axis_names)
-    self_w = jnp.asarray(spec.self_weights)[idx]
-
-    def _mix(x):
-        q, scale = qops.quantize_int8(x)
-        received = []
-        for pairs in spec.perms:
-            if len(pairs) == 0:
-                continue
-            rq = jax.lax.ppermute(q, axis_names, perm=list(pairs))
-            rs = jax.lax.ppermute(scale, axis_names, perm=list(pairs))
-            received.append(qops.dequantize_int8(rq, rs, x.dtype))
-        out = self_w.astype(x.dtype) * x
-        c = jnp.asarray(spec.edge_weight, dtype=x.dtype)
-        for r in received:
-            out = out + c * r
-        return out
-
-    return jax.tree.map(_mix, tree)
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="per_leaf", codec="int8"),
+        spec, axis_names=axis_names)
+    return ex(tree)
 
 
 # ------------------------------------------------------- packed executors
@@ -634,27 +595,17 @@ def ppermute_mix_packed(tree: PyTree, spec: GossipSpec,
 
     Pass ``pack_spec`` (built host-side from shape structs) to bake the
     layout into the jitted step; it is derived from ``tree`` otherwise.
+
+    Engine cell: ``shard_map x f32 x sync`` (:mod:`repro.core.engine`) —
+    pinned to lower to HLO textually identical to the pre-refactor body.
     """
-    from repro.kernels.gossip_mix import ops as mix_ops
+    from repro.core import engine as engine_lib
 
-    if pack_spec is None:
-        pack_spec = packing.make_pack_spec(tree)
-    idx = _client_index(axis_names)
-    live = _live_schedules(spec)
-    perms = [p for _, p, _, _ in live]
-    weights = _local_raw_weights(spec, idx, len(perms), gates)
-    alive_vec = (None if alive is None and gates is None
-                 else _local_contrib_vec(spec, idx, live, alive, gates))
-
-    out_bufs = []
-    for buf in packing.pack_tree(tree, pack_spec):
-        # all ppermutes issued before the reduction so XLA can overlap them
-        received = [jax.lax.ppermute(buf, axis_names, perm=p) for p in perms]
-        stack = jnp.stack([buf] + received)
-        out_bufs.append(mix_ops.gossip_mix_packed(
-            stack, weights, alive_vec, block_rows=pack_spec.block_rows,
-            impl=mix_impl))
-    return packing.unpack_tree(tuple(out_bufs), pack_spec)
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="shard_map", codec="f32",
+                                      mix_impl=mix_impl),
+        spec, axis_names=axis_names, pack_spec=pack_spec)
+    return ex(tree, alive=alive, gates=gates)
 
 
 def ppermute_mix_packed_delayed(tree: PyTree,
@@ -686,29 +637,16 @@ def ppermute_mix_packed_delayed(tree: PyTree,
 
     Returns ``(mixed tree, new state_bufs)`` where the new state is this
     round's fresh packed buffers (what round t+1 will mix).
+
+    Engine cell: ``shard_map x f32 x delayed`` (:mod:`repro.core.engine`).
     """
-    from repro.kernels.gossip_mix import ops as mix_ops
+    from repro.core import engine as engine_lib
 
-    if pack_spec is None:
-        pack_spec = packing.make_pack_spec(tree)
-    idx = _client_index(axis_names)
-    live = _live_schedules(spec)
-    perms = [p for _, p, _, _ in live]
-    weights = _local_raw_weights(spec, idx, len(perms), gates)
-    alive_vec = (None if alive is None and gates is None
-                 else _local_contrib_vec(spec, idx, live, alive, gates))
-
-    fresh = packing.pack_tree(tree, pack_spec)
-    out_bufs = []
-    for buf, prev in zip(fresh, state_bufs):
-        # all ppermutes read the carried snapshot (a step input): no dep on
-        # the scan, so the scheduler can start them at program entry
-        received = [jax.lax.ppermute(prev, axis_names, perm=p) for p in perms]
-        stack = jnp.stack([buf] + received)
-        out_bufs.append(mix_ops.gossip_mix_packed(
-            stack, weights, alive_vec, block_rows=pack_spec.block_rows,
-            impl=mix_impl))
-    return packing.unpack_tree(tuple(out_bufs), pack_spec), fresh
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(substrate="shard_map", codec="f32",
+                                      delay=1, mix_impl=mix_impl),
+        spec, axis_names=axis_names, pack_spec=pack_spec)
+    return ex(tree, state=state_bufs, alive=alive, gates=gates)
 
 
 def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
@@ -747,54 +685,15 @@ def ppermute_mix_packed_quantized(tree: PyTree, spec: GossipSpec,
     renormalized gate x alive weight rides into its fused
     dequant-accumulate pass — masked or gated rounds do the same HBM
     traffic as plain ones.
+
+    Engine cell: ``shard_map x int8_block x sync`` (``int8`` with
+    ``block_scales=False``; :mod:`repro.core.engine`).
     """
-    from repro.kernels.quant_gossip import ops as qops
+    from repro.core import engine as engine_lib
 
-    if pack_spec is None:
-        pack_spec = packing.make_pack_spec(tree)
-    idx = _client_index(axis_names)
-    live = _live_schedules(spec)
-    perms = [p for _, p, _, _ in live]
-    c = float(spec.edge_weight)
-    if alive is None and gates is None:
-        self_scale = jnp.asarray(spec.self_weights)[idx].astype(jnp.float32)
-        recv_alive = [None] * len(perms)
-    else:
-        self_w = _local_raw_weights(spec, idx, 0, gates)[0]
-        contrib = _local_contrib_vec(spec, idx, live, alive, gates)
-        a_self, src_a = contrib[0], contrib[1:]
-        wa0 = self_w * a_self
-        tot = wa0 + c * jnp.sum(src_a)
-        # no renormalizable mass => identity row REPLACES the renormalized
-        # term (inv zeroed, so tiny fractional mass cannot double-count)
-        ok = (tot > 1e-12).astype(jnp.float32)
-        inv = ok / jnp.maximum(tot, 1e-12)
-        self_scale = a_self * wa0 * inv + (1.0 - a_self) + a_self * (1.0 - ok)
-        recv_alive = [a_self * src_a[k] * inv for k in range(len(perms))]
-
-    out_bufs = []
-    for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
-        if block_scales:
-            q, scales = qops.quantize_packed_blockwise(
-                buf, block_rows=pack_spec.block_rows, impl=impl)
-            wire = qops.fold_scales_into_wire(q, scales)
-        else:
-            q, scale = qops.quantize_packed(
-                buf, block_rows=pack_spec.block_rows, impl=impl)
-            wire = qops.fold_scale_into_wire(q, scale)
-        n_blocks = pack_spec.buffer_blocks(b)
-        acc = self_scale.astype(buf.dtype) * buf
-        for p, a in zip(perms, recv_alive):
-            rwire = jax.lax.ppermute(wire, axis_names, perm=p)
-            if block_scales:
-                rq, rs = qops.split_wire_blockwise(rwire, n_blocks)
-                acc = qops.dequant_accumulate_packed_blockwise(
-                    rq, rs, c, acc, a, block_rows=pack_spec.block_rows,
-                    impl=impl)
-            else:
-                rq, rs = qops.split_wire(rwire)
-                acc = qops.dequant_accumulate_packed(
-                    rq, rs, c, acc, a, block_rows=pack_spec.block_rows,
-                    impl=impl)
-        out_bufs.append(acc)
-    return packing.unpack_tree(tuple(out_bufs), pack_spec)
+    ex = engine_lib.build_gossip_executor(
+        engine_lib.GossipEngineConfig(
+            substrate="shard_map",
+            codec="int8_block" if block_scales else "int8", mix_impl=impl),
+        spec, axis_names=axis_names, pack_spec=pack_spec)
+    return ex(tree, alive=alive, gates=gates)

@@ -96,6 +96,13 @@ class PackSpec:
     def buffer_shape(self, b: int) -> tuple[int, int]:
         return (self.buffer_rows[b], LANE)
 
+    def buffer_struct(self, b: int) -> jax.ShapeDtypeStruct:
+        """Host-side ShapeDtypeStruct of buffer ``b`` — the base shape the
+        engine's wire codecs derive their on-the-wire struct from (the f32
+        codec ships it as-is; the int8 codecs append scale rows)."""
+        return jax.ShapeDtypeStruct(self.buffer_shape(b),
+                                    jnp.dtype(self.buffer_dtypes[b]))
+
     def buffer_blocks(self, b: int) -> int:
         """Row-block (kernel tile) count of buffer ``b`` — also the number of
         per-block quant scales its int8 wire buffer carries."""

@@ -121,6 +121,24 @@ def split_wire_blockwise(wire: jax.Array,
     return wire[:-tail_rows], scales.reshape(n_blocks)
 
 
+def dequantize_packed(q: jax.Array, scale: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Plain dequantize of a per-buffer-scaled packed payload (the stacked
+    engine substrate's gather source; the shard_map substrate uses the fused
+    dequant-accumulate kernels instead)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def dequantize_packed_blockwise(q: jax.Array, scales: jax.Array,
+                                dtype=jnp.float32, *,
+                                block_rows: int = _k.DEFAULT_BLOCK_ROWS
+                                ) -> jax.Array:
+    """Plain dequantize with per-row-block scales (one f32 per
+    ``(block_rows, LANE)`` tile)."""
+    deq = q.astype(jnp.float32) * jnp.repeat(scales, block_rows)[:, None]
+    return deq.astype(dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
 def quantize_packed_blockwise(buf: jax.Array, *,
                               block_rows: int = _k.DEFAULT_BLOCK_ROWS,

@@ -73,6 +73,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                                   if setup.gossip_spec else None),
                 "gossip_impl": par.gossip_impl,
                 "gossip_delay": setup.gossip_delay,
+                # the parsed engine cell (repro.core.engine) the step
+                # actually lowered with — substrate x codec x timing
+                "gossip_engine": (dataclasses.asdict(setup.engine_config)
+                                  if setup.engine_config else None),
             }
             if setup.pack_spec is not None:
                 # per-device gossip-buffer padding, measured per cell via
@@ -158,6 +162,11 @@ def main() -> None:
                     choices=["dense", "ppermute", "ppermute_quant",
                              "ppermute_packed", "ppermute_packed_quant",
                              "ppermute_packed_async"])
+    ap.add_argument("--codec", default=None,
+                    choices=["auto", "f32", "int8", "int8_block"],
+                    help="wire-codec override (repro.core.engine); "
+                         "--gossip ppermute_packed_async --codec int8_block "
+                         "lowers the pipelined+quantized composition")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -181,6 +190,8 @@ def main() -> None:
                     delay = 1 if args.gossip == "ppermute_packed_async" else 0
                     par = dataclasses.replace(par, gossip_impl=args.gossip,
                                               gossip_delay=delay)
+                if args.codec:
+                    par = dataclasses.replace(par, gossip_codec=args.codec)
                 try:
                     rec = run_cell(arch, shape.name, mk, par=par,
                                    label=args.label)

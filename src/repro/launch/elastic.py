@@ -44,7 +44,10 @@ repair together with the params** (its layout depends only on the parameter
 structure, so `old2new` row compaction is exact; the spec/degree change from
 the repair only alters who gathers from it). Delay composes with alive masks
 and round-plan gates unchanged, and keeps the same retrace accounting: churn
-and plans are data, membership changes re-jit once.
+and plans are data, membership changes re-jit once. With
+``gossip_codec="int8"``/``"int8_block"`` the round is the pipelined +
+quantized engine composition: the carried snapshot IS the int8 wire buffer
+(4x smaller state, same remap), and the same accounting holds.
 
 The default step builder runs the stacked simulator round
 (`gossip.mix_packed_stacked`: vmapped local DFedAvgM + packed gather-mix on
@@ -63,7 +66,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import dfedavg, failures as failures_lib, gossip as gossip_lib
+from repro.core import dfedavg, engine as engine_lib, failures as failures_lib, \
+    gossip as gossip_lib
 from repro.core.topology import Overlay
 from repro.overlay import plan as plan_lib
 from repro.overlay.plan import RoundPlan
@@ -93,11 +97,21 @@ class ElasticTrainer:
     # snapshot (mix_dense_delayed semantics) and the snapshot is carried as
     # trainer state — see _inflight. 0 = synchronous (unchanged path).
     gossip_delay: int = 0
+    # wire codec of the stacked engine round (repro.core.engine): "f32"
+    # (default, the exact pre-engine numerics), "int8" / "int8_block"
+    # simulate the quantized wire — with gossip_delay=1 this is the
+    # pipelined+quantized composition, and the carried _inflight snapshot
+    # is the int8 wire itself (remapped through splice repair like any
+    # other per-client row state).
+    gossip_codec: str = "f32"
 
     def __post_init__(self):
         if self.gossip_delay not in (0, 1):
             raise ValueError(f"gossip_delay must be 0 or 1, "
                              f"got {self.gossip_delay}")
+        if self.gossip_codec not in engine_lib.CODECS:
+            raise ValueError(f"unknown gossip_codec {self.gossip_codec!r}; "
+                             f"available: {', '.join(engine_lib.CODECS)}")
         if self.gossip_delay and self.step_builder is not None:
             # the production pipelined step threads its own in-flight state
             # (mesh-leading-dims layout, primed via TrainSetup.init_inflight)
@@ -139,6 +153,11 @@ class ElasticTrainer:
         # plan, gates are traced data. plan_lib.is_active is the one shared
         # predicate — it matches steps.py's `round_plan != "static"` rule
         use_plan = plan_lib.is_active(self.plan)
+        self._executor = engine_lib.build_gossip_executor(
+            engine_lib.GossipEngineConfig(substrate="stacked",
+                                          codec=self.gossip_codec,
+                                          delay=self.gossip_delay), spec)
+        executor = self._executor
 
         def client(p, b, lr):
             v = jax.tree.map(jnp.zeros_like, p)
@@ -151,8 +170,8 @@ class ElasticTrainer:
                 self.n_traces += 1  # python side effect: only runs on trace
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
-                mixed, inflight = gossip_lib.mix_packed_stacked_delayed(
-                    params, inflight, spec, alive,
+                mixed, inflight = executor(
+                    params, state=inflight, alive=alive,
                     gates=gates if use_plan else None)
                 return mixed, losses, inflight
             return jax.jit(round_fn)
@@ -161,8 +180,8 @@ class ElasticTrainer:
             self.n_traces += 1  # python side effect: runs only when tracing
             params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                 params, batches, lr)
-            mixed = gossip_lib.mix_packed_stacked(
-                params, spec, alive, gates=gates if use_plan else None)
+            mixed = executor(params, alive=alive,
+                             gates=gates if use_plan else None)
             return mixed, losses
         return jax.jit(round_fn)
 
@@ -228,7 +247,9 @@ class ElasticTrainer:
         lr = jnp.asarray(lr, jnp.float32)
         if self.gossip_delay:
             if self._inflight is None:  # prime: round 0 mixes the initial
-                self._inflight = gossip_lib.pack_state_stacked(params)
+                # snapshot in the codec's wire format (packed f32 buffers,
+                # or the folded int8 wire for the quantized codecs)
+                self._inflight = self._executor.init_state(params)
             params, losses, self._inflight = self._round(
                 params, self._inflight, batches, lr, alive, gates)
             return params, losses

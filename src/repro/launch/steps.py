@@ -6,19 +6,25 @@ This is where the paper's technique meets the device grid:
   followed by the *gossip island*: a **fully-manual** `shard_map` over all
   mesh axes (in/out specs = the real parameter partition specs — mixing is
   elementwise, so mixing corresponding local shards is exact and each
-  ppermute ships only shard-sized payloads). Executors, by `gossip_impl`:
-  `"ppermute_packed"` (default) packs the local shard pytree into one
-  lane-aligned flat buffer per dtype and issues **d ppermutes per round
-  total** (one per schedule, independent of leaf count) + one fused Pallas
-  reduction pass; `"ppermute_packed_quant"` additionally ships int8 payloads
-  through the Pallas quantize / dequant-accumulate kernels; `"ppermute"` /
-  `"ppermute_quant"` are the per-leaf baselines (d x n_leaves collectives);
-  `"dense"` is the paper-naive dense mixing einsum (the §Perf baseline);
-  `"ppermute_packed_async"` + `gossip_delay=1` is the **pipelined** packed
-  engine: the step carries last round's packed snapshot as donated state,
-  so the d ppermutes read a step *input* and overlap with the local-step
-  scan (one-round-delayed mixing, `gossip.mix_dense_delayed` semantics);
-  with `gossip_delay=0` it is bit-identical to `"ppermute_packed"`.
+  ppermute ships only shard-sized payloads). The executor is ONE engine
+  cell (`repro.core.engine`: substrate x codec x timing), parsed from the
+  legacy `gossip_impl` string + `gossip_delay` + `gossip_codec`:
+  `"ppermute_packed"` (default) = shard_map x f32 x sync — d ppermutes per
+  round total (one per schedule, independent of leaf count) + one fused
+  Pallas reduction pass; `"ppermute_packed_quant"` = shard_map x
+  int8_block x sync — int8 wire payloads with the fold-scales-into-wire
+  format (still d collectives); `"ppermute"` / `"ppermute_quant"` are the
+  per-leaf baseline substrate (d x n_leaves collectives); `"dense"` is the
+  paper-naive dense mixing einsum (the §Perf baseline);
+  `"ppermute_packed_async"` + `gossip_delay=1` is the **pipelined** engine:
+  the step carries last round's snapshot *in the codec's wire format* as
+  donated state, so the d ppermutes read a step input and overlap with the
+  local-step scan (one-round-delayed mixing, `gossip.mix_dense_delayed`
+  semantics); with `gossip_delay=0` it is bit-identical to
+  `"ppermute_packed"`. Pipelined + quantized is the free composition:
+  `gossip_impl="ppermute_packed_async"`, `gossip_delay=1`,
+  `gossip_codec="int8_block"` ships d int8 wire collectives per round and
+  carries a 4x smaller snapshot.
 
   The train step takes a per-client ``alive`` 0/1 vector as its **fourth,
   donated argument** and a per-schedule ``gates`` float vector (the
@@ -43,7 +49,6 @@ Every builder returns (jitted_fn, input_specs_dict) so the dry-run can
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -52,7 +57,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DFLConfig, ModelConfig, ParallelConfig, ShapeConfig
-from repro.core import dfedavg, gossip as gossip_lib, packing as packing_lib, topology
+from repro.core import dfedavg, engine as engine_lib, gossip as gossip_lib, \
+    packing as packing_lib, topology
 from repro.launch import mesh as mesh_lib
 from repro.models import params as params_lib
 from repro.models.api import ModelAPI
@@ -129,6 +135,8 @@ class TrainSetup:
     pack_spec: packing_lib.PackSpec | None = None  # packed-gossip layout
     gossip_delay: int = 0          # 1 = pipelined (one-round-delayed) gossip
     init_inflight: Any = None      # jitted params -> in-flight snapshot
+    # the parsed engine cell (substrate x codec x timing) the step runs on
+    engine_config: engine_lib.GossipEngineConfig | None = None
 
 
 def _train_rules(caxes: tuple[str, ...], zero3: bool = True) -> dict:
@@ -222,25 +230,33 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
 
     # ---- gossip island (fully-manual shard_map over the real param specs:
     # mixing is elementwise, so each device mixes its local shard in place —
-    # no resharding, and every ppermute ships only shard-sized payloads)
+    # no resharding, and every ppermute ships only shard-sized payloads).
+    # The legacy gossip_impl string (+ gossip_delay / gossip_codec) parses
+    # into ONE engine cell — substrate x codec x timing — and the executor
+    # is assembled by repro.core.engine; there is no per-variant dispatch
+    # below this point.
+    if par.gossip_delay not in (0, 1):
+        raise ValueError(f"gossip_delay must be 0 or 1, got {par.gossip_delay}")
+    ecfg = engine_lib.parse_gossip_impl(par.gossip_impl, par.gossip_delay,
+                                        par.gossip_codec)
     pack_spec = None
-    if par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant",
-                           "ppermute_packed_async"):
+    if ecfg.substrate == "shard_map":
         pack_spec = packing_lib.make_pack_spec(
             local_shard_structs(struct, pspecs, dmesh))
 
     # pipelined gossip: delay=1 is only meaningful (and only legal) on the
     # async packed impl; the async impl with delay=0 degrades to the exact
     # synchronous packed path (bit-identical — the regression anchor)
-    if par.gossip_delay not in (0, 1):
-        raise ValueError(f"gossip_delay must be 0 or 1, got {par.gossip_delay}")
-    if par.gossip_delay == 1 and par.gossip_impl != "ppermute_packed_async":
-        raise ValueError("gossip_delay=1 requires "
-                         "gossip_impl='ppermute_packed_async', got "
-                         f"{par.gossip_impl!r}")
-    use_delay = (par.gossip_impl == "ppermute_packed_async"
-                 and par.gossip_delay == 1 and gspec is not None
-                 and overlay is not None)
+    use_delay = (ecfg.delay == 1 and gspec is not None and overlay is not None)
+    run_cfg = ecfg if use_delay else dataclasses.replace(ecfg, delay=0)
+    axis = caxes if len(caxes) > 1 else caxes[0]
+    executor = None
+    if gspec is not None and overlay is not None:
+        executor = engine_lib.build_gossip_executor(
+            run_cfg, gspec,
+            axis_names=(axis if run_cfg.substrate in ("shard_map", "per_leaf")
+                        else None),
+            pack_spec=pack_spec)
 
     # build-time decision: the gate pathway only engages when the config
     # names a real round plan. A static run keeps the exact (possibly
@@ -257,69 +273,54 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     use_gates = dfl.round_plan != "static"
 
     def gossip_fn(params, alive, gates):
-        if gspec is None or overlay is None:
+        if executor is None:
             return params
-        if par.gossip_impl == "dense":
+        if run_cfg.substrate == "dense":
             # paper-naive dense baseline, on the gated+masked effective
             # matrix (gates/alive are traced data here too)
-            return gossip_lib.mix_dense(
-                params, gossip_lib.gated_mixing_matrix(
-                    gspec, gates if use_gates else None, alive))
-
-        packed = par.gossip_impl in ("ppermute_packed", "ppermute_packed_quant",
-                                     "ppermute_packed_async")
-        if par.gossip_impl in ("ppermute_packed", "ppermute_packed_async"):
-            # the async impl with gossip_delay=0 IS the synchronous packed
-            # executor (bit-identical); delay=1 never reaches gossip_fn
-            mixer = functools.partial(gossip_lib.ppermute_mix_packed,
-                                      pack_spec=pack_spec)
-        elif par.gossip_impl == "ppermute_packed_quant":
-            mixer = functools.partial(gossip_lib.ppermute_mix_packed_quantized,
-                                      pack_spec=pack_spec)
-        elif par.gossip_impl == "ppermute_quant":
-            mixer = gossip_lib.ppermute_mix_quantized
-        else:
-            mixer = gossip_lib.ppermute_mix
-        axis = caxes if len(caxes) > 1 else caxes[0]
+            return executor(params, alive=alive,
+                            gates=gates if use_gates else None)
 
         def body(p, alive_vec, gate_vec):
             local = jax.tree.map(lambda x: x[0], p)       # client-local shard
             # alive + round-plan gates ride into the island replicated; only
-            # the packed executors are failure/plan-aware (per-leaf
-            # baselines ignore both, and a static config drops the gate
-            # pathway at trace time)
-            mixed = (mixer(local, gspec, axis, alive=alive_vec,
-                           gates=gate_vec if use_gates else None) if packed
-                     else mixer(local, gspec, axis))
+            # the packed engine is failure/plan-aware (the per-leaf
+            # baseline substrate ignores both, and a static config drops
+            # the gate pathway at trace time)
+            mixed = (executor(local)
+                     if run_cfg.substrate == "per_leaf"
+                     else executor(local, alive=alive_vec,
+                                   gates=gate_vec if use_gates else None))
             return jax.tree.map(lambda x: x[None], mixed)
 
         return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P(), P()),
                                   out_specs=pspecs)(params, alive, gates)
 
     # ---- pipelined gossip state (delay=1): the in-flight snapshot is the
-    # per-device packed buffer of last round's post-local-step shards. Its
-    # global representation carries one leading dim per mesh axis (each
-    # sharded over that axis), so the fully-manual island sees exactly one
-    # (rows, LANE) block per device — the state never reshards.
+    # per-device *codec wire* of last round's post-local-step shards (the
+    # packed f32 buffer for codec="f32", the folded int8 wire buffer for the
+    # quantized codecs — so pipelined+quantized carries and ships int8
+    # bytes). Its global representation carries one leading dim per mesh
+    # axis (each sharded over that axis), so the fully-manual island sees
+    # exactly one (rows, LANE) block per device — the state never reshards.
     axis_names = tuple(dmesh.axis_names)
     axis_sizes = tuple(int(dmesh.shape[a]) for a in axis_names)
     inflight_structs = inflight_pspecs = None
     if use_delay:
+        local_state_structs = executor.state_structs()
         inflight_pspecs = tuple(P(*axis_names, None, None)
-                                for _ in range(pack_spec.n_buffers))
+                                for _ in local_state_structs)
         inflight_structs = tuple(
-            jax.ShapeDtypeStruct(axis_sizes + pack_spec.buffer_shape(b),
-                                 jnp.dtype(pack_spec.buffer_dtypes[b]))
-            for b in range(pack_spec.n_buffers))
+            jax.ShapeDtypeStruct(axis_sizes + s.shape, s.dtype)
+            for s in local_state_structs)
         lead = (1,) * len(axis_sizes)
 
         def gossip_fn_delayed(params, alive, gates, inflight):
             def body(p, alive_vec, gate_vec, state):
                 local = jax.tree.map(lambda x: x[0], p)
                 state_local = tuple(s.reshape(s.shape[-2:]) for s in state)
-                mixed, new_state = gossip_lib.ppermute_mix_packed_delayed(
-                    local, state_local, gspec, caxes if len(caxes) > 1
-                    else caxes[0], pack_spec=pack_spec, alive=alive_vec,
+                mixed, new_state = executor(
+                    local, state=state_local, alive=alive_vec,
                     gates=gate_vec if use_gates else None)
                 return (jax.tree.map(lambda x: x[None], mixed),
                         tuple(s.reshape(lead + s.shape) for s in new_state))
@@ -330,12 +331,12 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                                                      inflight)
 
         def snapshot_fn(params):
-            """Prime the pipeline: pack the current post-mix params into the
-            in-flight layout (round 0 then mixes the initial params as its
-            delayed snapshot — the mix_dense_delayed convention)."""
+            """Prime the pipeline: encode the current post-mix params into
+            the in-flight wire layout (round 0 then mixes the initial params
+            as its delayed snapshot — the mix_dense_delayed convention)."""
             def body(p):
                 local = jax.tree.map(lambda x: x[0], p)
-                bufs = packing_lib.pack_tree(local, pack_spec)
+                bufs = executor.init_state(local)
                 return tuple(b.reshape(lead + b.shape) for b in bufs)
 
             return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs,),
@@ -426,7 +427,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
         dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec,
         gossip_delay=par.gossip_delay if use_delay else 0,
-        init_inflight=init_inflight)
+        init_inflight=init_inflight, engine_config=run_cfg)
 
 
 # ------------------------------------------------------------- serve steps

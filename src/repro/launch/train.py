@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import DFLConfig
-from repro.core import dfedavg, failures as failures_lib, gossip as gossip_lib
+from repro.core import dfedavg, engine as engine_lib, failures as failures_lib, \
+    gossip as gossip_lib
 from repro.core.topology import Overlay
 from repro.launch.steps import build_overlay
 from repro.models import lstm as lstm_model
@@ -47,6 +48,8 @@ class SimTrainer:
     # 1 = pipelined gossip (mix the previous round's packed snapshot,
     # mix_dense_delayed semantics); 0 = synchronous (unchanged)
     gossip_delay: int = 0
+    # wire codec of the stacked engine round ("f32" | "int8" | "int8_block")
+    gossip_codec: str = "f32"
 
     def __post_init__(self):
         if self.gossip_delay not in (0, 1):
@@ -61,6 +64,11 @@ class SimTrainer:
         # no active plan (None or static) => gate pathway off at build time
         # (exact Chow weights; shared predicate with ElasticTrainer/steps.py)
         use_plan = overlay_plan.is_active(self.plan)
+        self._executor = engine_lib.build_gossip_executor(
+            engine_lib.GossipEngineConfig(substrate="stacked",
+                                          codec=self.gossip_codec,
+                                          delay=self.gossip_delay), spec)
+        executor = self._executor
 
         def client(p, b, lr):
             v = jax.tree.map(jnp.zeros_like, p)
@@ -73,8 +81,8 @@ class SimTrainer:
             def round_fn(params, inflight, batches, lr, alive, gates):
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
-                params, inflight = gossip_lib.mix_packed_stacked_delayed(
-                    params, inflight, spec, alive,
+                params, inflight = executor(
+                    params, state=inflight, alive=alive,
                     gates=gates if use_plan else None)
                 return params, losses, inflight
             return round_fn
@@ -83,8 +91,8 @@ class SimTrainer:
         def round_fn(params, batches, lr, alive, gates):
             params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                 params, batches, lr)
-            params = gossip_lib.mix_packed_stacked(
-                params, spec, alive, gates=gates if use_plan else None)
+            params = executor(params, alive=alive,
+                              gates=gates if use_plan else None)
             return params, losses
         return round_fn
 
@@ -134,7 +142,7 @@ class SimTrainer:
             lr_t = jnp.asarray(lr_fn(rnd), jnp.float32)
             if self.gossip_delay:
                 if self._inflight is None:  # prime with the initial params
-                    self._inflight = gossip_lib.pack_state_stacked(params)
+                    self._inflight = self._executor.init_state(params)
                 params, losses, self._inflight = self._round_fn(
                     params, self._inflight, batches, lr_t,
                     jnp.asarray(self._alive), self._gates(rnd))
@@ -157,7 +165,8 @@ class SimTrainer:
 def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 local_steps=3, batch=8, seq=64, lr=0.5, momentum=0.9,
                 ckpt_dir=None, seed=0, drop_fraction=0.0, drop_round=10,
-                round_plan="static", gossip_delay=0) -> list[dict]:
+                round_plan="static", gossip_delay=0,
+                gossip_codec="f32") -> list[dict]:
     from repro.data import federated, pipeline, shakespeare
 
     toks, vocab = shakespeare.corpus()
@@ -183,7 +192,8 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                                   fraction=dfl.plan_fraction, seed=seed)
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
                          dcfg=dcfg, ckpt=ckpt, plan=plan,
-                         gossip_delay=gossip_delay)
+                         gossip_delay=gossip_delay,
+                         gossip_codec=gossip_codec)
 
     # held-out evaluation: last 10% of the corpus
     ev = pipeline.TokenBatcher(tokens=toks, spans=[(int(len(toks) * .9),
@@ -237,6 +247,10 @@ def main() -> None:
                     help="time-varying round plan (gates-as-data)")
     ap.add_argument("--gossip-delay", type=int, default=0, choices=[0, 1],
                     help="1 = pipelined (one-round-delayed) gossip")
+    ap.add_argument("--gossip-codec", default="f32",
+                    choices=["f32", "int8", "int8_block"],
+                    help="wire codec of the engine round (int8_block + "
+                         "--gossip-delay 1 = pipelined+quantized)")
     ap.add_argument("--local-steps", type=int, default=3)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
@@ -249,7 +263,8 @@ def main() -> None:
                        local_steps=args.local_steps, lr=args.lr,
                        ckpt_dir=args.ckpt_dir,
                        drop_fraction=args.drop_fraction,
-                       round_plan=args.plan, gossip_delay=args.gossip_delay)
+                       round_plan=args.plan, gossip_delay=args.gossip_delay,
+                       gossip_codec=args.gossip_codec)
     for rec in hist:
         print(json.dumps(rec))
     if args.out:
