@@ -75,7 +75,11 @@ def run_dfl(params, loss_fn, batch_fn, mixer, rounds: int, dcfg,
         if failure_plan is not None:
             mask = failure_plan.alive_mask(rnd)
             if isinstance(mixer, gossip.GossipSpec):
-                cur = failures_lib.alive_adjusted_spec(mixer, mask)
+                # alive-as-data masked engine round (alive_adjusted_spec is
+                # deprecated: it bakes the mask into the spec)
+                params = gossip.mix_packed_stacked(
+                    params, mixer, alive=jnp.asarray(mask, jnp.float32))
+                cur = None
             else:
                 from repro.core.gossip import mix_dense_masked
                 params = mix_dense_masked(params, jnp.asarray(mixer), mask)

@@ -15,6 +15,10 @@ Mapping to the paper:
   bench_overlay   -> overlay-lab Pareto sweep: spectral gap vs degree vs
                      packed mixing rounds/sec per graph family, static and
                      one-peer time-varying (JSON record to experiments/bench/)
+  bench_robust    -> Byzantine screens vs scripted attackers: convergence
+                     proxy over f x screen x topology, per-round screen
+                     overhead, zero-retrace guard under attacker churn
+                     (JSON record to experiments/bench/robust.json)
 """
 from __future__ import annotations
 
@@ -33,7 +37,7 @@ def main() -> None:
 
     from benchmarks import (bench_comm, bench_elastic, bench_failures,
                             bench_kernels, bench_lm, bench_mnist,
-                            bench_overlay, bench_spectral)
+                            bench_overlay, bench_robust, bench_spectral)
 
     rounds = 6 if args.fast else 10
     suite = [
@@ -45,6 +49,7 @@ def main() -> None:
         ("lm", lambda: bench_lm.main(rounds=rounds + 4)),
         ("failures", lambda: bench_failures.main(rounds=rounds)),
         ("elastic", lambda: bench_elastic.main(rounds=rounds)),
+        ("robust", lambda: bench_robust.main(rounds=rounds)),
     ]
     print("name,us_per_call,derived")
     failed = []

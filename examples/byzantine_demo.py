@@ -1,0 +1,90 @@
+"""Byzantine-robust gossip walkthrough: a scripted sign-flip attacker vs
+the engine's screens — unscreened mean poisoned, trimmed mean shrugging it
+off, and norm-clip telemetry quarantining the attacker through the same
+splice repair that handles crashed clients.
+
+    PYTHONPATH=src python examples/byzantine_demo.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfedavg, failures
+from repro.core.topology import ring_overlay
+from repro.launch.elastic import ElasticTrainer
+
+N, DIM = 12, 8
+ATTACKER = 5
+
+
+def loss_fn(params, batch):
+    return jnp.mean(jnp.square(params["w"] - batch["target"])), {}
+
+
+def batches(n, k=2):
+    # consensus target: the origin
+    return {"target": jnp.zeros((n, k, DIM), jnp.float32)}
+
+
+def honest_proxy(params, n):
+    honest = np.array([i for i in range(n) if i != ATTACKER])
+    return float(jnp.mean(jnp.square(params["w"][honest])))
+
+
+def make_trainer(screen, *, quarantine=0):
+    # client 5 flips the sign of its model and scales it 20x, every round
+    plan = failures.AttackPlan(
+        N, events=((0, (ATTACKER,), "sign_flip", 20.0),))
+    return ElasticTrainer(
+        overlay=ring_overlay(N), loss_fn=loss_fn,
+        dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.5),
+        failure_rounds=10**9, attack_plan=plan,
+        gossip_screen=screen, screen_tau=3.0, screen_trim=1,
+        quarantine_rounds=quarantine)
+
+
+rng = np.random.default_rng(0)
+init = {"w": jnp.asarray(rng.standard_normal((N, DIM)), jnp.float32)}
+
+print(f"== act 1: screens vs a sign-flip attacker (client {ATTACKER}, "
+      f"ring of {N}) ==")
+print("honest mean-square distance to the consensus target, by round:\n")
+histories = {}
+for screen in ("none", "norm_clip", "trimmed_mean"):
+    trainer = make_trainer(screen)
+    params = init
+    hist = []
+    for _ in range(8):
+        params, _ = trainer.step(params, batches(N), 0.2)
+        hist.append(honest_proxy(params, N))
+    histories[screen] = hist
+    # the attack vector is traced data: one executable for the whole run
+    assert trainer.n_traces == 1
+    print(f"  {screen:13s} " + " ".join(f"{v:8.4f}" for v in hist))
+print("\nunscreened gossip imports the flipped model every round; the "
+      "trimmed\nmean drops the per-coordinate extremes so honest clients "
+      "still converge.")
+
+print(f"\n== act 2: norm-clip telemetry -> quarantine -> splice repair ==")
+trainer = make_trainer("norm_clip", quarantine=3)
+params = init
+for rnd in range(6):
+    # heartbeats are all-alive: the attacker responds; only its *updates*
+    # are malicious. Quarantine is what evicts it.
+    params, _, old2new = trainer.observe_heartbeats(
+        np.ones(trainer.n_clients), params)
+    if old2new is not None:
+        print(f"round {rnd}: suspicion hit {trainer.quarantine_rounds} -> "
+              f"QUARANTINED {trainer.repairs[-1]['quarantined']}, two-hop "
+              f"splice repair, {N} -> {trainer.n_clients} clients")
+        break
+    params, _ = trainer.step(params, batches(trainer.n_clients), 0.2)
+    clipped_by = int(trainer.health.suspicion[ATTACKER])
+    print(f"round {rnd}: receivers keep clipping client {ATTACKER} "
+          f"(suspicion {clipped_by}/{trainer.quarantine_rounds}), "
+          f"honest proxy {honest_proxy(params, trainer.n_clients):.4f}")
+
+params, _ = trainer.step(params, batches(trainer.n_clients), 0.2)
+print(f"post-repair round on the spliced ring: honest proxy "
+      f"{float(jnp.mean(jnp.square(params['w']))):.4f}, "
+      f"re-jits total {trainer.n_traces} (one per membership change)")
+print(f"repair log: {trainer.repairs}")

@@ -206,6 +206,15 @@ class ParallelConfig:
     # shipped in the int8 wire format: d int8 collectives/round, 4x smaller
     # donated state)
     gossip_codec: Literal["auto", "f32", "int8", "int8_block"] = "auto"
+    # Byzantine screen over received payloads (repro.core.engine): "none"
+    # trusts every wire; "norm_clip" rescales any received buffer whose norm
+    # exceeds gossip_clip_tau x the receiver's own norm; "trimmed_mean"
+    # drops the gossip_trim_f largest/smallest live values per coordinate
+    # and renormalizes over the survivors. Screens compose with every codec
+    # x timing cell through config alone — still d collectives/round.
+    gossip_screen: Literal["none", "norm_clip", "trimmed_mean"] = "none"
+    gossip_clip_tau: float = 3.0
+    gossip_trim_f: int = 1
     local_steps: int = 2          # K inside the lowered round (scan)
     use_fused_sgdm: bool = True
     grad_accum: int = 4           # microbatches per local step (memory knob)
@@ -239,3 +248,9 @@ class DFLConfig:
     # `failure_rounds` is declared dead (splice repair + one re-jit).
     straggler_rounds: int = 1
     failure_rounds: int = 3
+    # Byzantine attacker harness (repro.core.failures.AttackPlan): when
+    # True the jitted step takes a (2, n) per-client attack operand + a
+    # PRNG key as *data* (zero retraces under attacker churn) and applies
+    # it to the post-local-step params before gossip. The all-honest
+    # operand is a numerical no-op, so attack-free rounds share the trace.
+    byzantine: bool = False

@@ -30,6 +30,22 @@ The engine factors the round into:
   ``"stacked"`` (the single-device simulator: gathers on a stacked client
   axis — the elastic runtime's path), ``"per_leaf"`` (the d x n_leaves
   ppermute baseline), or ``"dense"`` (the paper-naive mixing einsum).
+* **screen** — Byzantine-robust aggregation of what arrived: ``"none"``
+  (trust every payload: the plain weighted reduction), ``"norm_clip"``
+  (per-sender squared-norm pass over the packed wire; any received buffer
+  whose norm exceeds ``clip_tau x`` the receiver's own norm is rescaled
+  down onto that ball — a *payload* rescale, folded into the
+  post-renormalization received weights so the alive/gates renorm is
+  untouched and an all-ones clip is the exact identity), or
+  ``"trimmed_mean"`` (coordinate-wise trimmed mean over the d+1 stack
+  through the fused ``gossip_mix_2d_trimmed[_quant]`` kernels: per element
+  the ``trim_f`` largest and smallest live values are dropped and the
+  survivors renormalize — dead/gated/fixed-point senders are excluded from
+  the order statistics via the same contributor weights the masked
+  reduction uses). Screens are local and per-receiver: each client defends
+  its own update with information it already holds; there is no reputation
+  exchange and no extra collective — the wire still ships exactly d
+  buffers/round.
 
 Alive masks and round-plan gates thread through the ONE shared weight path
 (:func:`repro.core.gossip.alive_weight_table` and its per-client local form)
@@ -58,6 +74,7 @@ from repro.core.gossip import GossipSpec
 
 __all__ = [
     "CODECS",
+    "SCREENS",
     "SUBSTRATES",
     "LEGACY_GOSSIP_IMPLS",
     "GossipEngineConfig",
@@ -71,6 +88,7 @@ PyTree = Any
 
 SUBSTRATES = ("shard_map", "stacked", "per_leaf", "dense")
 CODECS = ("f32", "int8", "int8_block")
+SCREENS = ("none", "norm_clip", "trimmed_mean")
 
 # legacy ParallelConfig.gossip_impl strings -> (substrate, codec). The delay
 # axis rides separately (ParallelConfig.gossip_delay); "ppermute_packed_async"
@@ -88,7 +106,7 @@ LEGACY_GOSSIP_IMPLS = {
 
 @dataclasses.dataclass(frozen=True)
 class GossipEngineConfig:
-    """Static (hashable) engine cell: substrate x codec x timing.
+    """Static (hashable) engine cell: substrate x codec x timing x screen.
 
     Attributes:
       substrate: "shard_map" | "stacked" | "per_leaf" | "dense".
@@ -98,12 +116,22 @@ class GossipEngineConfig:
       mix_impl: kernel implementation knob threaded to the fused
         gossip_mix / quant kernels ("auto" | "pallas" | "pallas_interpret" |
         "ref").
+      screen: Byzantine screen over received payloads — "none" |
+        "norm_clip" | "trimmed_mean" (packed substrates only; see module
+        docstring for the exact semantics of each).
+      clip_tau: norm_clip threshold — a received buffer is rescaled when
+        its norm exceeds ``clip_tau x`` the receiver's own norm.
+      trim_f: trimmed_mean per-side drop count (clamped per coordinate so
+        at least one live value always survives; 0 = renormalized mean).
     """
 
     substrate: str = "shard_map"
     codec: str = "f32"
     delay: int = 0
     mix_impl: str = "auto"
+    screen: str = "none"
+    clip_tau: float = 3.0
+    trim_f: int = 1
 
     def __post_init__(self):
         if self.substrate not in SUBSTRATES:
@@ -123,18 +151,33 @@ class GossipEngineConfig:
         if self.substrate == "dense" and self.codec != "f32":
             raise ValueError("the dense reference substrate has no wire; "
                              f"codec must be 'f32', got {self.codec!r}")
+        if self.screen not in SCREENS:
+            raise ValueError(f"unknown screen {self.screen!r}; "
+                             f"available: {', '.join(SCREENS)}")
+        if self.screen != "none" and self.substrate not in ("shard_map",
+                                                            "stacked"):
+            raise ValueError("Byzantine screens run on the packed "
+                             "substrates (shard_map | stacked), got "
+                             f"{self.substrate!r}")
+        if self.clip_tau <= 0:
+            raise ValueError(f"clip_tau must be > 0, got {self.clip_tau}")
+        if self.trim_f < 0:
+            raise ValueError(f"trim_f must be >= 0, got {self.trim_f}")
 
 
 def parse_gossip_impl(gossip_impl: str, delay: int = 0,
-                      codec: str = "auto") -> GossipEngineConfig:
+                      codec: str = "auto", screen: str = "none",
+                      clip_tau: float = 3.0,
+                      trim_f: int = 1) -> GossipEngineConfig:
     """Parse a legacy ``gossip_impl`` string (+ the ``gossip_delay`` /
-    ``gossip_codec`` knobs) into an engine config.
+    ``gossip_codec`` / ``gossip_screen`` knobs) into an engine config.
 
     ``codec="auto"`` keeps the alias's historical codec (f32 for the plain
     impls, int8_block for the quant impls); naming a codec overrides it —
     that is how the pipelined+quantized composition is spelled:
     ``gossip_impl="ppermute_packed_async", gossip_delay=1,
-    gossip_codec="int8_block"``.
+    gossip_codec="int8_block"``. ``screen`` rides the same way: any packed
+    alias composes with "norm_clip" / "trimmed_mean" through config alone.
     """
     if gossip_impl not in LEGACY_GOSSIP_IMPLS:
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}; available: "
@@ -146,10 +189,41 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
         raise ValueError("gossip_delay=1 requires "
                          f"gossip_impl='ppermute_packed_async', got "
                          f"{gossip_impl!r}")
-    return GossipEngineConfig(substrate=substrate, codec=codec, delay=delay)
+    return GossipEngineConfig(substrate=substrate, codec=codec, delay=delay,
+                              screen=screen, clip_tau=clip_tau,
+                              trim_f=trim_f)
 
 
 # ------------------------------------------------------------------ codecs
+def _renormalized_weights(weights, contrib):
+    """The alive/gates renormalization of the fused masked kernels, computed
+    on the (d+1,) scalar operands (ref ``gossip_mix`` semantics: weights
+    masked by contrib, rescaled to unit mass over the live contributors,
+    dead self => identity row). The norm-clip screen needs the
+    renormalization OUTSIDE the kernel so the clip can multiply the
+    post-renormalization received weights without entering the denominator.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    if contrib is None:
+        return w
+    a = jnp.asarray(contrib, jnp.float32)
+    wa = w * a
+    tot = jnp.sum(wa)
+    # no renormalizable mass => identity row REPLACES the renormalized term
+    # (inv zeroed, so tiny fractional mass cannot double-count)
+    ok = (tot > 1e-12).astype(jnp.float32)
+    inv = ok / jnp.maximum(tot, 1e-12)
+    a_self = a[0]
+    eff = a_self * wa * inv
+    return eff.at[0].add((1.0 - a_self) + a_self * (1.0 - ok))
+
+
+def _clip_factors(r2, lim):
+    """Norm-clip rescale factors: 1 inside the ball, sqrt(lim/r2) outside
+    (so the clipped payload lands exactly ON the tau x self-norm ball)."""
+    return jnp.where(r2 > lim, jnp.sqrt(lim / jnp.maximum(r2, 1e-30)), 1.0)
+
+
 class _F32Codec:
     """Identity wire: ship the packed buffer, reduce via the fused stack
     pass (``gossip_mix_2d``). The encode is literally the buffer, so the
@@ -169,12 +243,35 @@ class _F32Codec:
         return wire
 
     def reduce(self, fresh, received, weights, contrib, *, edge_weight,
-               n_blocks, block_rows, impl):
+               n_blocks, block_rows, impl, sender_scale=None):
         from repro.kernels.gossip_mix import ops as mix_ops
 
         stack = jnp.stack([fresh] + received)
-        return mix_ops.gossip_mix_packed(stack, weights, contrib,
+        if sender_scale is None:
+            return mix_ops.gossip_mix_packed(stack, weights, contrib,
+                                             block_rows=block_rows, impl=impl)
+        # norm-clip: renormalize outside the kernel, then scale the received
+        # weights only (column 0 untouched) — an all-ones clip is bitwise
+        # the same weight vector the masked kernel would have built
+        eff = _renormalized_weights(weights, contrib)
+        eff = jnp.concatenate([eff[:1], eff[1:] * sender_scale])
+        return mix_ops.gossip_mix_packed(stack, eff, None,
                                          block_rows=block_rows, impl=impl)
+
+    def reduce_trimmed(self, fresh, received, u, live, *, trim, n_blocks,
+                       block_rows, impl):
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        stack = jnp.stack([fresh] + received)
+        return mix_ops.gossip_mix_trimmed_packed(stack, u, live, trim=trim,
+                                                 block_rows=block_rows,
+                                                 impl=impl)
+
+    def wire_sqnorm(self, wire, *, n_blocks, block_rows, impl):
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        return jnp.sum(mix_ops.packed_sqnorms(wire, block_rows=block_rows,
+                                              impl=impl))
 
     # per-leaf baseline hooks
     def encode_leaf(self, x, impl):
@@ -228,7 +325,7 @@ class _Int8Codec:
         return qops.dequantize_packed(q, scale, dtype)
 
     def reduce(self, fresh, received, weights, contrib, *, edge_weight,
-               n_blocks, block_rows, impl):
+               n_blocks, block_rows, impl, sender_scale=None):
         from repro.kernels.quant_gossip import ops as qops
 
         c = edge_weight
@@ -247,6 +344,12 @@ class _Int8Codec:
             self_scale = (a_self * wa0 * inv + (1.0 - a_self)
                           + a_self * (1.0 - ok))
             recv_w = [a_self * src_a[k] * inv for k in range(len(received))]
+        if sender_scale is not None:
+            # norm-clip folds into the per-sender weight operand of the
+            # fused dequant-accumulate — post-renormalization, so the
+            # alive/gates denominator above is untouched
+            recv_w = [sender_scale[k] if a is None else a * sender_scale[k]
+                      for k, a in enumerate(recv_w)]
         acc = self_scale.astype(fresh.dtype) * fresh
         for rwire, a in zip(received, recv_w):
             if self.block_scales:
@@ -258,6 +361,39 @@ class _Int8Codec:
                 acc = qops.dequant_accumulate_packed(
                     rq, rs, c, acc, a, block_rows=block_rows, impl=impl)
         return acc
+
+    def reduce_trimmed(self, fresh, received, u, live, *, trim, n_blocks,
+                       block_rows, impl):
+        from repro.kernels.gossip_mix import ops as mix_ops
+        from repro.kernels.quant_gossip import ops as qops
+
+        if self.block_scales:
+            pairs = [qops.split_wire_blockwise(w, n_blocks)
+                     for w in received]
+            scales = jnp.stack([s for _, s in pairs])          # (d, n_blocks)
+        else:
+            pairs = [qops.split_wire(w) for w in received]
+            scales = jnp.stack([s.reshape(1) for _, s in pairs])  # (d, 1)
+        qstack = jnp.stack([q for q, _ in pairs])
+        return mix_ops.gossip_mix_trimmed_quant_packed(
+            fresh, qstack, scales, u, live, trim=trim,
+            block_rows=block_rows, impl=impl)
+
+    def wire_sqnorm(self, wire, *, n_blocks, block_rows, impl):
+        from repro.kernels.gossip_mix import ops as mix_ops
+        from repro.kernels.quant_gossip import ops as qops
+
+        # decoded-payload norm straight off the int8 wire: per-block
+        # sum(q^2) x scale^2 (exact for what the mix would dequantize)
+        if self.block_scales:
+            q, scales = qops.split_wire_blockwise(wire, n_blocks)
+            part = mix_ops.packed_sqnorms(q.astype(jnp.float32),
+                                          block_rows=block_rows, impl=impl)
+            return jnp.sum(part * scales.astype(jnp.float32) ** 2)
+        q, scale = qops.split_wire(wire)
+        part = mix_ops.packed_sqnorms(q.astype(jnp.float32),
+                                      block_rows=block_rows, impl=impl)
+        return scale.astype(jnp.float32) ** 2 * jnp.sum(part)
 
     # per-leaf baseline hooks (per-tensor scale; no tile alignment)
     def encode_leaf(self, x, impl):
@@ -316,18 +452,23 @@ class GossipExecutor:
     def codec(self):
         return _CODECS[self.config.codec]
 
-    def __call__(self, tree: PyTree, *, state=None, alive=None, gates=None):
+    def __call__(self, tree: PyTree, *, state=None, alive=None, gates=None,
+                 with_stats=False):
         cfg = self.config
         if self.delayed and state is None:
             raise ValueError("delayed executor needs the carried snapshot "
                              "(prime it with init_state)")
+        if with_stats and not (cfg.substrate == "stacked"
+                               and cfg.screen == "norm_clip"):
+            raise ValueError("with_stats (clip telemetry) needs the stacked "
+                             "substrate with screen='norm_clip'")
         if cfg.substrate == "dense":
             return gossip.mix_dense(
                 tree, gossip.gated_mixing_matrix(self.spec, gates, alive))
         if cfg.substrate == "per_leaf":
             return self._per_leaf_round(tree)
         if cfg.substrate == "stacked":
-            return self._stacked_round(tree, state, alive, gates)
+            return self._stacked_round(tree, state, alive, gates, with_stats)
         return self._shard_map_round(tree, state, alive, gates)
 
     # ------------------------------------------------- pipelined state
@@ -372,9 +513,19 @@ class GossipExecutor:
         live = gossip._live_schedules(spec)
         perms = [p for _, p, _, _ in live]
         weights = gossip._local_raw_weights(spec, idx, len(perms), gates)
+        # the trimmed screen ALWAYS builds the contributor vector: fixed
+        # points deliver zeros on this substrate and must stay invisible to
+        # the order statistics even with no alive/gates overlay
         contrib = (None if alive is None and gates is None
+                   and cfg.screen != "trimmed_mean"
                    else gossip._local_contrib_vec(spec, idx, live, alive,
                                                   gates))
+        if cfg.screen == "norm_clip":
+            return self._shard_map_round_clipped(tree, state, weights,
+                                                 contrib, pack_spec, perms)
+        if cfg.screen == "trimmed_mean":
+            trim_u = jnp.maximum(weights, 0.0) * contrib
+            trim_live = (contrib > 0.0).astype(jnp.float32)
         out_bufs, new_state = [], []
         for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
             n_blocks = pack_spec.buffer_blocks(b)
@@ -393,18 +544,76 @@ class GossipExecutor:
             # all ppermutes issued before the reduction so XLA can overlap
             received = [jax.lax.ppermute(wire, self.axis_names, perm=p)
                         for p in perms]
-            out_bufs.append(codec.reduce(
-                buf, received, weights, contrib,
-                edge_weight=float(spec.edge_weight), n_blocks=n_blocks,
-                block_rows=pack_spec.block_rows, impl=cfg.mix_impl))
+            if cfg.screen == "trimmed_mean":
+                out_bufs.append(codec.reduce_trimmed(
+                    buf, received, trim_u, trim_live, trim=cfg.trim_f,
+                    n_blocks=n_blocks, block_rows=pack_spec.block_rows,
+                    impl=cfg.mix_impl))
+            else:
+                out_bufs.append(codec.reduce(
+                    buf, received, weights, contrib,
+                    edge_weight=float(spec.edge_weight), n_blocks=n_blocks,
+                    block_rows=pack_spec.block_rows, impl=cfg.mix_impl))
         mixed = packing.unpack_tree(tuple(out_bufs), pack_spec)
         if cfg.delay:
             return mixed, tuple(new_state)
         return mixed
 
-    def _stacked_round(self, tree, state, alive, gates):
+    def _shard_map_round_clipped(self, tree, state, weights, contrib,
+                                 pack_spec, perms):
+        """norm_clip needs whole-model norms, so the round splits into an
+        encode+permute pass (all collectives still issued up front — the
+        wire is byte-identical to the unscreened round), one tiny norm
+        reduction per wire, and the per-buffer fused reduce with the clip
+        folded into the received weight operands."""
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        cfg, codec, spec = self.config, self.codec, self.spec
+        fresh = list(packing.pack_tree(tree, pack_spec))
+        wires, new_state = [], []
+        s2 = jnp.float32(0.0)
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+            if cfg.delay:
+                wire = state[b]
+                new_state.append(codec.encode(
+                    buf, n_blocks=n_blocks, block_rows=pack_spec.block_rows,
+                    impl=cfg.mix_impl))
+            else:
+                wire = codec.encode(buf, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+            wires.append(wire)
+            s2 = s2 + jnp.sum(mix_ops.packed_sqnorms(
+                buf, block_rows=pack_spec.block_rows, impl=cfg.mix_impl))
+        received = [[jax.lax.ppermute(wire, self.axis_names, perm=p)
+                     for p in perms] for wire in wires]
+        r2 = [sum(codec.wire_sqnorm(received[b][k],
+                                    n_blocks=pack_spec.buffer_blocks(b),
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+                  for b in range(len(fresh)))
+              for k in range(len(perms))]
+        clip = (_clip_factors(jnp.stack(r2), cfg.clip_tau ** 2 * s2)
+                if r2 else jnp.zeros((0,), jnp.float32))
+        out_bufs = [
+            codec.reduce(buf, received[b], weights, contrib,
+                         edge_weight=float(spec.edge_weight),
+                         n_blocks=pack_spec.buffer_blocks(b),
+                         block_rows=pack_spec.block_rows, impl=cfg.mix_impl,
+                         sender_scale=clip)
+            for b, buf in enumerate(fresh)]
+        mixed = packing.unpack_tree(tuple(out_bufs), pack_spec)
+        if cfg.delay:
+            return mixed, tuple(new_state)
+        return mixed
+
+    def _stacked_round(self, tree, state, alive, gates, with_stats=False):
         cfg, codec, spec = self.config, self.codec, self.spec
         pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
+        if cfg.screen != "none":
+            return self._stacked_round_screened(tree, state, alive, gates,
+                                                pack_spec, with_stats)
         w = (gossip._static_weight_table(spec)
              if alive is None and gates is None
              else gossip.alive_weight_table(spec, alive, gates))
@@ -440,6 +649,101 @@ class GossipExecutor:
         if cfg.delay:
             return mixed, tuple(new_state)
         return mixed
+
+    def _stacked_round_screened(self, tree, state, alive, gates, pack_spec,
+                                with_stats):
+        """Screened stacked round. The gather sources (decoded codec wires /
+        the delayed snapshot) are materialized for every buffer first so the
+        norm-clip screen can compare whole-model norms; the per-buffer mix
+        then runs with either the clip-scaled weight table (norm_clip: the
+        same einsum as the plain round, so an all-ones clip is bitwise
+        identical) or the vmapped trimmed-mean kernel (trimmed_mean).
+
+        ``with_stats`` (norm_clip only) additionally returns per-SENDER
+        counts of receivers that clipped them this round — the suspicion
+        signal :class:`repro.core.failures.HealthTracker` accumulates."""
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        cfg, codec, spec = self.config, self.codec, self.spec
+        gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+        fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        srcs, new_state = [], []
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+
+            def enc(x, n_blocks=n_blocks):
+                return codec.encode(x, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+
+            if cfg.codec == "f32":
+                src = state[b] if cfg.delay else buf
+            else:
+                wire = state[b] if cfg.delay else jax.vmap(enc)(buf)
+                src = jax.vmap(
+                    lambda x, n_blocks=n_blocks, dtype=buf.dtype:
+                    codec.decode(x, dtype, n_blocks=n_blocks,
+                                 block_rows=pack_spec.block_rows))(wire)
+            srcs.append(src)
+            if cfg.delay:
+                new_state.append(buf if cfg.codec == "f32"
+                                 else jax.vmap(enc)(buf))
+        stats = None
+        if cfg.screen == "norm_clip":
+            w = (gossip._static_weight_table(spec)
+                 if alive is None and gates is None
+                 else gossip.alive_weight_table(spec, alive, gates))
+
+            def sq(x):
+                return jnp.sum(mix_ops.packed_sqnorms(
+                    x, block_rows=pack_spec.block_rows, impl=cfg.mix_impl))
+
+            s2 = sum(jax.vmap(sq)(buf) for buf in fresh)        # (n,)
+            r2_src = sum(jax.vmap(sq)(src) for src in srcs)     # (n,)
+            lim = jnp.float32(cfg.clip_tau) ** 2 * s2
+            clip = jnp.stack([_clip_factors(r2_src[g], lim)
+                              for g in gathers], axis=1)        # (n, S)
+            # clip multiplies the post-renormalization received columns
+            # only — the table already carries the alive/gates renorm and
+            # the dead-self identity fallback, both untouched here
+            eff = jnp.concatenate([w[:, :1], w[:, 1:] * clip], axis=1)
+            if with_stats:
+                counts = jnp.zeros(spec.n_clients, jnp.int32)
+                for s, g in enumerate(gathers):
+                    flag = ((clip[:, s] < 1.0)
+                            & (w[:, 1 + s] > 0.0)).astype(jnp.int32)
+                    counts = counts.at[g].add(flag)
+                stats = {"clipped": counts}
+
+            def mixer(stack):
+                return jnp.einsum("nk,nk...->n...", eff,
+                                  stack.astype(jnp.float32))
+        else:  # trimmed_mean
+            raw, contrib = gossip.raw_contrib_tables(spec, alive, gates)
+            trim_u = jnp.maximum(raw, 0.0) * contrib
+            trim_live = (contrib > 0.0).astype(jnp.float32)
+
+            def mixer(stack):
+                return jax.vmap(
+                    lambda st, uu, ll: mix_ops.gossip_mix_trimmed_packed(
+                        st, uu, ll, trim=cfg.trim_f,
+                        block_rows=pack_spec.block_rows,
+                        impl=cfg.mix_impl))(stack, trim_u, trim_live)
+        out_bufs = []
+        for b, buf in enumerate(fresh):
+            # self row stays the FRESH full-precision buffer; only the
+            # gathered neighbor rows go through the codec / the snapshot
+            stack = jnp.stack([buf] + [jnp.take(srcs[b], idx, axis=0)
+                                       for idx in gathers], axis=1)
+            out_bufs.append(mixer(stack).astype(buf.dtype))
+        mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
+            tuple(out_bufs))
+        ret = (mixed,)
+        if cfg.delay:
+            ret = ret + (tuple(new_state),)
+        if stats is not None:
+            ret = ret + (stats,)
+        return ret[0] if len(ret) == 1 else ret
 
     def _per_leaf_round(self, tree):
         cfg, codec, spec = self.config, self.codec, self.spec

@@ -21,6 +21,7 @@ Two layers of resilience, matching the paper's protocol:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -31,7 +32,11 @@ from repro.core import gossip as gossip_lib
 from repro.core.topology import Overlay
 
 __all__ = [
+    "ATTACK_MODES",
+    "AttackPlan",
     "FailurePlan",
+    "apply_attack",
+    "sample_attackers",
     "sample_failures",
     "alive_adjusted_spec",
     "repair_and_remap",
@@ -71,15 +76,126 @@ def sample_failures(n_clients: int, drop_fraction: float, at_round: int,
     return FailurePlan(n_clients=n_clients, events=((at_round, dead),))
 
 
+# ------------------------------------------------------- Byzantine attacks
+ATTACK_MODES = ("sign_flip", "scale", "noise")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackPlan:
+    """Deterministic Byzantine-attacker script, mirroring :class:`FailurePlan`:
+    round -> {attacker ids, mode, magnitude}.
+
+    Events are *cumulative* (an attacker stays compromised from its event's
+    round on) and later events override earlier ones per id, so a script can
+    escalate — e.g. scale at round 3, sign_flip at round 10. Modes:
+
+    * ``"sign_flip"``: ship ``-magnitude * params`` (the classic poisoned
+      update; magnitude 1 is the pure sign flip).
+    * ``"scale"``: ship ``magnitude * params`` (a gradient-boost /
+      model-replacement attack).
+    * ``"noise"``: add ``magnitude``-std Gaussian noise to every leaf.
+
+    The plan itself is host-side and static; what reaches the jitted step is
+    only :meth:`round_vector` — a (2, n) f32 *data* operand (scale row,
+    noise-std row) — so attacker churn retraces nothing, exactly like the
+    alive mask. Honest clients carry (1, 0).
+    """
+
+    n_clients: int
+    # (round, attacker ids, mode, magnitude), sorted by round
+    events: tuple[tuple[int, tuple[int, ...], str, float], ...]
+
+    def __post_init__(self):
+        for _, _, mode, _ in self.events:
+            if mode not in ATTACK_MODES:
+                raise ValueError(f"unknown attack mode {mode!r}; available: "
+                                 f"{', '.join(ATTACK_MODES)}")
+
+    def attackers_at(self, rnd: int) -> set[int]:
+        out: set[int] = set()
+        for r, ids, _, _ in self.events:
+            if r <= rnd:
+                out.update(ids)
+        return out
+
+    def round_vector(self, rnd: int) -> np.ndarray:
+        """(2, n) f32 attack operand for this round: row 0 the per-client
+        multiplicative scale (1 = honest), row 1 the additive noise std."""
+        vec = np.zeros((2, self.n_clients), dtype=np.float32)
+        vec[0] = 1.0
+        for r, ids, mode, mag in self.events:
+            if r > rnd:
+                continue
+            for i in ids:
+                if mode == "sign_flip":
+                    vec[0, i], vec[1, i] = -float(mag), 0.0
+                elif mode == "scale":
+                    vec[0, i], vec[1, i] = float(mag), 0.0
+                else:  # noise
+                    vec[0, i], vec[1, i] = 1.0, float(mag)
+        return vec
+
+
+def sample_attackers(n_clients: int, f: int, mode: str = "sign_flip",
+                     magnitude: float = 1.0, at_round: int = 0,
+                     seed: int = 0) -> AttackPlan:
+    """f random Byzantine clients from ``at_round`` on (the bench harness's
+    standard scenario)."""
+    rng = np.random.default_rng(seed)
+    ids = tuple(int(x) for x in rng.choice(n_clients, size=f, replace=False))
+    return AttackPlan(n_clients=n_clients,
+                      events=((at_round, ids, mode, magnitude),))
+
+
+def apply_attack(tree: PyTree, attack: jax.Array,
+                 key: jax.Array) -> PyTree:
+    """Apply the traced per-client attack operand to a client-stacked tree.
+
+    ``attack`` is the (2, n) :meth:`AttackPlan.round_vector` operand and
+    ``key`` a (2,) uint32 PRNG key (data, so the noise draw never retraces):
+    ``leaf -> scale * leaf + noise_std * N(0, 1)`` with the scale/std rows
+    broadcast over the per-client parameter axes. Honest rows (scale 1,
+    std 0) pass through unchanged — an all-honest vector is a numerical
+    no-op, which is what lets the byzantine=True step run attack-free
+    rounds without a second trace.
+    """
+    attack = jnp.asarray(attack, jnp.float32)
+    scale, noise = attack[0], attack[1]
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for li, leaf in enumerate(leaves):
+        bshape = (-1,) + (1,) * (leaf.ndim - 1)
+        lk = jax.random.fold_in(jax.random.wrap_key_data(
+            jnp.asarray(key, jnp.uint32), impl="threefry2x32"), li)
+        eps = jax.random.normal(lk, leaf.shape, jnp.float32)
+        out.append((scale.reshape(bshape) * leaf.astype(jnp.float32)
+                    + noise.reshape(bshape) * eps).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
 def alive_adjusted_spec(spec: gossip_lib.GossipSpec,
                         alive: np.ndarray) -> gossip_lib.GossipSpec:
     """Rebuild a GossipSpec for one round with some clients down (straggler path).
+
+    .. deprecated::
+        Baking the mask into a fresh spec costs one retrace per
+        straggler-set change. Pass the mask as traced step data instead —
+        ``gossip.mix_packed_stacked(tree, spec, alive=...)`` /
+        ``executor(tree, alive=...)`` — which is both retrace-free and the
+        path every engine cell (codec x timing x substrate x screen)
+        actually exercises. This host-side rebuild is kept only as a
+        reference for offline spectral checks.
 
     Dead clients are turned into fixed points of every schedule (they neither
     send nor receive); each surviving client renormalizes its weights over its
     alive in-neighborhood so rows still sum to 1. Symmetry is preserved because
     schedules stay closed under inverse after fixing the same points.
     """
+    warnings.warn(
+        "alive_adjusted_spec is deprecated: pass the alive mask as traced "
+        "data (engine executors / mix_packed_stacked(alive=...)) instead of "
+        "baking it into a per-round spec (one retrace per straggler set)",
+        DeprecationWarning, stacklevel=2)
     alive = np.asarray(alive).astype(bool)
     n = spec.n_clients
     new_perms = []
@@ -142,40 +258,71 @@ class HealthTracker:
     """
 
     def __init__(self, n_clients: int, straggler_rounds: int = 1,
-                 failure_rounds: int = 3):
+                 failure_rounds: int = 3, quarantine_rounds: int = 0):
         self.n = n_clients
         self.straggler_rounds = straggler_rounds
         self.failure_rounds = failure_rounds
+        # Byzantine quarantine: a client clipped by >= 1 receiver on
+        # `quarantine_rounds` distinct rounds is evicted like a dead client
+        # (0 disables — heartbeat-only tracking)
+        self.quarantine_rounds = quarantine_rounds
         self.missed = np.zeros(n_clients, dtype=np.int64)
+        self.suspicion = np.zeros(n_clients, dtype=np.int64)
 
     def observe(self, alive_mask: np.ndarray) -> None:
         alive = np.asarray(alive_mask).astype(bool)
         self.missed = np.where(alive, 0, self.missed + 1)
+
+    def observe_suspicion(self, clip_counts: np.ndarray) -> None:
+        """Feed one round of norm-clip telemetry: ``clip_counts[i]`` =
+        number of receivers that clipped sender i this round (the engine's
+        ``with_stats`` output). Any round with at least one clipping
+        receiver increments the sender's suspicion counter; the counter
+        never self-resets — an attacker cannot launder suspicion by
+        behaving between bursts. (Honest large-update transients do get a
+        receiver or two occasionally; ``quarantine_rounds`` sets how many
+        such rounds are tolerated before eviction.)"""
+        counts = np.asarray(clip_counts)
+        self.suspicion = self.suspicion + (counts > 0).astype(np.int64)
+
+    def suspects(self) -> np.ndarray:
+        """Clients over the quarantine threshold (empty when disabled)."""
+        if self.quarantine_rounds <= 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.nonzero(self.suspicion >= self.quarantine_rounds)[0]
 
     def stragglers(self) -> np.ndarray:
         return np.nonzero((self.missed >= self.straggler_rounds)
                           & (self.missed < self.failure_rounds))[0]
 
     def dead(self) -> np.ndarray:
-        return np.nonzero(self.missed >= self.failure_rounds)[0]
+        """Clients to evict: heartbeat-dead plus quarantined suspects (the
+        caller routes both through the same splice repair)."""
+        hb = self.missed >= self.failure_rounds
+        if self.quarantine_rounds > 0:
+            hb = hb | (self.suspicion >= self.quarantine_rounds)
+        return np.nonzero(hb)[0]
 
     def alive_mask(self) -> np.ndarray:
         """0/1 gossip mask for this round: stragglers and dead are masked."""
         mask = np.ones(self.n, dtype=np.float32)
         mask[self.missed >= self.straggler_rounds] = 0.0
+        if self.quarantine_rounds > 0:
+            mask[self.suspicion >= self.quarantine_rounds] = 0.0
         return mask
 
     def remap(self, old2new: np.ndarray) -> "HealthTracker":
         """Tracker for the post-repair survivor indexing.
 
-        Surviving clients *carry their in-flight missed-heartbeat counters*
-        through the index compaction — a survivor that was already straggling
-        when a neighbor died must stay a straggler, not be silently reset to
-        healthy by the repair.
+        Surviving clients *carry their in-flight missed-heartbeat AND
+        suspicion counters* through the index compaction — a survivor that
+        was already straggling (or half-way to quarantine) when a neighbor
+        died must not be silently reset to healthy by the repair.
         """
         old2new = np.asarray(old2new)
         survivors = np.nonzero(old2new >= 0)[0]
         fresh = HealthTracker(len(survivors), self.straggler_rounds,
-                              self.failure_rounds)
+                              self.failure_rounds, self.quarantine_rounds)
         fresh.missed[old2new[survivors]] = self.missed[survivors]
+        fresh.suspicion[old2new[survivors]] = self.suspicion[survivors]
         return fresh

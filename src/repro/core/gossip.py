@@ -73,6 +73,7 @@ __all__ = [
     "GossipSpec",
     "make_gossip_spec",
     "alive_weight_table",
+    "raw_contrib_tables",
     "gated_mixing_matrix",
     "mix_dense",
     "mix_dense_masked",
@@ -250,6 +251,51 @@ def alive_weight_table(spec: GossipSpec, alive: jax.Array | None,
     eff = alive[:, None] * wa * inv[:, None]
     fallback = (1.0 - alive) + alive * (1.0 - ok)
     return eff.at[:, 0].add(fallback)
+
+
+def raw_contrib_tables(spec: GossipSpec, alive: jax.Array | None,
+                       gates: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Stacked-substrate mirror of ``_local_raw_weights`` /
+    ``_local_contrib_vec``: the pre-renormalization pieces of
+    :func:`alive_weight_table`, vectorized over clients.
+
+    Returns ``(raw, contrib)``, both (n, S+1). ``raw`` holds the unnormalized
+    Chow weights — column 0 the (gated-clamped) self weight, columns 1+s the
+    uniform edge weight c. ``contrib`` holds the per-contributor
+    participation weights — column 0 the client's own liveness, column 1+s
+    ``gate_s x live_mask_s x sender-liveness`` (zero at fixed points, so a
+    schedule that delivers nothing is invisible). The trimmed-mean screen
+    consumes these directly: ``contrib > 0`` decides who enters the order
+    statistics and ``max(raw, 0) * contrib`` weighs the survivors; the
+    renormalized product reproduces :func:`alive_weight_table` rows (minus
+    the identity-fallback fold, which screens re-apply themselves).
+    """
+    n, s_count = spec.n_clients, spec.degree
+    alive_v = (jnp.ones(n, jnp.float32) if alive is None
+               else jnp.asarray(alive, jnp.float32))
+    if gates is None:
+        self_w = jnp.asarray(spec.self_weights, jnp.float32)
+        gates_v = jnp.ones(s_count, jnp.float32)
+    else:
+        gates_v = jnp.asarray(gates, jnp.float32)
+        fixed = jnp.asarray(spec.fixed_masks_np())
+        # same clamp as alive_weight_table: a gated subset of a negative-w0
+        # row projects onto the nonnegative (lazy) variant
+        self_w = jnp.maximum(
+            jnp.asarray(spec.base_self_weights_np())
+            + spec.edge_weight * jnp.sum(gates_v[:, None] * fixed, axis=0),
+            0.0)
+    raw = jnp.concatenate(
+        [self_w[:, None],
+         jnp.full((n, s_count), spec.edge_weight, jnp.float32)], axis=1)
+    cols = [gates_v[s] * jnp.asarray(mask, jnp.float32)
+            * jnp.take(alive_v, jnp.asarray(rf))
+            for s, (rf, mask) in enumerate(zip(spec.recv_from,
+                                               spec.live_masks))]
+    contrib = jnp.concatenate(
+        [alive_v[:, None]] + [c[:, None] for c in cols], axis=1)
+    return raw, contrib
 
 
 def gated_mixing_matrix(spec: GossipSpec, gates: jax.Array | None = None,

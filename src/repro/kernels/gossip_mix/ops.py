@@ -69,3 +69,96 @@ def gossip_mix_packed(stack: jax.Array, weights: jax.Array,
         return _ref.gossip_mix(stack, weights, alive)
     return _k.gossip_mix_2d(stack, weights, alive, block_rows=block_rows,
                             interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block_rows", "impl"))
+def gossip_mix_trimmed(stack: jax.Array, u: jax.Array, live: jax.Array, *,
+                       trim: int, block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                       impl: str = "auto") -> jax.Array:
+    """Coordinate-wise trimmed renormalized mean over stack (K, *payload).
+
+    ``live`` (K,) flags the participants of the per-element order statistics
+    (entry 0 = self; 0 => identity fallback), ``u`` (K,) their nonnegative
+    weights, ``trim`` the static per-side drop count (clamped per element so
+    at least one live value survives). trim=0 reduces to the renormalized
+    masked mean. Any-shape wrapper (flatten/pad); padded elements are
+    trimmed independently and discarded.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.trimmed_mix(stack, u, live, trim)
+    k = stack.shape[0]
+    payload_shape = stack.shape[1:]
+    flat = stack.reshape(k, -1)
+    t = flat.shape[1]
+    tile = block_rows * _k.LANE
+    pad = (-t) % tile
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    rows = (t + pad) // _k.LANE
+    out = _k.gossip_mix_2d_trimmed(flat.reshape(k, rows, _k.LANE), u, live,
+                                   trim=trim, block_rows=block_rows,
+                                   interpret=(impl == "pallas_interpret"))
+    return out.reshape(-1)[:t].reshape(payload_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block_rows", "impl"))
+def gossip_mix_trimmed_packed(stack: jax.Array, u: jax.Array,
+                              live: jax.Array, *, trim: int,
+                              block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                              impl: str = "auto") -> jax.Array:
+    """:func:`gossip_mix_trimmed` fast path for pre-packed (K, rows, LANE)
+    stacks (zero flatten/pad work in the step)."""
+    k, rows, lane = stack.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (stack.shape,
+                                                       block_rows)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.trimmed_mix(stack, u, live, trim)
+    return _k.gossip_mix_2d_trimmed(stack, u, live, trim=trim,
+                                    block_rows=block_rows,
+                                    interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block_rows", "impl"))
+def gossip_mix_trimmed_quant_packed(fresh: jax.Array, qstack: jax.Array,
+                                    scales: jax.Array, u: jax.Array,
+                                    live: jax.Array, *, trim: int,
+                                    block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                                    impl: str = "auto") -> jax.Array:
+    """Dequant-side trimmed mix for the int8 codecs: fresh (rows, LANE) f32,
+    qstack (K-1, rows, LANE) int8 received payloads, scales (K-1, n_s) f32
+    (n_s = 1 per-buffer, n_s = n_blocks per-row-block). Dequantization
+    happens inside the same fused pass as the trim reduction."""
+    km1, rows, lane = qstack.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (qstack.shape,
+                                                       block_rows)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.trimmed_mix_quant(fresh, qstack, scales, u, live, trim)
+    return _k.gossip_mix_2d_trimmed_quant(
+        fresh, qstack, scales, u, live, trim=trim, block_rows=block_rows,
+        interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def packed_sqnorms(buf: jax.Array, *,
+                   block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                   impl: str = "auto") -> jax.Array:
+    """Per-row-block squared norms of a packed (rows, LANE) buffer:
+    (n_blocks,) f32 — the per-sender norm pass of the norm-clip screen
+    (per-tile partials reduced on-chip, finished with one tiny lane sum).
+    Blocks match the quant codecs' row-block granularity, so int8 wires
+    combine these with their per-block scales squared."""
+    rows, lane = buf.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (buf.shape, block_rows)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.block_sqnorms(buf, block_rows)
+    part = _k.sqnorms_2d(buf, block_rows=block_rows,
+                         interpret=(impl == "pallas_interpret"))
+    return jnp.sum(part, axis=1)

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the gossip_mix kernel."""
+"""Pure-jnp oracles for the gossip_mix kernel family (plain, masked,
+trimmed-mean, and the int8 dequant-side trimmed variant)."""
 from __future__ import annotations
 
 import jax
@@ -27,3 +28,77 @@ def gossip_mix(stack: jax.Array, weights: jax.Array,
     eff = eff.at[0].add((1.0 - a_self) + a_self * (1.0 - ok))
     w = eff.reshape((-1,) + (1,) * (stack.ndim - 1))
     return jnp.sum(w * stack.astype(jnp.float32), axis=0).astype(stack.dtype)
+
+
+def trimmed_mix(stack: jax.Array, u: jax.Array, live: jax.Array,
+                trim: int) -> jax.Array:
+    """Coordinate-wise trimmed weighted mean over the contributor stack.
+
+    stack: (K, *payload) — entry 0 is the receiver's own fresh value, entries
+    1..K-1 the received payloads. ``live`` (K,) flags which entries
+    participate in the per-coordinate order statistics (dead senders, gated
+    or fixed-point schedules carry 0 and are invisible to the sort); ``u``
+    (K,) holds the *nonnegative* mixing weights of the participants. Per
+    coordinate, the ``t`` largest and ``t`` smallest live values are dropped
+    with ``t = min(trim, floor((n_live - 1) / 2))`` (so at least one value
+    always survives), and the output is the u-weighted mean renormalized
+    over the survivors. ``trim = 0`` therefore reduces to the renormalized
+    masked mean. A non-live self (live[0] == 0) or zero surviving weight
+    mass falls back to the identity ``stack[0]``.
+
+    Ranks are stable (ties broken by stack index), so exactly
+    ``n_live - 2t`` values survive per coordinate.
+    """
+    x = stack.astype(jnp.float32)
+    k = x.shape[0]
+    lv = live.astype(jnp.float32)
+    uw = u.astype(jnp.float32)
+    n_live = jnp.sum(lv)
+    t = jnp.minimum(jnp.float32(trim),
+                    jnp.maximum(jnp.floor((n_live - 1.0) * 0.5), 0.0))
+    num = jnp.zeros(x.shape[1:], jnp.float32)
+    den = jnp.zeros(x.shape[1:], jnp.float32)
+    for i in range(k):  # K is small (d+1): O(K^2) elementwise compares
+        rank = jnp.zeros(x.shape[1:], jnp.float32)
+        for j in range(k):
+            if j == i:
+                continue
+            cmp = (x[j] <= x[i]) if j < i else (x[j] < x[i])
+            rank = rank + lv[j] * cmp.astype(jnp.float32)
+        surv = lv[i] * ((rank >= t) & (rank < n_live - t)).astype(jnp.float32)
+        num = num + surv * uw[i] * x[i]
+        den = den + surv * uw[i]
+    ok = den > 1e-12
+    mean = jnp.where(ok, num / jnp.maximum(den, 1e-12), x[0])
+    out = lv[0] * mean + (1.0 - lv[0]) * x[0]
+    return out.astype(stack.dtype)
+
+
+def trimmed_mix_quant(fresh: jax.Array, qstack: jax.Array, scales: jax.Array,
+                      u: jax.Array, live: jax.Array, trim: int) -> jax.Array:
+    """Dequant-side trimmed mix: entries 1..K-1 arrive as int8 payloads with
+    per-buffer (n_s == 1) or per-row-block (n_s == n_blocks) f32 scales.
+
+    fresh: (rows, LANE) f32; qstack: (K-1, rows, LANE) int8;
+    scales: (K-1, n_s). Dequantizes then applies :func:`trimmed_mix`.
+    """
+    km1, rows, lane = qstack.shape
+    n_s = scales.shape[1]
+    q = qstack.astype(jnp.float32)
+    if n_s == 1:
+        deq = q * scales.astype(jnp.float32)[:, :, None]
+    else:
+        block = rows // n_s
+        deq = (q.reshape(km1, n_s, block, lane)
+               * scales.astype(jnp.float32)[:, :, None, None]
+               ).reshape(km1, rows, lane)
+    stack = jnp.concatenate([fresh.astype(jnp.float32)[None], deq])
+    return trimmed_mix(stack, u, live, trim).astype(fresh.dtype)
+
+
+def block_sqnorms(buf: jax.Array, block_rows: int) -> jax.Array:
+    """Per-row-block squared norms of a packed (rows, LANE) buffer: the
+    (n_blocks,) f32 partials the norm-clip screen reduces over."""
+    rows = buf.shape[0]
+    x = buf.astype(jnp.float32).reshape(rows // block_rows, -1)
+    return jnp.sum(x * x, axis=1)

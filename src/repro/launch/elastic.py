@@ -104,6 +104,24 @@ class ElasticTrainer:
     # is the int8 wire itself (remapped through splice repair like any
     # other per-client row state).
     gossip_codec: str = "f32"
+    # Byzantine screen of the engine round (repro.core.engine SCREENS):
+    # "none" | "norm_clip" (rescale received buffers whose norm exceeds
+    # screen_tau x the receiver's own; per-sender clip telemetry feeds the
+    # HealthTracker suspicion counters) | "trimmed_mean" (coordinate-wise
+    # trimmed mean, screen_trim dropped per side).
+    gossip_screen: str = "none"
+    screen_tau: float = 3.0
+    screen_trim: int = 1
+    # scripted attackers (failures.AttackPlan): the round perturbs the
+    # post-local-step params with the plan's (2, n) round_vector — traced
+    # DATA, so attacker churn retraces nothing. Plan indices refer to the
+    # INITIAL membership; splice repairs remap them with the survivors.
+    attack_plan: failures_lib.AttackPlan | None = None
+    attack_seed: int = 0
+    # quarantine: a client clipped by >= 1 receiver on this many rounds
+    # (norm_clip telemetry) is evicted through the SAME splice repair as a
+    # heartbeat-dead client. 0 disables.
+    quarantine_rounds: int = 0
 
     def __post_init__(self):
         if self.gossip_delay not in (0, 1):
@@ -112,6 +130,25 @@ class ElasticTrainer:
         if self.gossip_codec not in engine_lib.CODECS:
             raise ValueError(f"unknown gossip_codec {self.gossip_codec!r}; "
                              f"available: {', '.join(engine_lib.CODECS)}")
+        if self.gossip_screen not in engine_lib.SCREENS:
+            raise ValueError(f"unknown gossip_screen {self.gossip_screen!r}; "
+                             f"available: {', '.join(engine_lib.SCREENS)}")
+        if self.quarantine_rounds and self.gossip_screen != "norm_clip":
+            raise ValueError("quarantine_rounds needs the norm_clip screen "
+                             "(its clip telemetry is the suspicion signal)")
+        if (self.attack_plan is not None
+                and self.attack_plan.n_clients != self.overlay.n):
+            raise ValueError(f"attack_plan is for "
+                             f"{self.attack_plan.n_clients} clients, overlay "
+                             f"has {self.overlay.n}")
+        if (self.step_builder is not None
+                and (self.gossip_screen != "none"
+                     or self.attack_plan is not None)):
+            raise ValueError("screens/attacks compose with the built-in "
+                             "stacked round; a custom step_builder must "
+                             "thread them itself (launch.steps supports "
+                             "gossip_screen via ParallelConfig and attacks "
+                             "via DFLConfig.byzantine)")
         if self.gossip_delay and self.step_builder is not None:
             # the production pipelined step threads its own in-flight state
             # (mesh-leading-dims layout, primed via TrainSetup.init_inflight)
@@ -125,11 +162,15 @@ class ElasticTrainer:
                              "production step manages its own in-flight "
                              "state (launch.steps.TrainSetup)")
         self.health = failures_lib.HealthTracker(
-            self.overlay.n, self.straggler_rounds, self.failure_rounds)
+            self.overlay.n, self.straggler_rounds, self.failure_rounds,
+            self.quarantine_rounds)
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         self.n_traces = 0          # jit traces of the round fn (see step())
         self.round_no = 0          # round index feeding the plan's gates
         self.repairs: list[dict] = []
+        # current-index -> original-attack-plan-column map, compacted on
+        # every splice repair so attackers keep their script across repairs
+        self._attack_cols = np.arange(self.overlay.n)
         # delayed mode's in-flight snapshot (pack_state_stacked of last
         # round's post-local-step params); primed lazily at the first step
         # so round 0 mixes the caller's initial params
@@ -153,10 +194,17 @@ class ElasticTrainer:
         # plan, gates are traced data. plan_lib.is_active is the one shared
         # predicate — it matches steps.py's `round_plan != "static"` rule
         use_plan = plan_lib.is_active(self.plan)
+        # attack + clip telemetry are build-time decisions like the plan:
+        # the operands themselves (attack vector, PRNG key) are traced data
+        use_attack = self.attack_plan is not None
+        with_stats = self.gossip_screen == "norm_clip"
         self._executor = engine_lib.build_gossip_executor(
             engine_lib.GossipEngineConfig(substrate="stacked",
                                           codec=self.gossip_codec,
-                                          delay=self.gossip_delay), spec)
+                                          delay=self.gossip_delay,
+                                          screen=self.gossip_screen,
+                                          clip_tau=self.screen_tau,
+                                          trim_f=self.screen_trim), spec)
         executor = self._executor
 
         def client(p, b, lr):
@@ -166,23 +214,33 @@ class ElasticTrainer:
             return p, loss
 
         if self.gossip_delay:
-            def round_fn(params, inflight, batches, lr, alive, gates):
+            def round_fn(params, inflight, batches, lr, alive, gates,
+                         attack, akey):
                 self.n_traces += 1  # python side effect: only runs on trace
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
-                mixed, inflight = executor(
-                    params, state=inflight, alive=alive,
-                    gates=gates if use_plan else None)
-                return mixed, losses, inflight
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+                out = executor(params, state=inflight, alive=alive,
+                               gates=gates if use_plan else None,
+                               with_stats=with_stats)
+                mixed, inflight = out[0], out[1]
+                stats = out[2] if with_stats else None
+                return mixed, losses, inflight, stats
             return jax.jit(round_fn)
 
-        def round_fn(params, batches, lr, alive, gates):
+        def round_fn(params, batches, lr, alive, gates, attack, akey):
             self.n_traces += 1  # python side effect: runs only when tracing
             params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                 params, batches, lr)
-            mixed = executor(params, alive=alive,
-                             gates=gates if use_plan else None)
-            return mixed, losses
+            if use_attack:
+                params = failures_lib.apply_attack(params, attack, akey)
+            out = executor(params, alive=alive,
+                           gates=gates if use_plan else None,
+                           with_stats=with_stats)
+            mixed = out[0] if with_stats else out
+            stats = out[1] if with_stats else None
+            return mixed, losses, stats
         return jax.jit(round_fn)
 
     def gates_for_round(self, rnd: int | None = None) -> jax.Array:
@@ -229,8 +287,14 @@ class ElasticTrainer:
         self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
             self.overlay, list(dead), bundle)
         params, client_state, self._inflight = bundle
+        suspects = set(int(s) for s in self.health.suspects())
         self.repairs.append({"dead": [int(d) for d in dead],
+                             "quarantined": sorted(suspects
+                                                   & {int(d) for d in dead}),
                              "n_after": self.overlay.n})
+        # attackers keep their plan column across compaction: survivors'
+        # current indices shift, their original-plan identity must not
+        self._attack_cols = self._attack_cols[np.asarray(old2new) >= 0]
         # survivors carry their in-flight heartbeat counters to the
         # compacted indices (a straggling survivor stays a straggler)
         self.health = self.health.remap(old2new)
@@ -243,17 +307,35 @@ class ElasticTrainer:
         the in-flight snapshot is threaded through as trainer state."""
         alive = jnp.asarray(self.health.alive_mask())
         gates = self.gates_for_round()
+        attack = akey = None
+        if self.attack_plan is not None:
+            # plan columns are in ORIGINAL indices; gather the survivors'
+            # rows so a repaired run keeps each attacker's script
+            vec = self.attack_plan.round_vector(self.round_no)
+            attack = jnp.asarray(vec[:, self._attack_cols])
+            akey = jnp.asarray(
+                np.array([self.attack_seed, self.round_no], np.uint32))
         self.round_no += 1
         lr = jnp.asarray(lr, jnp.float32)
+        if self.step_builder is not None:
+            # custom builders keep the documented 5-arg StepBuilder contract
+            # (screens/attacks with a builder are rejected in __post_init__)
+            return self._round(params, batches, lr, alive, gates)
         if self.gossip_delay:
             if self._inflight is None:  # prime: round 0 mixes the initial
                 # snapshot in the codec's wire format (packed f32 buffers,
                 # or the folded int8 wire for the quantized codecs)
                 self._inflight = self._executor.init_state(params)
-            params, losses, self._inflight = self._round(
-                params, self._inflight, batches, lr, alive, gates)
-            return params, losses
-        return self._round(params, batches, lr, alive, gates)
+            params, losses, self._inflight, stats = self._round(
+                params, self._inflight, batches, lr, alive, gates,
+                attack, akey)
+        else:
+            params, losses, stats = self._round(params, batches, lr, alive,
+                                                gates, attack, akey)
+        if stats is not None:
+            # per-sender count of receivers that clipped them this round
+            self.health.observe_suspicion(np.asarray(stats["clipped"]))
+        return params, losses
 
     def checkpoint(self, rnd: int, params: PyTree) -> None:
         if self.ckpt is not None:

@@ -122,6 +122,10 @@ class TrainSetup:
     # output: (params, batch, lr, alive, gates, inflight) ->
     # (params, metrics, inflight). Prime it once with init_inflight(params)
     # (round 0 then mixes the initial params as its delayed snapshot).
+    # Byzantine mode (DFLConfig.byzantine=True) inserts two more DONATED
+    # data arguments after gates: the (2, n) attack operand
+    # (failures.AttackPlan.round_vector) and a (2,) uint32 PRNG key —
+    # (params, batch, lr, alive, gates, attack, attack_key[, inflight]).
     step_fn: Any
     param_specs: PyTree            # PartitionSpecs (client-stacked)
     param_struct: PyTree           # Leaf pytree (client-stacked)
@@ -238,7 +242,9 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     if par.gossip_delay not in (0, 1):
         raise ValueError(f"gossip_delay must be 0 or 1, got {par.gossip_delay}")
     ecfg = engine_lib.parse_gossip_impl(par.gossip_impl, par.gossip_delay,
-                                        par.gossip_codec)
+                                        par.gossip_codec, par.gossip_screen,
+                                        par.gossip_clip_tau,
+                                        par.gossip_trim_f)
     pack_spec = None
     if ecfg.substrate == "shard_map":
         pack_spec = packing_lib.make_pack_spec(
@@ -364,12 +370,31 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             act_rules["expert_weights"] = NamedSharding(dmesh, P(None, None, "tp"))
             act_rules["expert_weights_t"] = NamedSharding(dmesh, P(None, "tp", None))
 
+    # Byzantine attacker harness (dfl.byzantine): the step additionally
+    # takes the (2, n) AttackPlan.round_vector operand and a (2,) uint32
+    # PRNG key as traced DATA (donated, like alive/gates), perturbing the
+    # post-local-step client-stacked params before they hit the wire —
+    # attacker churn and attack-free rounds share the single trace
+    use_attack = dfl.byzantine
+    if use_attack:
+        from repro.core import failures as failures_lib
+
+    def _local_phase(params, batch, lr):
+        # spmd_axis_name threads the client mesh axes through every
+        # sharding constraint inside the vmapped round
+        return jax.vmap(client_round, in_axes=(0, 0, None),
+                        spmd_axis_name=caxes)(params, batch, lr)
+
     def train_step(params, batch, lr, alive, gates):
         with activation_sharding(act_rules):
-            # spmd_axis_name threads the client mesh axes through every
-            # sharding constraint inside the vmapped round
-            params, loss = jax.vmap(client_round, in_axes=(0, 0, None),
-                                    spmd_axis_name=caxes)(params, batch, lr)
+            params, loss = _local_phase(params, batch, lr)
+            params = gossip_fn(params, alive, gates)
+        return params, {"loss": jnp.mean(loss)}
+
+    def train_step_byz(params, batch, lr, alive, gates, attack, attack_key):
+        with activation_sharding(act_rules):
+            params, loss = _local_phase(params, batch, lr)
+            params = failures_lib.apply_attack(params, attack, attack_key)
             params = gossip_fn(params, alive, gates)
         return params, {"loss": jnp.mean(loss)}
 
@@ -377,8 +402,16 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         # the d ppermutes inside gossip_fn_delayed read only `inflight` (a
         # step input), so the scheduler overlaps them with this scan
         with activation_sharding(act_rules):
-            params, loss = jax.vmap(client_round, in_axes=(0, 0, None),
-                                    spmd_axis_name=caxes)(params, batch, lr)
+            params, loss = _local_phase(params, batch, lr)
+            params, inflight = gossip_fn_delayed(params, alive, gates,
+                                                 inflight)
+        return params, {"loss": jnp.mean(loss)}, inflight
+
+    def train_step_delayed_byz(params, batch, lr, alive, gates, attack,
+                               attack_key, inflight):
+        with activation_sharding(act_rules):
+            params, loss = _local_phase(params, batch, lr)
+            params = failures_lib.apply_attack(params, attack, attack_key)
             params, inflight = gossip_fn_delayed(params, alive, gates,
                                                  inflight)
         return params, {"loss": jnp.mean(loss)}, inflight
@@ -404,6 +437,15 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     # the previous ones are dead weight. Consequence: callers must NOT
     # reuse a cached device array across rounds (it is consumed); build the
     # mask/gates per round (ElasticTrainer does)
+    donate = (0, 3, 4)
+    if use_attack:
+        # attack operand (argnum 5) + key (argnum 6): fresh per round,
+        # donated like the mask
+        in_shardings = in_shardings + (NamedSharding(dmesh, P()),
+                                       NamedSharding(dmesh, P()))
+        input_specs["attack"] = jax.ShapeDtypeStruct((2, n_cl), jnp.float32)
+        input_specs["attack_key"] = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        donate = donate + (5, 6)
     init_inflight = None
     if use_delay:
         inflight_shardings = tuple(NamedSharding(dmesh, s)
@@ -411,16 +453,18 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         in_shardings = in_shardings + (inflight_shardings,)
         out_shardings = out_shardings + (inflight_shardings,)
         input_specs["inflight"] = inflight_structs
-        # the snapshot (argnum 5) is donated too: the step consumes last
-        # round's in-flight buffers and emits this round's
-        step = jax.jit(train_step_delayed, in_shardings=in_shardings,
-                       out_shardings=out_shardings,
-                       donate_argnums=(0, 3, 4, 5))
+        # the snapshot (the last argnum) is donated too: the step consumes
+        # last round's in-flight buffers and emits this round's
+        donate = donate + (7 if use_attack else 5,)
+        step = jax.jit(train_step_delayed_byz if use_attack
+                       else train_step_delayed, in_shardings=in_shardings,
+                       out_shardings=out_shardings, donate_argnums=donate)
         init_inflight = jax.jit(snapshot_fn, in_shardings=(param_shardings,),
                                 out_shardings=inflight_shardings)
     else:
-        step = jax.jit(train_step, in_shardings=in_shardings,
-                       out_shardings=out_shardings, donate_argnums=(0, 3, 4))
+        step = jax.jit(train_step_byz if use_attack else train_step,
+                       in_shardings=in_shardings,
+                       out_shardings=out_shardings, donate_argnums=donate)
     return TrainSetup(
         step_fn=step, param_specs=pspecs, param_struct=struct,
         input_specs=input_specs,

@@ -50,24 +50,47 @@ class SimTrainer:
     gossip_delay: int = 0
     # wire codec of the stacked engine round ("f32" | "int8" | "int8_block")
     gossip_codec: str = "f32"
+    # Byzantine screen ("none" | "norm_clip" | "trimmed_mean") + its knobs;
+    # composes with every codec x delay cell through the engine config alone
+    gossip_screen: str = "none"
+    screen_tau: float = 3.0
+    screen_trim: int = 1
+    # scripted attackers: the (2, n) round_vector + PRNG key are traced
+    # data, so attacker churn never retraces the round
+    attack_plan: failures_lib.AttackPlan | None = None
+    attack_seed: int = 0
 
     def __post_init__(self):
         if self.gossip_delay not in (0, 1):
             raise ValueError(f"gossip_delay must be 0 or 1, "
                              f"got {self.gossip_delay}")
+        if self.gossip_screen not in engine_lib.SCREENS:
+            raise ValueError(f"unknown gossip_screen {self.gossip_screen!r}; "
+                             f"available: {', '.join(engine_lib.SCREENS)}")
+        if (self.attack_plan is not None
+                and self.attack_plan.n_clients != self.overlay.n):
+            raise ValueError(f"attack_plan is for "
+                             f"{self.attack_plan.n_clients} clients, overlay "
+                             f"has {self.overlay.n}")
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         self._alive = np.ones(self.overlay.n, dtype=np.float32)
         self._inflight = None  # delayed mode's carried snapshot
+        # current-index -> original-plan-column map (compacted on repair)
+        self._attack_cols = np.arange(self.overlay.n)
         self._round_fn = self._build(self.spec)
 
     def _build(self, spec):
         # no active plan (None or static) => gate pathway off at build time
         # (exact Chow weights; shared predicate with ElasticTrainer/steps.py)
         use_plan = overlay_plan.is_active(self.plan)
+        use_attack = self.attack_plan is not None
         self._executor = engine_lib.build_gossip_executor(
             engine_lib.GossipEngineConfig(substrate="stacked",
                                           codec=self.gossip_codec,
-                                          delay=self.gossip_delay), spec)
+                                          delay=self.gossip_delay,
+                                          screen=self.gossip_screen,
+                                          clip_tau=self.screen_tau,
+                                          trim_f=self.screen_trim), spec)
         executor = self._executor
 
         def client(p, b, lr):
@@ -78,9 +101,12 @@ class SimTrainer:
 
         if self.gossip_delay:
             @partial(jax.jit, static_argnames=())
-            def round_fn(params, inflight, batches, lr, alive, gates):
+            def round_fn(params, inflight, batches, lr, alive, gates,
+                         attack, akey):
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
                 params, inflight = executor(
                     params, state=inflight, alive=alive,
                     gates=gates if use_plan else None)
@@ -88,13 +114,22 @@ class SimTrainer:
             return round_fn
 
         @partial(jax.jit, static_argnames=())
-        def round_fn(params, batches, lr, alive, gates):
+        def round_fn(params, batches, lr, alive, gates, attack, akey):
             params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                 params, batches, lr)
+            if use_attack:
+                params = failures_lib.apply_attack(params, attack, akey)
             params = executor(params, alive=alive,
                               gates=gates if use_plan else None)
             return params, losses
         return round_fn
+
+    def _attack_operands(self, rnd: int):
+        if self.attack_plan is None:
+            return None, None
+        vec = self.attack_plan.round_vector(rnd)
+        return (jnp.asarray(vec[:, self._attack_cols]),
+                jnp.asarray(np.array([self.attack_seed, rnd], np.uint32)))
 
     def _gates(self, rnd: int) -> jnp.ndarray:
         return jnp.asarray(overlay_plan.gates_for(self.plan, rnd,
@@ -121,6 +156,8 @@ class SimTrainer:
         new_alive = np.ones(self.overlay.n, dtype=np.float32)
         new_alive[old2new[survivors]] = self._alive[survivors]
         self._alive = new_alive
+        # attackers keep their original plan column across compaction
+        self._attack_cols = self._attack_cols[survivors]
         self._round_fn = self._build(self.spec)
         return params
 
@@ -140,16 +177,19 @@ class SimTrainer:
             t0 = time.time()
             batches = batch_fn(rnd)
             lr_t = jnp.asarray(lr_fn(rnd), jnp.float32)
+            attack, akey = self._attack_operands(rnd)
             if self.gossip_delay:
                 if self._inflight is None:  # prime with the initial params
                     self._inflight = self._executor.init_state(params)
                 params, losses, self._inflight = self._round_fn(
                     params, self._inflight, batches, lr_t,
-                    jnp.asarray(self._alive), self._gates(rnd))
+                    jnp.asarray(self._alive), self._gates(rnd),
+                    attack, akey)
             else:
                 params, losses = self._round_fn(params, batches, lr_t,
                                                 jnp.asarray(self._alive),
-                                                self._gates(rnd))
+                                                self._gates(rnd),
+                                                attack, akey)
             rec = {"round": rnd,
                    "train_loss": float(jnp.mean(losses)),
                    "seconds": round(time.time() - t0, 3)}
@@ -166,7 +206,9 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 local_steps=3, batch=8, seq=64, lr=0.5, momentum=0.9,
                 ckpt_dir=None, seed=0, drop_fraction=0.0, drop_round=10,
                 round_plan="static", gossip_delay=0,
-                gossip_codec="f32") -> list[dict]:
+                gossip_codec="f32", gossip_screen="none",
+                attackers=0, attack_mode="sign_flip",
+                attack_magnitude=1.0) -> list[dict]:
     from repro.data import federated, pipeline, shakespeare
 
     toks, vocab = shakespeare.corpus()
@@ -190,10 +232,18 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
     # a "static" plan is inert (is_active: gate pathway stays off)
     plan = overlay_plan.make_plan(dfl.round_plan, k=dfl.plan_k,
                                   fraction=dfl.plan_fraction, seed=seed)
+    attack = None
+    if attackers > 0:
+        attack = failures_lib.sample_attackers(n_clients, attackers,
+                                               mode=attack_mode,
+                                               magnitude=attack_magnitude,
+                                               seed=seed)
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
                          dcfg=dcfg, ckpt=ckpt, plan=plan,
                          gossip_delay=gossip_delay,
-                         gossip_codec=gossip_codec)
+                         gossip_codec=gossip_codec,
+                         gossip_screen=gossip_screen,
+                         attack_plan=attack, attack_seed=seed)
 
     # held-out evaluation: last 10% of the corpus
     ev = pipeline.TokenBatcher(tokens=toks, spans=[(int(len(toks) * .9),
@@ -251,6 +301,13 @@ def main() -> None:
                     choices=["f32", "int8", "int8_block"],
                     help="wire codec of the engine round (int8_block + "
                          "--gossip-delay 1 = pipelined+quantized)")
+    ap.add_argument("--gossip-screen", default="none",
+                    choices=["none", "norm_clip", "trimmed_mean"],
+                    help="Byzantine screen over received gossip payloads")
+    ap.add_argument("--attackers", type=int, default=0,
+                    help="number of scripted Byzantine clients")
+    ap.add_argument("--attack-mode", default="sign_flip",
+                    choices=["sign_flip", "scale", "noise"])
     ap.add_argument("--local-steps", type=int, default=3)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
@@ -264,7 +321,10 @@ def main() -> None:
                        ckpt_dir=args.ckpt_dir,
                        drop_fraction=args.drop_fraction,
                        round_plan=args.plan, gossip_delay=args.gossip_delay,
-                       gossip_codec=args.gossip_codec)
+                       gossip_codec=args.gossip_codec,
+                       gossip_screen=args.gossip_screen,
+                       attackers=args.attackers,
+                       attack_mode=args.attack_mode)
     for rec in hist:
         print(json.dumps(rec))
     if args.out:

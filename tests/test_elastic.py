@@ -350,3 +350,146 @@ def test_failure_plan_and_masks():
     assert len(plan.dead_at(5)) == 4
     mask = plan.alive_mask(10)
     assert mask.sum() == 16
+
+
+class TestAttackPlan:
+    def test_round_vector_semantics(self):
+        plan = failures.AttackPlan(6, events=(
+            (0, (1,), "sign_flip", 2.0),
+            (3, (4,), "scale", 5.0),
+            (5, (1,), "noise", 0.7)))
+        v0 = plan.round_vector(0)
+        assert v0.shape == (2, 6)
+        assert v0[0, 1] == -2.0 and v0[1, 1] == 0.0     # sign_flip: -mag
+        assert np.all(v0[0, [0, 2, 3, 4, 5]] == 1.0)    # honest: identity
+        v3 = plan.round_vector(3)
+        assert v3[0, 4] == 5.0                          # scale joins
+        v5 = plan.round_vector(5)
+        assert v5[0, 1] == 1.0 and v5[1, 1] == 0.7      # later event overrides
+        assert set(plan.attackers_at(2)) == {1}
+        assert set(plan.attackers_at(4)) == {1, 4}
+
+    def test_all_honest_vector_is_identity_on_apply(self):
+        plan = failures.AttackPlan(4, events=((10, (2,), "scale", 3.0),))
+        tree = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(
+            (4, 3, 2)), jnp.float32)}
+        key = np.array([0, 0], np.uint32)
+        out = failures.apply_attack(tree, jnp.asarray(plan.round_vector(0)),
+                                    jnp.asarray(key))
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+    def test_apply_attack_modes(self):
+        r = np.random.default_rng(3)
+        tree = {"w": jnp.asarray(r.standard_normal((5, 4)), jnp.float32)}
+        key = jnp.asarray(np.array([7, 1], np.uint32))
+        plan = failures.AttackPlan(5, events=((0, (2,), "sign_flip", 10.0),
+                                              (0, (4,), "noise", 2.0)))
+        out = failures.apply_attack(tree, jnp.asarray(plan.round_vector(0)),
+                                    key)
+        w, ow = np.asarray(tree["w"]), np.asarray(out["w"])
+        np.testing.assert_allclose(ow[2], -10.0 * w[2], rtol=1e-6)
+        np.testing.assert_array_equal(ow[[0, 1, 3]], w[[0, 1, 3]])
+        assert not np.allclose(ow[4], w[4])  # noise perturbed
+        # same key reproduces, different round key differs
+        out2 = failures.apply_attack(tree, jnp.asarray(plan.round_vector(0)),
+                                     key)
+        np.testing.assert_array_equal(np.asarray(out2["w"]), ow)
+
+    def test_sample_attackers(self):
+        plan = failures.sample_attackers(12, 3, mode="scale", magnitude=4.0,
+                                         at_round=2, seed=1)
+        assert plan.n_clients == 12 and len(plan.attackers_at(2)) == 3
+        assert plan.attackers_at(1) == set()
+        assert plan.events[0][2] == "scale"
+
+
+def test_attacker_churn_and_screen_zero_retrace():
+    """Tentpole retrace guard: an AttackPlan whose attacker set CHANGES
+    mid-run plus an active screen must reuse ONE executable — the (2, n)
+    attack vector and the PRNG key are step data, never trace structure."""
+    n, dim = 10, 3
+    targets = jnp.zeros((n, dim))
+    cfg = dfedavg.DFedAvgMConfig(local_steps=1, lr=0.2, momentum=0.0)
+    plan = failures.AttackPlan(n, events=(
+        (1, (2,), "sign_flip", 5.0),
+        (3, (7,), "scale", 10.0),
+        (5, (2,), "noise", 1.0)))          # mode changes too
+    rng = np.random.default_rng(0)
+    for screen, kw in (("norm_clip", {"screen_tau": 3.0}),
+                       ("trimmed_mean", {"screen_trim": 1})):
+        trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=0),
+                                 loss_fn=quad_loss, dcfg=cfg,
+                                 straggler_rounds=1, failure_rounds=99,
+                                 gossip_screen=screen, attack_plan=plan,
+                                 **kw)
+        params = {"w": jnp.ones((n, dim))}
+        for rnd in range(7):
+            alive = (rng.random(n) > 0.2).astype(np.float32)  # churn too
+            params, _, old2new = trainer.observe_heartbeats(alive, params)
+            assert old2new is None
+            params, _ = trainer.step(params, _batches(targets, 1), 0.2)
+        assert trainer.n_traces == 1, (screen, trainer.n_traces)
+        assert bool(jnp.isfinite(params["w"]).all())
+
+
+def test_quarantine_evicts_attackers_through_splice_repair():
+    """norm_clip telemetry -> suspicion -> quarantine -> the SAME splice
+    repair as heartbeat death, with suspicion counters carried through
+    old2new and attack-plan columns compacted to the survivors."""
+    n, dim = 12, 4
+    r = np.random.default_rng(0)
+    targets = jnp.zeros((n, dim))
+    cfg = dfedavg.DFedAvgMConfig(local_steps=2, lr=0.05, momentum=0.9)
+    plan = failures.AttackPlan(n, events=((0, (3, 7), "sign_flip", 30.0),))
+    trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=1),
+                             loss_fn=quad_loss, dcfg=cfg,
+                             straggler_rounds=1, failure_rounds=99,
+                             gossip_screen="norm_clip", screen_tau=3.0,
+                             attack_plan=plan, quarantine_rounds=3)
+    params = {"w": jnp.asarray(r.standard_normal((n, dim)) * 0.1,
+                               jnp.float32)}
+    repaired_at = None
+    for rnd in range(6):
+        params, _, old2new = trainer.observe_heartbeats(
+            np.ones(trainer.n_clients), params)
+        if old2new is not None:
+            repaired_at = rnd
+            break
+        params, _ = trainer.step(
+            params, _batches(jnp.zeros((trainer.n_clients, dim)), 2), 0.05)
+    # every receiver of 3/7 clips them every round -> suspicion hits the
+    # threshold after quarantine_rounds rounds and the repair fires
+    assert repaired_at == 3, repaired_at
+    assert trainer.repairs[-1]["dead"] == [3, 7]
+    assert trainer.repairs[-1]["quarantined"] == [3, 7]
+    assert trainer.n_clients == n - 2
+    assert params["w"].shape[0] == n - 2
+    # suspicion counters followed the survivors through old2new
+    assert old2new[3] == -1 and old2new[7] == -1
+    survivors = np.asarray(old2new) >= 0
+    assert np.all(trainer.health.suspicion < trainer.quarantine_rounds)
+    # attack columns compacted: the evicted attackers' scripts are gone
+    np.testing.assert_array_equal(trainer._attack_cols,
+                                  np.arange(n)[survivors])
+    # post-repair rounds run clean (one re-jit for the membership change)
+    params, _ = trainer.step(
+        params, _batches(jnp.zeros((n - 2, dim)), 2), 0.05)
+    assert trainer.n_traces == 2, trainer.n_traces
+    assert bool(jnp.isfinite(params["w"]).all())
+
+
+def test_suspicion_carried_through_remap():
+    """A straggling-but-not-quarantined suspect keeps its counter at its
+    compacted index when an unrelated client dies."""
+    tracker = failures.HealthTracker(8, straggler_rounds=1, failure_rounds=2,
+                                     quarantine_rounds=5)
+    tracker.observe_suspicion(np.asarray([0, 0, 0, 0, 0, 2, 0, 1]))
+    tracker.observe_suspicion(np.asarray([0, 0, 0, 0, 0, 1, 0, 0]))
+    np.testing.assert_array_equal(tracker.suspicion,
+                                  [0, 0, 0, 0, 0, 2, 0, 1])
+    old2new = np.asarray([0, 1, -1, 2, 3, 4, 5, 6])  # client 2 dies
+    remapped = tracker.remap(old2new)
+    np.testing.assert_array_equal(remapped.suspicion,
+                                  [0, 0, 0, 0, 2, 0, 1])
+    assert list(remapped.suspects()) == []

@@ -495,3 +495,304 @@ class TestProductionPipelinedQuantStep:
         out = subprocess.run([sys.executable, "-c", code],
                              capture_output=True, text=True, cwd=".")
         assert "ASYNC_QUANT_HLO_OK" in out.stdout, out.stdout + out.stderr
+
+
+class TestByzantineScreens:
+    """The fourth engine layer: screen ("none" | "norm_clip" |
+    "trimmed_mean") composes with codec x timing x substrate through the
+    config alone — no new executors, the screen="none" paths byte-identical
+    to the pre-screen engine."""
+
+    def test_screen_config_validation(self):
+        with pytest.raises(ValueError):
+            engine.GossipEngineConfig(screen="median")
+        with pytest.raises(ValueError):
+            engine.GossipEngineConfig(substrate="dense", screen="norm_clip")
+        with pytest.raises(ValueError):
+            engine.GossipEngineConfig(substrate="per_leaf",
+                                      screen="trimmed_mean")
+        with pytest.raises(ValueError):
+            engine.GossipEngineConfig(screen="norm_clip", clip_tau=0.0)
+        with pytest.raises(ValueError):
+            engine.GossipEngineConfig(screen="trimmed_mean", trim_f=-1)
+        cfg = engine.parse_gossip_impl("ppermute_packed", screen="norm_clip",
+                                       clip_tau=2.5)
+        assert (cfg.screen, cfg.clip_tau) == ("norm_clip", 2.5)
+
+    def test_with_stats_only_on_stacked_norm_clip(self):
+        spec = gossip.make_gossip_spec(topology.expander_overlay(8, 4, seed=0))
+        ex = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="trimmed_mean"), spec)
+        with pytest.raises(ValueError):
+            ex(_tree(8), with_stats=True)
+
+    def test_norm_clip_identity_at_large_tau_is_bitwise(self):
+        """When no sender exceeds tau x the receiver's own norm, every clip
+        factor is 1.0 and the screened stacked f32 round is BITWISE equal
+        to the unscreened one (incl. alive + gates)."""
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        ex0 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked"), spec)
+        exc = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="norm_clip", clip_tau=1e6), spec)
+        for kw in ({},
+                   {"alive": jnp.asarray(np.r_[np.ones(7), 0, 1, 1],
+                                         jnp.float32),
+                    "gates": jnp.asarray([1., 0., 1., 1.], jnp.float32)}):
+            a0, ac = ex0(x, **kw), exc(x, **kw)
+            for k in x:
+                np.testing.assert_array_equal(np.asarray(a0[k]),
+                                              np.asarray(ac[k]))
+
+    def test_norm_clip_screens_attacker_and_counts_clips(self):
+        """A huge sender is rescaled to tau x the receiver's own norm
+        (whole-model norms, all pack buffers) and the per-sender clip
+        telemetry counts exactly its live receivers."""
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        xa = jax.tree.map(lambda v: v.at[3].mul(1e4), x)
+        ex0 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked"), spec)
+        exc = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="norm_clip", clip_tau=3.0),
+            spec)
+        got, stats = exc(xa, with_stats=True)
+        plain = ex0(xa)
+        # the attacker's OWN row keeps its huge self-term by design —
+        # screens defend receivers, not the attacker
+        others = np.arange(10) != 3
+        mx_scr = max(float(jnp.max(jnp.abs(got[k][others]))) for k in x)
+        mx_pl = max(float(jnp.max(jnp.abs(plain[k][others]))) for k in x)
+        assert mx_scr < mx_pl / 50, (mx_scr, mx_pl)
+        counts = np.asarray(stats["clipped"])
+        in_deg = sum((np.asarray(rf) == 3) & np.asarray(m).astype(bool)
+                     for rf, m in zip(spec.recv_from, spec.live_masks))
+        assert counts[3] == int(np.sum(in_deg)), (counts, np.sum(in_deg))
+        assert counts.sum() == counts[3], counts
+
+    def test_trimmed_f0_is_renormalized_mean(self):
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        ex0 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked"), spec)
+        ext = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="trimmed_mean", trim_f=0), spec)
+        gt, pl = ext(x), ex0(x)
+        for k in x:
+            np.testing.assert_allclose(np.asarray(gt[k]), np.asarray(pl[k]),
+                                       rtol=3e-6, atol=3e-6)
+
+    def test_trimmed_matches_ref_oracle_with_alive_and_gates(self):
+        """Engine trimmed cell == vmapped ref.trimmed_mix over the packed
+        stack with the raw/contrib weight tables (dead senders and gated
+        schedules excluded from the order statistics)."""
+        from repro.kernels.gossip_mix import ref as mix_ref
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        alive = jnp.asarray(np.r_[np.ones(7), 0, 1, 1], jnp.float32)
+        gates = jnp.asarray([1., 0., 1., 1.], jnp.float32)
+        ext = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="trimmed_mean", trim_f=1), spec)
+        gt = ext(x, alive=alive, gates=gates)
+        ps = gossip._stacked_pack_spec(x)
+        bufs = jax.vmap(lambda t: packing.pack_tree(t, ps))(x)
+        raw, contrib = gossip.raw_contrib_tables(spec, alive, gates)
+        u = jnp.maximum(raw, 0.0) * contrib
+        lv = (contrib > 0.0).astype(jnp.float32)
+        outs = []
+        for buf in bufs:
+            stack = jnp.stack([buf] + [jnp.take(buf, jnp.asarray(rf), axis=0)
+                                       for rf in spec.recv_from], axis=1)
+            outs.append(jax.vmap(
+                lambda st, uu, ll: mix_ref.trimmed_mix(st, uu, ll, 1)
+            )(stack, u, lv))
+        ref = jax.vmap(lambda bs: packing.unpack_tree(bs, ps))(tuple(outs))
+        for k in x:
+            np.testing.assert_allclose(np.asarray(gt[k]), np.asarray(ref[k]),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_trimmed_neutralizes_sign_flip_where_mean_is_poisoned(self):
+        """Deviation-from-clean-round on receivers whose attacker
+        in-multiplicity is <= trim: the trimmed cell stays near the clean
+        round while the plain mean is dragged by the attacker. (A receiver
+        fed the same attacker on two schedules needs trim >= 2 — the
+        order-statistics contract, asserted via the multiplicity filter.)"""
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        xa = jax.tree.map(lambda v: v.at[3].mul(-50.0), x)
+        ex0 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked"), spec)
+        ext = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="trimmed_mean", trim_f=1), spec)
+        mult = sum(((np.asarray(rf) == 3) & np.asarray(m).astype(bool))
+                   .astype(int)
+                   for rf, m in zip(spec.recv_from, spec.live_masks))
+        recv = np.where(mult == 1)[0]
+        err_t = max(float(jnp.max(jnp.abs(ext(xa)[k][recv] - ext(x)[k][recv])))
+                    for k in x)
+        err_p = max(float(jnp.max(jnp.abs(ex0(xa)[k][recv] - ex0(x)[k][recv])))
+                    for k in x)
+        assert err_t < err_p / 10, (err_t, err_p)
+
+    @pytest.mark.parametrize("codec", ["int8", "int8_block"])
+    def test_int8_trimmed_decodes_within_quant_tolerance(self, codec):
+        """The dequant-side trimmed kernel (int8 wire decoded inside the
+        fused trim pass) tracks the f32 trimmed cell within the wire's
+        quantization error."""
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        alive = jnp.asarray(np.r_[np.ones(7), 0, 1, 1], jnp.float32)
+        gates = jnp.asarray([1., 0., 1., 1.], jnp.float32)
+        exf = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      screen="trimmed_mean", trim_f=1), spec)
+        exq = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked", codec=codec,
+                                      screen="trimmed_mean", trim_f=1), spec)
+        gf = exf(x, alive=alive, gates=gates)
+        gq = exq(x, alive=alive, gates=gates)
+        for k in x:
+            np.testing.assert_allclose(np.asarray(gq[k]), np.asarray(gf[k]),
+                                       rtol=5e-2, atol=5e-2)
+
+    def test_screens_compose_with_delay(self):
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        alive = jnp.asarray(np.r_[np.ones(7), 0, 1, 1], jnp.float32)
+        for codec in ("f32", "int8_block"):
+            for screen, kw in (("norm_clip", dict(clip_tau=3.0)),
+                               ("trimmed_mean", dict(trim_f=1))):
+                ex = engine.build_gossip_executor(
+                    engine.GossipEngineConfig(substrate="stacked",
+                                              codec=codec, delay=1,
+                                              screen=screen, **kw), spec)
+                st = ex.init_state(_tree(10, seed=6))
+                mixed, new_st = ex(x, state=st, alive=alive)
+                assert all(bool(jnp.isfinite(v).all())
+                           for v in mixed.values()), (codec, screen)
+
+
+class TestShardMapScreens:
+    """Screened cells on the production shard_map substrate, vs their
+    stacked twins (whole-model norm_clip needed a two-phase shard_map
+    round; trimmed excludes fixed-point deliveries, which arrive as zeros
+    on the wire there)."""
+
+    def _run(self, code):
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, cwd=".")
+        assert "OK" in out.stdout, out.stdout + out.stderr
+
+    @pytest.mark.slow
+    def test_shard_map_screens_match_stacked_twins(self):
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import engine, gossip, packing, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=0)
+            spec = gossip.make_gossip_spec(ov)
+            r = np.random.default_rng(9)
+            x = {"a": jnp.asarray(r.standard_normal((8, 6, 5)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((8, 11)), jnp.float32)}
+            xa = jax.tree.map(lambda v: v.at[2].mul(-30.0), x)  # attacker
+            alive = jnp.asarray([1., 1., 1., 0., 1., 1., 1., 1.], jnp.float32)
+            gates = jnp.asarray([1., 0., 1., 1.], jnp.float32)
+            locals_ = {"a": jax.ShapeDtypeStruct((6, 5), jnp.float32),
+                       "b": jax.ShapeDtypeStruct((11,), jnp.float32)}
+            pspec = packing.make_pack_spec(locals_)
+            specs = jax.tree.map(lambda _: P("client"), x)
+            put = lambda t: jax.device_put(t, jax.tree.map(
+                lambda _: NamedSharding(mesh, P("client")), t))
+            for codec in ("f32", "int8_block"):
+                for screen, kw in (("norm_clip", dict(clip_tau=3.0)),
+                                   ("trimmed_mean", dict(trim_f=1))):
+                    exs = engine.build_gossip_executor(
+                        engine.GossipEngineConfig(substrate="shard_map",
+                                                  codec=codec, screen=screen,
+                                                  **kw),
+                        spec, axis_names="client", pack_spec=pspec)
+                    exst = engine.build_gossip_executor(
+                        engine.GossipEngineConfig(substrate="stacked",
+                                                  codec=codec, screen=screen,
+                                                  **kw), spec)
+
+                    def body(t, a, g):
+                        local = jax.tree.map(lambda v: v[0], t)
+                        mixed = exs(local, alive=a, gates=g)
+                        return jax.tree.map(lambda v: v[None], mixed)
+
+                    fn = jax.jit(shard_map(body, mesh,
+                                           in_specs=(specs, P(), P()),
+                                           out_specs=specs))
+                    got = fn(put(xa), alive, gates)
+                    ref = exst(xa, alive=alive, gates=gates)
+                    tol = 1e-6 if codec == "f32" else 5e-2
+                    for k in x:
+                        np.testing.assert_allclose(
+                            np.asarray(got[k]), np.asarray(ref[k]),
+                            rtol=tol, atol=tol)
+            print("SHARD_MAP_SCREENS_OK")
+        """)
+
+    @pytest.mark.slow
+    def test_screened_byzantine_step_ships_d_collectives(self):
+        """Acceptance, in lowered HLO: every screened cell of the
+        production step — with the Byzantine attack operands threaded —
+        still ships exactly d collective-permutes per round."""
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+            import sys; sys.path.insert(0, "src")
+            import jax
+            from repro.configs import registry
+            from repro.configs.base import ShapeConfig, ParallelConfig, DFLConfig
+            from repro.launch import steps
+            from repro.models import params as P
+
+            mesh = jax.make_mesh((4, 4), ("data", "model"))
+            cfg = registry.reduced("qwen2.5-3b")
+            shape = ShapeConfig("t", 64, 8, "train")
+            for gi, screen in (("ppermute_packed", "norm_clip"),
+                               ("ppermute_packed", "trimmed_mean"),
+                               ("ppermute_packed_quant", "norm_clip"),
+                               ("ppermute_packed_quant", "trimmed_mean")):
+                par = ParallelConfig(clients_per_pod=4, local_steps=2,
+                                     grad_accum=2, gossip_impl=gi,
+                                     gossip_screen=screen, gossip_trim_f=1)
+                setup = steps.build_train_step(cfg, shape, mesh, par,
+                                               DFLConfig(degree=2,
+                                                         byzantine=True))
+                assert "attack" in setup.input_specs
+                args = [P.shape_structs(setup.param_struct),
+                        setup.input_specs["batch"], setup.input_specs["lr"],
+                        setup.input_specs["alive"],
+                        setup.input_specs["gates"],
+                        setup.input_specs["attack"],
+                        setup.input_specs["attack_key"]]
+                text = setup.step_fn.lower(*args).as_text()
+                perms = [l for l in text.splitlines()
+                         if "collective_permute" in l]
+                d = setup.gossip_spec.degree
+                assert len(perms) == d, (gi, screen, len(perms), d)
+            print("SCREENED_STEP_HLO_OK")
+        """)

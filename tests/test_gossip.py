@@ -121,7 +121,8 @@ class TestFailureAdjustedGossip:
         spec = gossip.make_gossip_spec(ov)
         alive = np.ones(12)
         alive[[2, 7]] = 0
-        adj = failures.alive_adjusted_spec(spec, alive)
+        with pytest.warns(DeprecationWarning, match="alive_adjusted_spec"):
+            adj = failures.alive_adjusted_spec(spec, alive)
         # reconstruct the effective matrix
         m = np.diag(list(adj.self_weights))
         for rf in adj.recv_from:
@@ -142,7 +143,8 @@ class TestFailureAdjustedGossip:
         x = _tree(8, seed=4)
         alive = np.ones(8)
         alive[3] = 0
-        adj = failures.alive_adjusted_spec(spec, alive)
+        with pytest.warns(DeprecationWarning, match="alive_adjusted_spec"):
+            adj = failures.alive_adjusted_spec(spec, alive)
         y = gossip.mix_schedules(x, adj)
         np.testing.assert_allclose(y["a"][3], x["a"][3])  # dead keeps params
 

@@ -108,3 +108,99 @@ class TestQuantGossipKernel:
         err = float(jnp.max(jnp.abs(exact - approx)))
         amax = float(jnp.max(jnp.abs(x["w"])))
         assert err <= 2 * amax / 127.0
+
+
+class TestTrimmedMixKernel:
+    """Coordinate-wise trimmed-mean mix (the Byzantine screen's kernel):
+    fast semantic tests run the jnp oracle; the interpret-mode
+    comparison-network parity sweeps are marked slow (the O(K^2) rank
+    network is expensive under the Pallas interpreter)."""
+
+    def _tables(self, k, seed=0):
+        r = np.random.default_rng(seed)
+        u = jnp.asarray(np.abs(r.standard_normal(k)) + 0.1, jnp.float32)
+        live = jnp.ones(k, jnp.float32)
+        return u, live
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("shape", SHAPES[:3])
+    @pytest.mark.parametrize("trim", [0, 1, 2])
+    def test_interpret_matches_ref(self, shape, trim):
+        k = 6
+        stack = _rand((k,) + shape, jnp.float32)
+        u, live = self._tables(k)
+        live = live.at[2].set(0.0)  # one dead sender in the sweep
+        got = mix_ops.gossip_mix_trimmed(stack, u, live, trim=trim,
+                                         impl="pallas_interpret")
+        want = mix_ref.trimmed_mix(stack, u, live, trim)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("n_s", [1, 2])
+    def test_quant_interpret_matches_ref(self, n_s):
+        """Dequant-side variant: int8 payloads with per-buffer (n_s=1) or
+        per-row-block scales decoded inside the fused trim pass."""
+        from repro.kernels.gossip_mix import kernel as mix_k
+        k, rows = 5, 2 * mix_k.DEFAULT_BLOCK_ROWS
+        r = np.random.default_rng(4)
+        fresh = jnp.asarray(r.standard_normal((rows, mix_k.LANE)),
+                            jnp.float32)
+        q = jnp.asarray(r.integers(-127, 128, (k - 1, rows, mix_k.LANE)),
+                        jnp.int8)
+        scales = jnp.asarray(np.abs(r.standard_normal((k - 1, n_s))) * 0.01
+                             + 1e-4, jnp.float32)
+        u, live = self._tables(k, seed=5)
+        got = mix_ops.gossip_mix_trimmed_quant_packed(
+            fresh, q, scales, u, live, trim=1,
+            block_rows=mix_k.DEFAULT_BLOCK_ROWS, impl="pallas_interpret")
+        want = mix_ref.trimmed_mix_quant(fresh, q, scales, u, live, 1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_dead_and_gated_entries_invisible_to_order_stats(self):
+        """An arbitrarily large value on a non-live entry must not displace
+        which live values get trimmed (exclusion, not just zero-weighting)."""
+        shape = (37,)
+        stack = _rand((5,) + shape, jnp.float32, seed=7)
+        u, live = self._tables(5, seed=7)
+        live = live.at[3].set(0.0)
+        poisoned = stack.at[3].set(1e6)
+        a = mix_ref.trimmed_mix(stack, u, live, 1)
+        b = mix_ref.trimmed_mix(poisoned, u, live, 1)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_trim0_is_renormalized_masked_mean(self):
+        stack = _rand((4, 65), jnp.float32, seed=8)
+        u, live = self._tables(4, seed=8)
+        live = live.at[1].set(0.0)
+        got = mix_ref.trimmed_mix(stack, u, live, 0)
+        ul = np.asarray(u) * np.asarray(live)
+        want = (ul[:, None] * np.asarray(stack)).sum(0) / ul.sum()
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+    def test_trim_clamped_so_one_value_survives(self):
+        """trim >= half the live count clamps to floor((n_live-1)/2):
+        with 3 live entries and trim=5 the median survives."""
+        stack = jnp.asarray([[1.0], [5.0], [100.0]], jnp.float32)
+        u = jnp.ones(3, jnp.float32)
+        live = jnp.ones(3, jnp.float32)
+        got = mix_ref.trimmed_mix(stack, u, live, 5)
+        np.testing.assert_allclose(np.asarray(got), [5.0], rtol=1e-6)
+
+    def test_dead_self_identity_fallback(self):
+        stack = _rand((4, 12), jnp.float32, seed=9)
+        u, live = self._tables(4, seed=9)
+        live = live.at[0].set(0.0)
+        got = mix_ref.trimmed_mix(stack, u, live, 1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(stack[0]))
+
+    def test_packed_sqnorms_interpret_matches_ref(self):
+        from repro.kernels.gossip_mix import kernel as mix_k
+        rows = 2 * mix_k.DEFAULT_BLOCK_ROWS
+        buf = _rand((rows, mix_k.LANE), jnp.float32, seed=11)
+        got = mix_ops.packed_sqnorms(buf, impl="pallas_interpret")
+        want = mix_ref.block_sqnorms(buf, mix_k.DEFAULT_BLOCK_ROWS)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5)
+        assert got.shape == (2,)

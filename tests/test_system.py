@@ -40,15 +40,17 @@ def _run_mnist_dfl(overlay, rounds=10, n_clients=10, noniid=False, seed=0,
         return params, losses
 
     accs = []
-    cur_spec = spec
     for rnd in range(rounds):
-        if failure_plan is not None:
-            mask = failure_plan.alive_mask(rnd)
-            cur_spec = failures.alive_adjusted_spec(spec, mask)
         b = batcher.round_batches(rnd)
         batches = {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
         params, _ = round_fn(params, batches, None)
-        params = gossip.mix_schedules(params, cur_spec)
+        if failure_plan is not None:
+            # alive-as-data masked engine round (alive_adjusted_spec is
+            # deprecated — it rebakes the spec, i.e. a retrace per mask)
+            alive = jnp.asarray(failure_plan.alive_mask(rnd), jnp.float32)
+            params = gossip.mix_packed_stacked(params, spec, alive=alive)
+        else:
+            params = gossip.mix_schedules(params, spec)
         p0 = jax.tree.map(lambda x: x[0], params)
         _, aux = mlp.loss_fn(p0, {"x": jnp.asarray(te.x), "y": jnp.asarray(te.y)})
         accs.append(float(aux["acc"]))
