@@ -104,8 +104,66 @@ def run(n: int = 32, dim: int = 1 << 16, rounds: int = 30,
             "families": rows}
 
 
-def main(rounds: int = 30, out_dir: str | None = "experiments/bench") -> None:
+# sparse-schedule families only: at O(10^3-10^4) clients the dense-matrix
+# baselines (complete / erdos_renyi / onepeer_exp) would measure an (n, n)
+# matmul, not the overlay engine; random_regular duplicates expander's cell
+SCALE_SWEEP: tuple[tuple[str, int], ...] = (
+    ("ring", 2),
+    ("torus", 4),
+    ("hypercube", 0),
+    ("expander", 4),
+    ("expander", 6),
+)
+
+
+def run_scale(n: int = 4096, dim: int = 512, rounds: int = 5,
+              seed: int = 0) -> dict:
+    """The massive-client Pareto: spectral gap vs executed rounds/sec at
+    O(10^3-10^4) clients on the stacked substrate (single host; the blocked
+    cell's cross-device cost at this n is bench_scale's job). The per-client
+    slice packs with block_rows=8, shrinking the Pallas-tile padding floor
+    so 4096 tiny clients stay a few MB of state."""
+    from repro.core import packing
+
+    r = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(r.standard_normal((n, dim)) * 0.02,
+                               jnp.float32)}
+    pack = packing.make_stacked_pack_spec(params, block_rows=8)
+    rows = []
+    for family, degree in SCALE_SWEEP:
+        overlay, meta = registry.build(family, n, degree=max(degree, 2),
+                                       seed=seed)
+        spec = gossip.make_gossip_spec(overlay)
+        n_traces = [0]
+
+        @jax.jit
+        def mix(p, gates, spec=spec):
+            n_traces[0] += 1
+            return gossip.mix_packed_stacked(p, spec, gates=gates,
+                                             pack_spec=pack)
+
+        ones = lambda rnd: jnp.ones(spec.degree, jnp.float32)
+        dt = _time_rounds(mix, params, ones, rounds)
+        assert n_traces[0] == 1, (family, n_traces)
+
+        label = (f"{family}-d{degree}" if degree else family)
+        row = dict(meta, label=label,
+                   rounds_per_sec=round(rounds / dt, 3),
+                   n_traces=n_traces[0])
+        rows.append(row)
+        emit(f"overlay_scale/{label}/n{n}", dt * 1e6 / rounds,
+             f"spectral_gap={row['spectral_gap']:.4f};"
+             f"n_schedules={row['n_schedules']};"
+             f"rounds_per_sec={row['rounds_per_sec']};"
+             f"mixing_time={row['mixing_time_1e3']:.1f}")
+    return {"n": n, "dim": dim, "rounds": rounds, "families": rows}
+
+
+def main(rounds: int = 30, out_dir: str | None = "experiments/bench",
+         scale: bool = False, scale_n: int = 4096) -> None:
     rec = run(rounds=rounds)
+    if scale:
+        rec["scale"] = run_scale(n=scale_n)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, "overlay.json"), "w") as f:
@@ -116,5 +174,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--out", default="experiments/bench")
+    ap.add_argument("--scale", action="store_true",
+                    help="add the massive-client Pareto (n=4096) to the record")
+    ap.add_argument("--scale-n", type=int, default=4096)
     args = ap.parse_args()
-    main(rounds=args.rounds, out_dir=args.out)
+    main(rounds=args.rounds, out_dir=args.out, scale=args.scale,
+         scale_n=args.scale_n)

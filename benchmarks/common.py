@@ -75,8 +75,8 @@ def run_dfl(params, loss_fn, batch_fn, mixer, rounds: int, dcfg,
         if failure_plan is not None:
             mask = failure_plan.alive_mask(rnd)
             if isinstance(mixer, gossip.GossipSpec):
-                # alive-as-data masked engine round (alive_adjusted_spec is
-                # deprecated: it bakes the mask into the spec)
+                # alive-as-data masked engine round (the mask is a traced
+                # argument, never baked into the spec)
                 params = gossip.mix_packed_stacked(
                     params, mixer, alive=jnp.asarray(mask, jnp.float32))
                 cur = None

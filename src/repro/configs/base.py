@@ -242,6 +242,17 @@ class DFLConfig:
     round_plan: str = "static"
     plan_k: int = 1
     plan_fraction: float = 0.5
+    # round-level client subsampling (repro.overlay.plan.ActiveSetPlan):
+    # per-client participation vector shipped into the jitted step as
+    # donated data next to alive/gates — "full" (everyone, signature
+    # unchanged), "random_k" (active_k clients/round), "shards"
+    # (round-robin over active_shards cohorts), "stratified" (active_k
+    # spread over active_shards strata). Inactive clients keep their params
+    # (identity rows) and never count as stragglers: the active set
+    # multiplies the alive mask but stays invisible to HealthTracker.
+    active_set: str = "full"
+    active_k: int = 1
+    active_shards: int = 2
     # elastic runtime (launch/elastic.py): heartbeat thresholds. A client
     # missing `straggler_rounds` heartbeats is masked out of gossip for the
     # round (alive-mask step argument — zero recompiles); one missing

@@ -28,8 +28,14 @@ The engine factors the round into:
 * **substrate** — where the round runs: ``"shard_map"`` (the production
   ppermute island: d collectives/round over the client mesh axes),
   ``"stacked"`` (the single-device simulator: gathers on a stacked client
-  axis — the elastic runtime's path), ``"per_leaf"`` (the d x n_leaves
-  ppermute baseline), or ``"dense"`` (the paper-naive mixing einsum).
+  axis — the elastic runtime's path), ``"blocked"`` (the massive-client
+  simulator: ``block`` clients per device in the stacked layout *under*
+  shard_map — intra-device edges stay stacked gathers, cross-device edges
+  ship whole per-device wire blocks via the precomputed
+  :class:`~repro.core.gossip.BlockedSpec` partition, so n decouples from
+  the mesh and O(10^4+) clients run on a handful of devices), ``"per_leaf"``
+  (the d x n_leaves ppermute baseline), or ``"dense"`` (the paper-naive
+  mixing einsum).
 * **screen** — Byzantine-robust aggregation of what arrived: ``"none"``
   (trust every payload: the plain weighted reduction), ``"norm_clip"``
   (per-sender squared-norm pass over the packed wire; any received buffer
@@ -76,6 +82,8 @@ __all__ = [
     "CODECS",
     "SCREENS",
     "SUBSTRATES",
+    "DELAY_SUBSTRATES",
+    "SCREEN_SUBSTRATES",
     "LEGACY_GOSSIP_IMPLS",
     "GossipEngineConfig",
     "GossipExecutor",
@@ -86,14 +94,23 @@ __all__ = [
 
 PyTree = Any
 
-SUBSTRATES = ("shard_map", "stacked", "per_leaf", "dense")
+SUBSTRATES = ("shard_map", "stacked", "blocked", "per_leaf", "dense")
 CODECS = ("f32", "int8", "int8_block")
 SCREENS = ("none", "norm_clip", "trimmed_mean")
+# the cells the delay and screen layers are wired for; "blocked" joins when
+# its snapshot-carry and screen-norm passes land (validation names this
+# tuple so every error message enumerates the same cells)
+DELAY_SUBSTRATES = ("shard_map", "stacked")
+SCREEN_SUBSTRATES = ("shard_map", "stacked")
 
 # legacy ParallelConfig.gossip_impl strings -> (substrate, codec). The delay
 # axis rides separately (ParallelConfig.gossip_delay); "ppermute_packed_async"
 # is the only alias that accepts delay=1, and at delay=0 it IS
 # "ppermute_packed" (identical engine config => textually identical HLO).
+# The "blocked" substrate has NO legacy alias on purpose: it is an
+# engine-config-only cell (spell it GossipEngineConfig(substrate="blocked",
+# block=B)) because the production gossip_impl strings all assume one client
+# per device slice, which is exactly the assumption it removes.
 LEGACY_GOSSIP_IMPLS = {
     "dense": ("dense", "f32"),
     "ppermute": ("per_leaf", "f32"),
@@ -109,20 +126,28 @@ class GossipEngineConfig:
     """Static (hashable) engine cell: substrate x codec x timing x screen.
 
     Attributes:
-      substrate: "shard_map" | "stacked" | "per_leaf" | "dense".
+      substrate: "shard_map" | "stacked" | "blocked" | "per_leaf" | "dense".
       codec: "f32" | "int8" (per-buffer scale) | "int8_block" (one scale per
         kernel row-block tile, the tighter default wire format for quant).
-      delay: 0 = synchronous, 1 = pipelined (one-round-delayed snapshot).
+      delay: 0 = synchronous, 1 = pipelined (one-round-delayed snapshot;
+        shard_map | stacked only — see DELAY_SUBSTRATES).
       mix_impl: kernel implementation knob threaded to the fused
         gossip_mix / quant kernels ("auto" | "pallas" | "pallas_interpret" |
         "ref").
       screen: Byzantine screen over received payloads — "none" |
-        "norm_clip" | "trimmed_mean" (packed substrates only; see module
-        docstring for the exact semantics of each).
+        "norm_clip" | "trimmed_mean" (shard_map | stacked only — see
+        SCREEN_SUBSTRATES; module docstring has the exact semantics).
       clip_tau: norm_clip threshold — a received buffer is rescaled when
         its norm exceeds ``clip_tau x`` the receiver's own norm.
       trim_f: trimmed_mean per-side drop count (clamped per coordinate so
         at least one live value always survives; 0 = renormalized mean).
+      block: B, simulated clients per device — required (>= 1, dividing
+        ``n_clients``) on the "blocked" substrate, must stay 0 elsewhere.
+        The blocked cell runs the stacked gather/einsum round on a
+        device-local ``(B, ...)`` slice under shard_map; cross-device
+        schedule edges ship whole per-device wire blocks via the
+        :class:`~repro.core.gossip.BlockedSpec` partition baked at build
+        time, so an intra-heavy placement pays almost no wire.
     """
 
     substrate: str = "shard_map"
@@ -132,6 +157,7 @@ class GossipEngineConfig:
     screen: str = "none"
     clip_tau: float = 3.0
     trim_f: int = 1
+    block: int = 0
 
     def __post_init__(self):
         if self.substrate not in SUBSTRATES:
@@ -142,9 +168,13 @@ class GossipEngineConfig:
                              f"available: {', '.join(CODECS)}")
         if self.delay not in (0, 1):
             raise ValueError(f"delay must be 0 or 1, got {self.delay}")
-        if self.delay and self.substrate not in ("shard_map", "stacked"):
-            raise ValueError("pipelined (delay=1) gossip needs a packed "
-                             f"substrate, got {self.substrate!r}")
+        if self.delay and self.substrate not in DELAY_SUBSTRATES:
+            raise ValueError(
+                "pipelined (delay=1) gossip runs on the "
+                f"{' | '.join(DELAY_SUBSTRATES)} substrates, got "
+                f"{self.substrate!r}"
+                + (" (the blocked cell is not wired for a carried snapshot "
+                   "yet)" if self.substrate == "blocked" else ""))
         if self.substrate == "per_leaf" and self.codec == "int8_block":
             raise ValueError("per-leaf payloads are not tile-aligned; use "
                              "codec='int8' for the per-leaf baseline")
@@ -154,11 +184,22 @@ class GossipEngineConfig:
         if self.screen not in SCREENS:
             raise ValueError(f"unknown screen {self.screen!r}; "
                              f"available: {', '.join(SCREENS)}")
-        if self.screen != "none" and self.substrate not in ("shard_map",
-                                                            "stacked"):
-            raise ValueError("Byzantine screens run on the packed "
-                             "substrates (shard_map | stacked), got "
-                             f"{self.substrate!r}")
+        if self.screen != "none" and self.substrate not in SCREEN_SUBSTRATES:
+            raise ValueError(
+                f"screen={self.screen!r} runs on the "
+                f"{' | '.join(SCREEN_SUBSTRATES)} substrates, got "
+                f"{self.substrate!r}"
+                + (" (the blocked cell is not wired for screens yet)"
+                   if self.substrate == "blocked" else ""))
+        if self.substrate == "blocked":
+            if self.block < 1:
+                raise ValueError(
+                    "the blocked substrate needs block >= 1 (simulated "
+                    f"clients per device), got block={self.block}")
+        elif self.block:
+            raise ValueError(
+                "block is a 'blocked'-substrate knob; substrate "
+                f"{self.substrate!r} keeps block=0, got block={self.block}")
         if self.clip_tau <= 0:
             raise ValueError(f"clip_tau must be > 0, got {self.clip_tau}")
         if self.trim_f < 0:
@@ -433,16 +474,22 @@ class GossipExecutor:
       of the previous round (prime it with :meth:`init_state`).
 
     ``tree`` is the client-local shard pytree on the ``shard_map`` /
-    ``per_leaf`` substrates (call inside the island) and the client-stacked
-    pytree on ``stacked`` / ``dense``. ``alive`` / ``gates`` are traced
-    data on the packed substrates (``per_leaf`` and ``dense``-with-gates
-    follow the legacy conventions: per-leaf ignores both).
+    ``per_leaf`` substrates (call inside the island), the client-stacked
+    pytree on ``stacked`` / ``dense``, and the device-local ``(block, ...)``
+    stacked slice on ``blocked`` (call inside the island over a 1-D client
+    device axis; a ``P(axis)`` sharding of the stacked tree IS that slice).
+    ``alive`` / ``gates`` are traced data on the packed substrates — on
+    ``blocked`` they stay full-length replicated ``(n,)`` / ``(S,)``
+    vectors, the executor slices its own device's rows (``per_leaf`` and
+    ``dense``-with-gates follow the legacy conventions: per-leaf ignores
+    both).
     """
 
     config: GossipEngineConfig
     spec: GossipSpec
     axis_names: Any = None
     pack_spec: packing.PackSpec | None = None
+    blocked: gossip.BlockedSpec | None = None
 
     @property
     def delayed(self) -> bool:
@@ -469,6 +516,8 @@ class GossipExecutor:
             return self._per_leaf_round(tree)
         if cfg.substrate == "stacked":
             return self._stacked_round(tree, state, alive, gates, with_stats)
+        if cfg.substrate == "blocked":
+            return self._blocked_round(tree, alive, gates)
         return self._shard_map_round(tree, state, alive, gates)
 
     # ------------------------------------------------- pipelined state
@@ -665,6 +714,10 @@ class GossipExecutor:
         from repro.kernels.gossip_mix import ops as mix_ops
 
         cfg, codec, spec = self.config, self.codec, self.spec
+        if cfg.screen == "norm_clip" and cfg.codec != "f32":
+            return self._stacked_round_clipped_quant(tree, state, alive,
+                                                     gates, pack_spec,
+                                                     with_stats)
         gathers = [jnp.asarray(rf) for rf in spec.recv_from]
         fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
         srcs, new_state = [], []
@@ -745,6 +798,143 @@ class GossipExecutor:
             ret = ret + (stats,)
         return ret[0] if len(ret) == 1 else ret
 
+    def _stacked_round_clipped_quant(self, tree, state, alive, gates,
+                                     pack_spec, with_stats):
+        """Fused quantized norm_clip on the stacked substrate: the int8
+        wires are GATHERED, never decoded — the clip norms come straight off
+        the wire (``wire_sqnorm``: per-block sum(q^2) x scale^2, exact for
+        what the mix would dequantize) and each receiver folds its received
+        wires through the same per-wire fused ``dequant_accumulate_2d``
+        pass the shard_map cell uses, with the clip riding the per-sender
+        weight operand. One arithmetic path for the quantized norm_clip
+        screen across both packed substrates; only trimmed_mean still
+        decodes-then-gathers here (its order statistics need the whole
+        dequantized stack — see the ROADMAP design record)."""
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        cfg, codec, spec = self.config, self.codec, self.spec
+        gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+        fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        wires, new_state = [], []
+        s2 = jnp.zeros((spec.n_clients,), jnp.float32)
+        r2 = jnp.zeros((spec.n_clients,), jnp.float32)
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+
+            def enc(x, n_blocks=n_blocks):
+                return codec.encode(x, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+
+            wire = state[b] if cfg.delay else jax.vmap(enc)(buf)
+            wires.append(wire)
+            if cfg.delay:
+                new_state.append(jax.vmap(enc)(buf))
+            s2 = s2 + jax.vmap(lambda x: jnp.sum(mix_ops.packed_sqnorms(
+                x, block_rows=pack_spec.block_rows,
+                impl=cfg.mix_impl)))(buf)
+            r2 = r2 + jax.vmap(
+                lambda x, n_blocks=n_blocks: codec.wire_sqnorm(
+                    x, n_blocks=n_blocks, block_rows=pack_spec.block_rows,
+                    impl=cfg.mix_impl))(wire)
+        lim = jnp.float32(cfg.clip_tau) ** 2 * s2                    # (n,)
+        clip = (jnp.stack([_clip_factors(r2[g], lim) for g in gathers],
+                          axis=1)
+                if gathers else jnp.zeros((spec.n_clients, 0), jnp.float32))
+        # pre-renormalization tables: codec.reduce applies the same
+        # per-client renorm + dead-self identity fallback as the shard_map
+        # cell (fixed points stay invisible through the contrib zeros)
+        raw, contrib = gossip.raw_contrib_tables(spec, alive, gates)
+        stats = None
+        if with_stats:
+            w = gossip.alive_weight_table(spec, alive, gates)
+            counts = jnp.zeros(spec.n_clients, jnp.int32)
+            for s, g in enumerate(gathers):
+                flag = ((clip[:, s] < 1.0)
+                        & (w[:, 1 + s] > 0.0)).astype(jnp.int32)
+                counts = counts.at[g].add(flag)
+            stats = {"clipped": counts}
+        out_bufs = []
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+            recv = [jnp.take(wires[b], g, axis=0) for g in gathers]
+
+            def red(fb, rw, cv, cl, *rs, n_blocks=n_blocks):
+                return codec.reduce(
+                    fb, list(rs), rw, cv,
+                    edge_weight=float(spec.edge_weight), n_blocks=n_blocks,
+                    block_rows=pack_spec.block_rows, impl=cfg.mix_impl,
+                    sender_scale=cl)
+
+            out_bufs.append(jax.vmap(red)(buf, raw, contrib, clip, *recv)
+                            .astype(buf.dtype))
+        mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
+            tuple(out_bufs))
+        ret = (mixed,)
+        if cfg.delay:
+            ret = ret + (tuple(new_state),)
+        if stats is not None:
+            ret = ret + (stats,)
+        return ret[0] if len(ret) == 1 else ret
+
+    def _blocked_round(self, tree, alive, gates):
+        """The massive-client round: ``tree`` is this device's (block, ...)
+        stacked slice inside a shard_map island over the 1-D client device
+        axis. Intra-block edges are plain stacked gathers; every cross-block
+        partial device permutation in ``self.blocked.transfers`` ships ONE
+        whole (block, rows, 128) wire buffer via ppermute, and each client
+        gathers its source row out of the [local + received] candidate stack
+        through the static ``gather_flat`` table (sliced to this device by
+        ``axis_index``). The final weighted reduction is the stacked
+        substrate's einsum over the device-local rows of the SAME
+        ``alive_weight_table`` — f32 cells are bit-identical to the stacked
+        reference on the same overlay, and alive / active-set / gate churn
+        stays plain data."""
+        cfg, codec, spec = self.config, self.codec, self.spec
+        bs = self.blocked
+        pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
+        b_sz = bs.block
+        row0 = gossip._client_index(self.axis_names) * b_sz
+        w = gossip.alive_weight_table(spec, alive, gates)       # (n, S+1)
+        w_local = jax.lax.dynamic_slice(w, (row0, 0), (b_sz, w.shape[1]))
+        idx_tab = jnp.asarray(bs.gather_flat, jnp.int32)        # (S, n)
+        fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        out_bufs = []
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+
+            def enc(x, n_blocks=n_blocks):
+                return codec.encode(x, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+
+            wire = buf if cfg.codec == "f32" else jax.vmap(enc)(buf)
+            # all whole-block permutes issued before any gather so XLA can
+            # overlap the wire; devices outside a partial permutation
+            # receive zeros, which no gather table entry ever points at
+            received = [jax.lax.ppermute(wire, self.axis_names, perm=list(t))
+                        for t in bs.transfers]
+            cand = jnp.concatenate([wire[None]] + [r[None] for r in received],
+                                   axis=0)
+            flat = cand.reshape((bs.n_transfers + 1) * b_sz, *wire.shape[1:])
+            if cfg.codec != "f32":
+                flat = jax.vmap(
+                    lambda x, n_blocks=n_blocks, dtype=buf.dtype:
+                    codec.decode(x, dtype, n_blocks=n_blocks,
+                                 block_rows=pack_spec.block_rows))(flat)
+            srcs = [jnp.take(flat,
+                             jax.lax.dynamic_slice(idx_tab[s], (row0,),
+                                                   (b_sz,)), axis=0)
+                    for s in range(spec.degree)]
+            # self row stays the FRESH full-precision buffer; only the
+            # gathered neighbor rows go through the codec wire
+            stack = jnp.stack([buf] + srcs, axis=1)  # (B, S+1, rows, 128)
+            out = jnp.einsum("bk,bk...->b...", w_local,
+                             stack.astype(jnp.float32))
+            out_bufs.append(out.astype(buf.dtype))
+        return jax.vmap(lambda bso: packing.unpack_tree(bso, pack_spec))(
+            tuple(out_bufs))
+
     def _per_leaf_round(self, tree):
         cfg, codec, spec = self.config, self.codec, self.spec
         idx = gossip._client_index(self.axis_names)
@@ -775,14 +965,21 @@ def build_gossip_executor(config: GossipEngineConfig, spec: GossipSpec, *,
     """Assemble one gossip executor from an engine cell.
 
     ``axis_names`` names the client mesh axis/axes and is required on the
-    ``shard_map`` / ``per_leaf`` substrates (the executor is called inside
-    the fully-manual island); the stacked / dense substrates run on a
-    client-stacked pytree and ignore it. Pass ``pack_spec`` (built
-    host-side from shape structs) to bake the packed layout into the jitted
-    step; it is derived from the tree at call time otherwise.
+    ``shard_map`` / ``per_leaf`` / ``blocked`` substrates (the executor is
+    called inside the fully-manual island; for ``blocked`` the axis indexes
+    DEVICES, each holding ``config.block`` clients); the stacked / dense
+    substrates run on a client-stacked pytree and ignore it. Pass
+    ``pack_spec`` (built host-side from shape structs — the PER-CLIENT
+    slice spec on stacked/blocked) to bake the packed layout into the
+    jitted step; it is derived from the tree at call time otherwise. On
+    ``blocked`` the schedule partition (:func:`gossip.make_blocked_spec`)
+    is baked here, host-side, once per (spec, block).
     """
-    if config.substrate in ("shard_map", "per_leaf") and axis_names is None:
+    if (config.substrate in ("shard_map", "per_leaf", "blocked")
+            and axis_names is None):
         raise ValueError(f"substrate {config.substrate!r} runs inside "
                          "shard_map and needs axis_names")
+    blocked = (gossip.make_blocked_spec(spec, config.block)
+               if config.substrate == "blocked" else None)
     return GossipExecutor(config=config, spec=spec, axis_names=axis_names,
-                          pack_spec=pack_spec)
+                          pack_spec=pack_spec, blocked=blocked)

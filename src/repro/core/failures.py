@@ -8,10 +8,9 @@ Two layers of resilience, matching the paper's protocol:
    engine**: the alive mask is a *traced step argument* consumed by the
    packed executors / fused kernels (`gossip.ppermute_mix_packed(alive=...)`,
    `gossip.mix_packed_stacked`), so straggler churn never re-jits — liveness
-   is data, not trace structure. (`alive_adjusted_spec`, which bakes the mask
-   into a fresh GossipSpec and therefore costs one retrace per straggler-set
-   change, is kept only as a host-side reference for the deprecated
-   schedule-path executors; `mix_dense_masked` is the numerical oracle.)
+   is data, not trace structure (`mix_dense_masked` is the numerical oracle;
+   the old design that baked the mask into a fresh per-round GossipSpec —
+   one retrace per straggler-set change — is gone).
 2. *Permanent* failures: the two-hop splice repair (`Overlay.remove_nodes`)
    rebuilds the schedules; `repair_and_remap` additionally remaps any stacked
    client state so training resumes with the survivors, and returns the
@@ -21,7 +20,6 @@ Two layers of resilience, matching the paper's protocol:
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any
 
 import jax
@@ -38,7 +36,6 @@ __all__ = [
     "apply_attack",
     "sample_attackers",
     "sample_failures",
-    "alive_adjusted_spec",
     "repair_and_remap",
     "HealthTracker",
 ]
@@ -171,56 +168,6 @@ def apply_attack(tree: PyTree, attack: jax.Array,
         out.append((scale.reshape(bshape) * leaf.astype(jnp.float32)
                     + noise.reshape(bshape) * eps).astype(leaf.dtype))
     return jax.tree.unflatten(treedef, out)
-
-
-def alive_adjusted_spec(spec: gossip_lib.GossipSpec,
-                        alive: np.ndarray) -> gossip_lib.GossipSpec:
-    """Rebuild a GossipSpec for one round with some clients down (straggler path).
-
-    .. deprecated::
-        Baking the mask into a fresh spec costs one retrace per
-        straggler-set change. Pass the mask as traced step data instead —
-        ``gossip.mix_packed_stacked(tree, spec, alive=...)`` /
-        ``executor(tree, alive=...)`` — which is both retrace-free and the
-        path every engine cell (codec x timing x substrate x screen)
-        actually exercises. This host-side rebuild is kept only as a
-        reference for offline spectral checks.
-
-    Dead clients are turned into fixed points of every schedule (they neither
-    send nor receive); each surviving client renormalizes its weights over its
-    alive in-neighborhood so rows still sum to 1. Symmetry is preserved because
-    schedules stay closed under inverse after fixing the same points.
-    """
-    warnings.warn(
-        "alive_adjusted_spec is deprecated: pass the alive mask as traced "
-        "data (engine executors / mix_packed_stacked(alive=...)) instead of "
-        "baking it into a per-round spec (one retrace per straggler set)",
-        DeprecationWarning, stacklevel=2)
-    alive = np.asarray(alive).astype(bool)
-    n = spec.n_clients
-    new_perms = []
-    new_recv = []
-    in_weight = np.full(n, 0.0)
-    for rf in spec.recv_from:
-        rf = np.asarray(rf)
-        keep = alive & alive[rf] & (rf != np.arange(n))
-        pairs = tuple((int(rf[i]), int(i)) for i in range(n) if keep[i])
-        new_perms.append(pairs)
-        new_recv.append(tuple(int(rf[i]) if keep[i] else int(i) for i in range(n)))
-        in_weight += keep.astype(np.float64) * spec.edge_weight
-    base_self = np.asarray(spec.self_weights)
-    # lost weight folded into self; then renormalize (rows already sum to 1 by
-    # construction, but folding keeps it explicit and robust to fixed points)
-    new_self = 1.0 - in_weight
-    new_self = np.where(alive, new_self, 1.0)
-    return gossip_lib.GossipSpec(
-        n_clients=n,
-        perms=tuple(new_perms),
-        recv_from=tuple(new_recv),
-        self_weights=tuple(float(x) for x in new_self),
-        edge_weight=spec.edge_weight,
-        lam=spec.lam,  # stale; exact lam of the masked matrix is reported offline
-    )
 
 
 def repair_and_remap(overlay: Overlay, dead: list[int],

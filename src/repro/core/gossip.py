@@ -72,6 +72,8 @@ from repro.core.topology import Overlay
 __all__ = [
     "GossipSpec",
     "make_gossip_spec",
+    "BlockedSpec",
+    "make_blocked_spec",
     "alive_weight_table",
     "raw_contrib_tables",
     "gated_mixing_matrix",
@@ -169,6 +171,113 @@ def make_gossip_spec(overlay: Overlay, theta: float | None = None) -> GossipSpec
         self_weights=self_w,
         edge_weight=float(w.edge_weight),
         lam=float(w.lam),
+    )
+
+
+# ---------------------------------------------------- blocked schedule split
+@dataclasses.dataclass(frozen=True)
+class BlockedSpec:
+    """Static plan for the ``blocked`` substrate: n = n_devices x block
+    clients, client ``i`` living on device ``i // block`` at stacked row
+    ``i % block`` (hashable => usable as a jit static arg).
+
+    Each overlay schedule is partitioned at build time into its intra-block
+    part (a gather on the device-local stacked axis — free) and its
+    cross-block part. A cross-block schedule's device-level demand graph
+    ("device d needs device s's wire block") decomposes into *partial device
+    permutations*; each becomes ONE ``ppermute`` of the whole per-device
+    ``(block, rows, 128)`` wire buffer. The unit of transfer is the block,
+    not the client: a schedule whose cross edges touch one neighbor device
+    costs exactly one collective regardless of how many of its B clients
+    cross (on a 2-device mesh every cross schedule is a single swap, so the
+    collective count in HLO equals the number of cross-block schedules).
+
+    Attributes:
+      block: B, clients per device.
+      n_devices: n_clients // block.
+      transfers: flat tuple over ALL schedules' partial permutations —
+        ``transfers[t]`` is the ppermute pair list ``((src_dev, dst_dev),
+        ...)``. Not deduplicated across schedules (XLA CSE merges identical
+        ppermutes of the same wire post-lowering; keeping them per-schedule
+        keeps the slot bookkeeping local).
+      schedule_transfers: per schedule, the global transfer ids it owns
+        (empty for intra-block schedules).
+      gather_flat: (S, n) int: for schedule s and client i, the flat index
+        ``slot * block + src_row`` into the candidate stack
+        ``concat([local_wire] + received_wires)`` reshaped to
+        ``((T+1) * block, rows, 128)`` — slot 0 is the device's own wire,
+        slot t+1 the block received by global transfer t.
+    """
+
+    block: int
+    n_devices: int
+    transfers: tuple[tuple[tuple[int, int], ...], ...]
+    schedule_transfers: tuple[tuple[int, ...], ...]
+    gather_flat: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_transfers(self) -> int:
+        return len(self.transfers)
+
+    @property
+    def cross_schedules(self) -> int:
+        """How many schedules have at least one cross-block edge."""
+        return sum(1 for t in self.schedule_transfers if t)
+
+
+def _partition_demand(edges: list[tuple[int, int]]
+                      ) -> list[tuple[tuple[int, int], ...]]:
+    """Greedy split of a device-level demand edge set into partial
+    permutations (no device sends or receives twice within one part)."""
+    parts: list[list[tuple[int, int]]] = []
+    for s, d in sorted(edges):
+        for part in parts:
+            if all(s != ps and d != pd for ps, pd in part):
+                part.append((s, d))
+                break
+        else:
+            parts.append([(s, d)])
+    return [tuple(p) for p in parts]
+
+
+def make_blocked_spec(spec: GossipSpec, block: int) -> BlockedSpec:
+    """Partition a GossipSpec's schedules for B-clients-per-device execution.
+
+    Host-side, O(S * n). Requires ``block`` to divide ``n_clients``; the
+    resulting plan assumes row-major client placement (client i on device
+    ``i // block``), which is what a ``P("clients")`` sharding of the stacked
+    axis produces under shard_map.
+    """
+    n, b = spec.n_clients, int(block)
+    if b < 1 or n % b:
+        raise ValueError(
+            f"blocked substrate needs block >= 1 dividing n_clients; got "
+            f"block={block} for n_clients={n}")
+    transfers: list[tuple[tuple[int, int], ...]] = []
+    schedule_transfers: list[tuple[int, ...]] = []
+    gather_flat: list[tuple[int, ...]] = []
+    for rf in spec.recv_from:
+        demand = sorted({(src // b, i // b)
+                         for i, src in enumerate(rf) if src // b != i // b})
+        parts = _partition_demand(list(demand))
+        ids = tuple(range(len(transfers), len(transfers) + len(parts)))
+        # slot of each cross (src_dev, dst_dev) pair within THIS schedule
+        slot_of = {pair: 1 + ids[t] for t, part in enumerate(parts)
+                   for pair in part}
+        row = []
+        for i, src in enumerate(rf):
+            pair = (src // b, i // b)
+            slot = 0 if pair[0] == pair[1] else slot_of[pair]
+            row.append(slot * b + src % b)
+        transfers.extend(parts)
+        schedule_transfers.append(ids)
+        gather_flat.append(tuple(row))
+    return BlockedSpec(
+        block=b,
+        n_devices=n // b,
+        transfers=tuple(transfers),
+        schedule_transfers=tuple(schedule_transfers),
+        gather_flat=tuple(gather_flat),
     )
 
 
@@ -444,8 +553,7 @@ def mix_packed_stacked(tree: PyTree, spec: GossipSpec,
 
 def _stacked_pack_spec(tree: PyTree) -> packing.PackSpec:
     """PackSpec of the client-stacked tree's per-client slice."""
-    return packing.make_pack_spec(jax.tree.map(
-        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree))
+    return packing.make_stacked_pack_spec(tree)
 
 
 def pack_state_stacked(tree: PyTree,

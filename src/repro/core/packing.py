@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["LANE", "PACK_BLOCK_ROWS", "SCALE_BYTES", "LeafSlot", "PackSpec",
-           "make_pack_spec", "pack_tree", "unpack_tree", "scale_rows"]
+           "make_pack_spec", "make_stacked_pack_spec", "pack_tree",
+           "unpack_tree", "scale_rows"]
 
 PyTree = Any
 
@@ -126,6 +127,26 @@ class PackSpec:
     def padded_bytes(self) -> int:
         return sum(r * LANE * jnp.dtype(d).itemsize
                    for r, d in zip(self.buffer_rows, self.buffer_dtypes))
+
+
+def make_stacked_pack_spec(tree: PyTree, *,
+                           block_rows: int = PACK_BLOCK_ROWS) -> PackSpec:
+    """PackSpec of a CLIENT-STACKED tree's per-client slice (leading axis =
+    clients, stripped before packing). This is the layout shared by the
+    stacked and blocked engine substrates: one ``(n, rows, 128)`` (or
+    ``(B, rows, 128)`` device-local under ``blocked``) buffer per dtype, the
+    per-client slice packed identically everywhere — which is why a splice
+    repair remaps blocked state by the same old2new row take as stacked
+    state, and why blocked-vs-stacked parity is bitwise for f32 cells.
+
+    ``block_rows`` tunes the per-client padding floor: the default matches
+    the Pallas kernels' tile, but f32 simulator cells at O(10^4) clients use
+    no kernels and may pick a smaller multiple-of-8 block so 4096 tiny
+    clients don't pad to 4096 x 256 rows (see benchmarks/bench_scale.py).
+    """
+    return make_pack_spec(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree),
+        block_rows=block_rows)
 
 
 def make_pack_spec(tree: PyTree, *, block_rows: int = PACK_BLOCK_ROWS

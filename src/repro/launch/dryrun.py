@@ -61,8 +61,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 params_lib.shape_structs(setup.param_struct),
                 setup.input_specs["batch"], setup.input_specs["lr"],
                 setup.input_specs["alive"], setup.input_specs["gates"]]
-            if "inflight" in setup.input_specs:  # pipelined gossip state
-                step_args.append(setup.input_specs["inflight"])
+            # optional operands, in the step's fixed extra order
+            for name in ("active", "attack", "attack_key", "inflight"):
+                if name in setup.input_specs:
+                    step_args.append(setup.input_specs[name])
             lowered = setup.step_fn.lower(*step_args)
             extra = {
                 "n_clients": setup.n_clients,

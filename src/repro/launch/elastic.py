@@ -20,8 +20,8 @@ Built on the **packed gossip engine** — the only failure-handling path:
     re-jits **exactly once per membership change**;
   * if the process itself died, training resumes from the latest checkpoint.
 
-Why alive-as-argument: baking the straggler set into the GossipSpec (the old
-``alive_adjusted_spec`` design) made liveness part of the traced graph — a
+Why alive-as-argument: baking the straggler set into the GossipSpec (the
+removed PR-2-era design) made liveness part of the traced graph — a
 fresh `jax.jit` trace per straggler-set change, i.e. potentially per round.
 Passing the mask as data moves the renormalization into the (already fused)
 mixing reduction, whose cost is a handful of scalar ops per tile.
@@ -49,6 +49,29 @@ and plans are data, membership changes re-jit once. With
 quantized engine composition: the carried snapshot IS the int8 wire buffer
 (4x smaller state, same remap), and the same accounting holds.
 
+Round-level **active-set subsampling** (``active_plan``, an
+:class:`repro.overlay.plan.ActiveSetPlan`) rides the same alive-as-data
+mechanism from the other side: each round the plan's 0/1 participation
+vector multiplies the health mask *before* it ships, so an inactive client
+is mixed exactly like a straggler (identity row, neighbors renormalize) —
+but the product never feeds the :class:`HealthTracker`. Resting is not
+failing: a client outside the cohort must not accumulate missed heartbeats,
+start counting toward eviction, or perturb quarantine telemetry. Cohort
+rotation over any number of rounds reuses the one executable (the vector is
+data), and composes with straggler churn, gates, attacks, and splice repair
+unchanged.
+
+The **blocked substrate** (``gossip_block=B > 0``) decouples the simulated
+client count from the device count: each of the n/B devices holds a
+(B, ...) stacked slice of the client axis, intra-device overlay edges are
+plain stacked gathers, and the cross-device part of each schedule ships as
+whole-block ``ppermute`` collectives (see `repro.core.gossip.BlockedSpec`).
+Splice repair under a blocked layout only fires when the survivor count
+stays a multiple of B (the layout invariant); otherwise the dead are
+**permanently masked** instead — identity rows forever, zero re-jits —
+and the splice retries at the next death that restores divisibility
+(``repairs`` records which path ran via its ``spliced`` flag).
+
 The default step builder runs the stacked simulator round
 (`gossip.mix_packed_stacked`: vmapped local DFedAvgM + packed gather-mix on
 one device); pass ``step_builder`` to drop in the production shard_map step
@@ -64,13 +87,15 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.core import dfedavg, engine as engine_lib, failures as failures_lib, \
     gossip as gossip_lib
 from repro.core.topology import Overlay
+from repro.launch import mesh as mesh_lib
 from repro.overlay import plan as plan_lib
-from repro.overlay.plan import RoundPlan
+from repro.overlay.plan import ActiveSetPlan, RoundPlan
 
 PyTree = Any
 
@@ -93,6 +118,16 @@ class ElasticTrainer:
     failure_rounds: int = 3
     step_builder: StepBuilder | None = None
     plan: RoundPlan | None = None  # time-varying round plan (gate source)
+    # round-level client subsampling (repro.overlay.plan active-set plans):
+    # the plan's 0/1 participation vector multiplies the health mask each
+    # round — an inactive client is mixed like a straggler but NEVER feeds
+    # the HealthTracker (resting is not failing). None/"full" = everyone.
+    active_plan: ActiveSetPlan | None = None
+    # B > 0 = blocked substrate: n/B devices each hold a (B, ...) stacked
+    # client slice; intra-device edges are stacked gathers, cross-device
+    # schedule parts ship as whole-block ppermutes (gossip.BlockedSpec).
+    # 0 = single-device stacked round (unchanged path).
+    gossip_block: int = 0
     # 1 = pipelined gossip: each round mixes the PREVIOUS round's packed
     # snapshot (mix_dense_delayed semantics) and the snapshot is carried as
     # trainer state — see _inflight. 0 = synchronous (unchanged path).
@@ -149,6 +184,20 @@ class ElasticTrainer:
                              "thread them itself (launch.steps supports "
                              "gossip_screen via ParallelConfig and attacks "
                              "via DFLConfig.byzantine)")
+        if self.gossip_block:
+            if self.gossip_block < 0 or self.overlay.n % self.gossip_block:
+                raise ValueError(
+                    f"gossip_block={self.gossip_block} must be a positive "
+                    f"divisor of the client count {self.overlay.n}")
+            n_dev = self.overlay.n // self.gossip_block
+            if n_dev > len(jax.devices()):
+                raise ValueError(
+                    f"blocked layout needs {n_dev} devices (= n/block), "
+                    f"only {len(jax.devices())} visible")
+            if self.step_builder is not None:
+                raise ValueError("gossip_block composes with the built-in "
+                                 "round only; a custom step_builder owns "
+                                 "its own substrate")
         if self.gossip_delay and self.step_builder is not None:
             # the production pipelined step threads its own in-flight state
             # (mesh-leading-dims layout, primed via TrainSetup.init_inflight)
@@ -171,6 +220,9 @@ class ElasticTrainer:
         # current-index -> original-attack-plan-column map, compacted on
         # every splice repair so attackers keep their script across repairs
         self._attack_cols = np.arange(self.overlay.n)
+        # blocked layout: dead clients that could not be spliced out without
+        # stranding a partial device block — gossip-masked forever instead
+        self._masked: set[int] = set()
         # delayed mode's in-flight snapshot (pack_state_stacked of last
         # round's post-local-step params); primed lazily at the first step
         # so round 0 mixes the caller's initial params
@@ -198,6 +250,49 @@ class ElasticTrainer:
         # the operands themselves (attack vector, PRNG key) are traced data
         use_attack = self.attack_plan is not None
         with_stats = self.gossip_screen == "norm_clip"
+
+        def client(p, b, lr):
+            v = jax.tree.map(jnp.zeros_like, p)
+            p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
+                                             self.dcfg, lr=lr)
+            return p, loss
+
+        if self.gossip_block:
+            # blocked substrate: the gossip island is a fully-manual
+            # shard_map over a 1-D client-device mesh (n/B devices, each
+            # holding a (B, ...) stacked slice). The local phase + attack
+            # run on the GSPMD-sharded full stack; only the mixing round is
+            # manual. delay=1 / screens on blocked are rejected by the
+            # engine config itself (the satellite error messages).
+            b_sz = self.gossip_block
+            mesh = Mesh(np.asarray(jax.devices()[:spec.n_clients // b_sz]),
+                        ("clients",))
+            self._gossip_mesh = mesh  # repair re-places state onto this
+            self._executor = engine_lib.build_gossip_executor(
+                engine_lib.GossipEngineConfig(
+                    substrate="blocked", codec=self.gossip_codec,
+                    delay=self.gossip_delay, screen=self.gossip_screen,
+                    clip_tau=self.screen_tau, trim_f=self.screen_trim,
+                    block=b_sz), spec, axis_names="clients")
+            executor = self._executor
+
+            def round_fn(params, batches, lr, alive, gates, attack, akey):
+                self.n_traces += 1  # python side effect: runs only on trace
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+
+                def island(p, alive_vec, gate_vec):
+                    return executor(p, alive=alive_vec,
+                                    gates=gate_vec if use_plan else None)
+
+                params = mesh_lib.shard_map(
+                    island, mesh, in_specs=(P("clients"), P(), P()),
+                    out_specs=P("clients"))(params, alive, gates)
+                return params, losses, None
+            return jax.jit(round_fn)
+
         self._executor = engine_lib.build_gossip_executor(
             engine_lib.GossipEngineConfig(substrate="stacked",
                                           codec=self.gossip_codec,
@@ -206,12 +301,6 @@ class ElasticTrainer:
                                           clip_tau=self.screen_tau,
                                           trim_f=self.screen_trim), spec)
         executor = self._executor
-
-        def client(p, b, lr):
-            v = jax.tree.map(jnp.zeros_like, p)
-            p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
-                                             self.dcfg, lr=lr)
-            return p, loss
 
         if self.gossip_delay:
             def round_fn(params, inflight, batches, lr, alive, gates,
@@ -249,6 +338,11 @@ class ElasticTrainer:
         return jnp.asarray(plan_lib.gates_for(self.plan, rnd,
                                               self.spec.degree))
 
+    def active_for_round(self, rnd: int | None = None) -> np.ndarray:
+        """This round's 0/1 participation vector (all-ones without a plan)."""
+        rnd = self.round_no if rnd is None else rnd
+        return plan_lib.active_for(self.active_plan, rnd, self.overlay.n)
+
     @property
     def n_clients(self) -> int:
         return self.overlay.n
@@ -275,8 +369,23 @@ class ElasticTrainer:
         :meth:`step` simply ships a different alive vector.
         """
         self.health.observe(alive)
-        dead = self.health.dead()
-        if not len(dead):
+        dead = [int(d) for d in self.health.dead()
+                if int(d) not in self._masked]
+        if not dead:
+            return params, client_state, None
+
+        evict = sorted(self._masked | set(dead))
+        if self.gossip_block and (self.overlay.n - len(evict)) \
+                % self.gossip_block:
+            # blocked layout invariant: the survivor count must stay a
+            # multiple of block, or the splice would strand a partial
+            # device slice. Mask the dead permanently instead (identity
+            # rows forever, no re-jit) and retry the splice at the next
+            # death that restores divisibility.
+            self._masked.update(dead)
+            self.repairs.append({"dead": dead, "spliced": False,
+                                 "masked": sorted(self._masked),
+                                 "n_after": self.overlay.n})
             return params, client_state, None
 
         # the in-flight snapshot rides the same remap as params: its layout
@@ -285,13 +394,13 @@ class ElasticTrainer:
         # survivors' next round still mixes the survivors' last snapshot
         bundle = (params, client_state, self._inflight)
         self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
-            self.overlay, list(dead), bundle)
+            self.overlay, evict, bundle)
         params, client_state, self._inflight = bundle
         suspects = set(int(s) for s in self.health.suspects())
-        self.repairs.append({"dead": [int(d) for d in dead],
-                             "quarantined": sorted(suspects
-                                                   & {int(d) for d in dead}),
+        self.repairs.append({"dead": evict, "spliced": True,
+                             "quarantined": sorted(suspects & set(evict)),
                              "n_after": self.overlay.n})
+        self._masked.clear()
         # attackers keep their plan column across compaction: survivors'
         # current indices shift, their original-plan identity must not
         self._attack_cols = self._attack_cols[np.asarray(old2new) >= 0]
@@ -299,13 +408,35 @@ class ElasticTrainer:
         # compacted indices (a straggling survivor stays a straggler)
         self.health = self.health.remap(old2new)
         self._round = self._build(self.spec)  # the one re-jit per repair
+        if self.gossip_block:
+            # a splice can shrink the blocked mesh (fewer client-devices);
+            # the remapped rows are still committed to the OLD device set,
+            # so re-place them onto the new mesh before the next round
+            sh = NamedSharding(self._gossip_mesh, P("clients"))
+            params = jax.device_put(params, sh)
+            if client_state is not None:
+                client_state = jax.device_put(client_state, sh)
         return params, client_state, old2new
 
     def step(self, params: PyTree, batches: PyTree, lr: float):
-        """Run one round under the current health mask and the round plan's
-        gates (no rebuilds here — both are data arguments). In delayed mode
-        the in-flight snapshot is threaded through as trainer state."""
-        alive = jnp.asarray(self.health.alive_mask())
+        """Run one round under the current health mask, the active-set
+        plan's participation vector, and the round plan's gates (no rebuilds
+        here — all three are data arguments). In delayed mode the in-flight
+        snapshot is threaded through as trainer state."""
+        alive = self.health.alive_mask()
+        if self._masked:
+            # blocked-layout permanent masking: dead-but-unspliceable
+            # clients stay gossip-masked (identity rows) forever
+            alive = alive.copy()
+            alive[sorted(self._masked)] = 0.0
+        if plan_lib.is_subsampling(self.active_plan):
+            # the active set multiplies the GOSSIP mask only — it is
+            # computed here, after the heartbeats were observed, precisely
+            # so it can never feed the HealthTracker (resting != failing)
+            alive = alive * plan_lib.active_for(self.active_plan,
+                                                self.round_no,
+                                                self.overlay.n)
+        alive = jnp.asarray(alive)
         gates = self.gates_for_round()
         attack = akey = None
         if self.attack_plan is not None:

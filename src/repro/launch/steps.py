@@ -114,18 +114,25 @@ def build_overlay(n: int, dfl: DFLConfig) -> topology.Overlay | None:
 # ------------------------------------------------------------ train round
 @dataclasses.dataclass(frozen=True)
 class TrainSetup:
-    # jitted (params, batch, lr, alive, gates) -> (params, metrics); params,
-    # the (n_clients,) f32 alive vector, and the (n_schedules,) f32 gate
-    # vector are DONATED — ship a fresh mask + round-plan gates per round.
-    # Pipelined mode (gossip_impl="ppermute_packed_async", gossip_delay=1)
-    # appends the in-flight snapshot as a DONATED sixth argument and a third
-    # output: (params, batch, lr, alive, gates, inflight) ->
-    # (params, metrics, inflight). Prime it once with init_inflight(params)
-    # (round 0 then mixes the initial params as its delayed snapshot).
-    # Byzantine mode (DFLConfig.byzantine=True) inserts two more DONATED
-    # data arguments after gates: the (2, n) attack operand
-    # (failures.AttackPlan.round_vector) and a (2,) uint32 PRNG key —
-    # (params, batch, lr, alive, gates, attack, attack_key[, inflight]).
+    # jitted (params, batch, lr, alive, gates, *extra) -> (params, metrics
+    # [, inflight]); params, the (n_clients,) f32 alive vector, the
+    # (n_schedules,) f32 gate vector, and every extra operand are DONATED —
+    # ship fresh vectors per round. The extra operands appear in this fixed
+    # order, each gated by its config knob (absent knob = absent argument;
+    # a default config keeps the historical 5-argument signature and HLO):
+    #   active      (n_clients,) f32   DFLConfig.active_set != "full" —
+    #               round-level participation vector (repro.overlay.plan
+    #               active-set plans); multiplies the alive mask
+    #   attack      (2, n_clients) f32 DFLConfig.byzantine —
+    #               failures.AttackPlan.round_vector operand
+    #   attack_key  (2,) uint32        DFLConfig.byzantine — PRNG key
+    #   inflight    wire-state tuple   gossip_delay=1 (pipelined) — last
+    #               round's in-flight snapshot; the step also RETURNS the
+    #               new snapshot as a third output. Prime it once with
+    #               init_inflight(params) (round 0 then mixes the initial
+    #               params as its delayed snapshot).
+    # input_specs holds a ShapeDtypeStruct per present operand, in call
+    # order, so callers can assemble the argument list generically.
     step_fn: Any
     param_specs: PyTree            # PartitionSpecs (client-stacked)
     param_struct: PyTree           # Leaf pytree (client-stacked)
@@ -277,6 +284,17 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         raise ValueError(f"unknown round_plan {dfl.round_plan!r}; "
                          f"available: {', '.join(plan_lib.PLAN_NAMES)}")
     use_gates = dfl.round_plan != "static"
+    # round-level client subsampling (active-set plans): same build-time
+    # rule as gates — "full" keeps the historical 5-argument signature (and
+    # its exact HLO), any real plan appends one donated (n,) vector. The
+    # active set multiplies the alive mask OUTSIDE the gossip island, so
+    # inactive clients get identity rows exactly like stragglers — but the
+    # product never feeds the health tracker (see repro.overlay.plan).
+    if dfl.active_set not in plan_lib.ACTIVE_SET_NAMES:
+        raise ValueError(
+            f"unknown active_set {dfl.active_set!r}; "
+            f"available: {', '.join(plan_lib.ACTIVE_SET_NAMES)}")
+    use_active = dfl.active_set != "full"
 
     def gossip_fn(params, alive, gates):
         if executor is None:
@@ -385,45 +403,49 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         return jax.vmap(client_round, in_axes=(0, 0, None),
                         spmd_axis_name=caxes)(params, batch, lr)
 
-    def train_step(params, batch, lr, alive, gates):
-        with activation_sharding(act_rules):
-            params, loss = _local_phase(params, batch, lr)
-            params = gossip_fn(params, alive, gates)
-        return params, {"loss": jnp.mean(loss)}
+    # ---- the ONE step function. Optional data operands (active-set vector,
+    # attack operand + key, in-flight snapshot) ride as *extra positional
+    # arguments in the fixed order below; a default config has an empty
+    # extra list and lowers to the exact historical 5-argument HLO.
+    extra_names = (["active"] if use_active else []) \
+        + (["attack", "attack_key"] if use_attack else []) \
+        + (["inflight"] if use_delay else [])
 
-    def train_step_byz(params, batch, lr, alive, gates, attack, attack_key):
+    def train_step(params, batch, lr, alive, gates, *extra):
+        kw = dict(zip(extra_names, extra))
+        # active-set subsampling composes by masking: an inactive client is
+        # mixed like a straggler (identity row, neighbors drop it and
+        # renormalize) — the multiply happens outside the gossip island so
+        # the island's trace is independent of whether a plan is on
+        eff_alive = alive * kw["active"] if use_active else alive
+        out_state = None
         with activation_sharding(act_rules):
             params, loss = _local_phase(params, batch, lr)
-            params = failures_lib.apply_attack(params, attack, attack_key)
-            params = gossip_fn(params, alive, gates)
-        return params, {"loss": jnp.mean(loss)}
-
-    def train_step_delayed(params, batch, lr, alive, gates, inflight):
-        # the d ppermutes inside gossip_fn_delayed read only `inflight` (a
-        # step input), so the scheduler overlaps them with this scan
-        with activation_sharding(act_rules):
-            params, loss = _local_phase(params, batch, lr)
-            params, inflight = gossip_fn_delayed(params, alive, gates,
-                                                 inflight)
-        return params, {"loss": jnp.mean(loss)}, inflight
-
-    def train_step_delayed_byz(params, batch, lr, alive, gates, attack,
-                               attack_key, inflight):
-        with activation_sharding(act_rules):
-            params, loss = _local_phase(params, batch, lr)
-            params = failures_lib.apply_attack(params, attack, attack_key)
-            params, inflight = gossip_fn_delayed(params, alive, gates,
-                                                 inflight)
-        return params, {"loss": jnp.mean(loss)}, inflight
+            if use_attack:
+                params = failures_lib.apply_attack(params, kw["attack"],
+                                                   kw["attack_key"])
+            if use_delay:
+                # the d ppermutes inside gossip_fn_delayed read only the
+                # snapshot (a step input), so the scheduler overlaps them
+                # with the local-step scan
+                params, out_state = gossip_fn_delayed(params, eff_alive,
+                                                      gates, kw["inflight"])
+            else:
+                params = gossip_fn(params, eff_alive, gates)
+        metrics = {"loss": jnp.mean(loss)}
+        if use_delay:
+            return params, metrics, out_state
+        return params, metrics
 
     param_shardings = jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs)
-    in_shardings = (
+    repl = NamedSharding(dmesh, P())
+    in_shardings = [
         param_shardings,
         jax.tree.map(lambda s: NamedSharding(dmesh, s), batch_pspec),
-        NamedSharding(dmesh, P()),
-        NamedSharding(dmesh, P()),
-        NamedSharding(dmesh, P()),
-    )
+        repl,
+        repl,
+        repl,
+    ]
     out_shardings = (
         param_shardings,
         NamedSharding(dmesh, P()),
@@ -432,39 +454,39 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                    "lr": jax.ShapeDtypeStruct((), jnp.float32),
                    "alive": jax.ShapeDtypeStruct((n_cl,), jnp.float32),
                    "gates": jax.ShapeDtypeStruct((n_sched,), jnp.float32)}
-    # alive (argnum 3) and the round-plan gates (argnum 4) are donated with
-    # the params: each round ships a fresh liveness vector + gate vector and
-    # the previous ones are dead weight. Consequence: callers must NOT
+    # alive (argnum 3), the round-plan gates (argnum 4), and every extra
+    # operand are donated with the params: each round ships fresh vectors
+    # and the previous ones are dead weight. Consequence: callers must NOT
     # reuse a cached device array across rounds (it is consumed); build the
-    # mask/gates per round (ElasticTrainer does)
-    donate = (0, 3, 4)
-    if use_attack:
-        # attack operand (argnum 5) + key (argnum 6): fresh per round,
-        # donated like the mask
-        in_shardings = in_shardings + (NamedSharding(dmesh, P()),
-                                       NamedSharding(dmesh, P()))
-        input_specs["attack"] = jax.ShapeDtypeStruct((2, n_cl), jnp.float32)
-        input_specs["attack_key"] = jax.ShapeDtypeStruct((2,), jnp.uint32)
-        donate = donate + (5, 6)
+    # mask/gates/active per round (ElasticTrainer does)
+    donate = [0, 3, 4]
+    extra_specs = {
+        "active": jax.ShapeDtypeStruct((n_cl,), jnp.float32),
+        "attack": jax.ShapeDtypeStruct((2, n_cl), jnp.float32),
+        "attack_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+    inflight_shardings = None
+    for name in extra_names:
+        donate.append(len(in_shardings))
+        if name == "inflight":
+            # the snapshot (always the last argnum) is donated too: the
+            # step consumes last round's in-flight buffers and emits this
+            # round's
+            inflight_shardings = tuple(NamedSharding(dmesh, s)
+                                       for s in inflight_pspecs)
+            in_shardings.append(inflight_shardings)
+            out_shardings = out_shardings + (inflight_shardings,)
+            input_specs["inflight"] = inflight_structs
+        else:
+            in_shardings.append(repl)
+            input_specs[name] = extra_specs[name]
+    in_shardings = tuple(in_shardings)
+    step = jax.jit(train_step, in_shardings=in_shardings,
+                   out_shardings=out_shardings, donate_argnums=tuple(donate))
     init_inflight = None
     if use_delay:
-        inflight_shardings = tuple(NamedSharding(dmesh, s)
-                                   for s in inflight_pspecs)
-        in_shardings = in_shardings + (inflight_shardings,)
-        out_shardings = out_shardings + (inflight_shardings,)
-        input_specs["inflight"] = inflight_structs
-        # the snapshot (the last argnum) is donated too: the step consumes
-        # last round's in-flight buffers and emits this round's
-        donate = donate + (7 if use_attack else 5,)
-        step = jax.jit(train_step_delayed_byz if use_attack
-                       else train_step_delayed, in_shardings=in_shardings,
-                       out_shardings=out_shardings, donate_argnums=donate)
         init_inflight = jax.jit(snapshot_fn, in_shardings=(param_shardings,),
                                 out_shardings=inflight_shardings)
-    else:
-        step = jax.jit(train_step_byz if use_attack else train_step,
-                       in_shardings=in_shardings,
-                       out_shardings=out_shardings, donate_argnums=donate)
     return TrainSetup(
         step_fn=step, param_specs=pspecs, param_struct=struct,
         input_specs=input_specs,

@@ -45,6 +45,16 @@ class SimTrainer:
     dcfg: dfedavg.DFedAvgMConfig
     ckpt: CheckpointManager | None = None
     plan: overlay_plan.RoundPlan | None = None  # time-varying gates source
+    # round-level client subsampling (active-set plans): the 0/1
+    # participation vector multiplies the alive mask each round — inactive
+    # clients keep their params (identity rows); cohort rotation is data,
+    # never a retrace. None (or the "full" plan) = everyone participates.
+    active_plan: overlay_plan.ActiveSetPlan | None = None
+    # B > 0 = blocked substrate (massive-client simulation): n/B devices
+    # each hold a (B, ...) stacked client slice; cross-device schedule
+    # parts ship as whole-block ppermutes (repro.core.gossip.BlockedSpec).
+    # 0 = single-device stacked round (unchanged path).
+    gossip_block: int = 0
     # 1 = pipelined gossip (mix the previous round's packed snapshot,
     # mix_dense_delayed semantics); 0 = synchronous (unchanged)
     gossip_delay: int = 0
@@ -72,6 +82,16 @@ class SimTrainer:
             raise ValueError(f"attack_plan is for "
                              f"{self.attack_plan.n_clients} clients, overlay "
                              f"has {self.overlay.n}")
+        if self.gossip_block:
+            if self.gossip_block < 0 or self.overlay.n % self.gossip_block:
+                raise ValueError(
+                    f"gossip_block={self.gossip_block} must be a positive "
+                    f"divisor of the client count {self.overlay.n}")
+            if self.overlay.n // self.gossip_block > len(jax.devices()):
+                raise ValueError(
+                    f"blocked layout needs "
+                    f"{self.overlay.n // self.gossip_block} devices "
+                    f"(= n/block), only {len(jax.devices())} visible")
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         self._alive = np.ones(self.overlay.n, dtype=np.float32)
         self._inflight = None  # delayed mode's carried snapshot
@@ -84,6 +104,48 @@ class SimTrainer:
         # (exact Chow weights; shared predicate with ElasticTrainer/steps.py)
         use_plan = overlay_plan.is_active(self.plan)
         use_attack = self.attack_plan is not None
+
+        def client(p, b, lr):
+            v = jax.tree.map(jnp.zeros_like, p)
+            p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
+                                             self.dcfg, lr=lr)
+            return p, loss
+
+        if self.gossip_block:
+            # blocked substrate: shard_map gossip island over a 1-D
+            # client-device mesh; the local phase runs on the GSPMD-sharded
+            # full stack (see launch/elastic.py for the full design note)
+            from jax.sharding import Mesh, PartitionSpec as P
+            from repro.launch import mesh as mesh_lib
+            b_sz = self.gossip_block
+            mesh = Mesh(np.asarray(jax.devices()[:spec.n_clients // b_sz]),
+                        ("clients",))
+            self._gossip_mesh = mesh  # repair re-places state onto this
+            self._executor = engine_lib.build_gossip_executor(
+                engine_lib.GossipEngineConfig(
+                    substrate="blocked", codec=self.gossip_codec,
+                    delay=self.gossip_delay, screen=self.gossip_screen,
+                    clip_tau=self.screen_tau, trim_f=self.screen_trim,
+                    block=b_sz), spec, axis_names="clients")
+            executor = self._executor
+
+            @partial(jax.jit, static_argnames=())
+            def round_fn(params, batches, lr, alive, gates, attack, akey):
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+
+                def island(p, alive_vec, gate_vec):
+                    return executor(p, alive=alive_vec,
+                                    gates=gate_vec if use_plan else None)
+
+                params = mesh_lib.shard_map(
+                    island, mesh, in_specs=(P("clients"), P(), P()),
+                    out_specs=P("clients"))(params, alive, gates)
+                return params, losses
+            return round_fn
+
         self._executor = engine_lib.build_gossip_executor(
             engine_lib.GossipEngineConfig(substrate="stacked",
                                           codec=self.gossip_codec,
@@ -92,12 +154,6 @@ class SimTrainer:
                                           clip_tau=self.screen_tau,
                                           trim_f=self.screen_trim), spec)
         executor = self._executor
-
-        def client(p, b, lr):
-            v = jax.tree.map(jnp.zeros_like, p)
-            p, _, loss = dfedavg.local_round(p, v, b, self.loss_fn,
-                                             self.dcfg, lr=lr)
-            return p, loss
 
         if self.gossip_delay:
             @partial(jax.jit, static_argnames=())
@@ -147,6 +203,15 @@ class SimTrainer:
     def repair(self, dead: list[int], params: PyTree) -> PyTree:
         """Permanent failures: splice repair, state remap, re-jit. The
         delayed-mode in-flight snapshot rides the same row compaction."""
+        if self.gossip_block and \
+                (self.overlay.n - len(dead)) % self.gossip_block:
+            # the blocked layout needs the survivor count to stay a
+            # multiple of block; mask the dead via set_stragglers instead
+            # (ElasticTrainer automates this masking-vs-splice decision)
+            raise ValueError(
+                f"splicing {len(dead)} of {self.overlay.n} clients leaves a "
+                f"partial device block (block={self.gossip_block}); keep the "
+                "dead masked or evict a block-multiple")
         bundle = (params, self._inflight)
         self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
             self.overlay, dead, bundle)
@@ -159,6 +224,12 @@ class SimTrainer:
         # attackers keep their original plan column across compaction
         self._attack_cols = self._attack_cols[survivors]
         self._round_fn = self._build(self.spec)
+        if self.gossip_block:
+            # a splice can shrink the blocked mesh; the remapped rows are
+            # still committed to the old device set — re-place them
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            params = jax.device_put(
+                params, NamedSharding(self._gossip_mesh, P("clients")))
         return params
 
     # ------------------------------------------------------------- train
@@ -178,16 +249,23 @@ class SimTrainer:
             batches = batch_fn(rnd)
             lr_t = jnp.asarray(lr_fn(rnd), jnp.float32)
             attack, akey = self._attack_operands(rnd)
+            alive_t = self._alive
+            if overlay_plan.is_subsampling(self.active_plan):
+                # inactive clients are mixed like stragglers (identity
+                # rows) but are only resting — the plan never touches the
+                # persistent straggler mask itself
+                alive_t = alive_t * overlay_plan.active_for(
+                    self.active_plan, rnd, self.overlay.n)
             if self.gossip_delay:
                 if self._inflight is None:  # prime with the initial params
                     self._inflight = self._executor.init_state(params)
                 params, losses, self._inflight = self._round_fn(
                     params, self._inflight, batches, lr_t,
-                    jnp.asarray(self._alive), self._gates(rnd),
+                    jnp.asarray(alive_t), self._gates(rnd),
                     attack, akey)
             else:
                 params, losses = self._round_fn(params, batches, lr_t,
-                                                jnp.asarray(self._alive),
+                                                jnp.asarray(alive_t),
                                                 self._gates(rnd),
                                                 attack, akey)
             rec = {"round": rnd,
@@ -208,7 +286,8 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 round_plan="static", gossip_delay=0,
                 gossip_codec="f32", gossip_screen="none",
                 attackers=0, attack_mode="sign_flip",
-                attack_magnitude=1.0) -> list[dict]:
+                attack_magnitude=1.0, active_set="full", active_k=1,
+                active_shards=2, gossip_block=0) -> list[dict]:
     from repro.data import federated, pipeline, shakespeare
 
     toks, vocab = shakespeare.corpus()
@@ -232,6 +311,9 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
     # a "static" plan is inert (is_active: gate pathway stays off)
     plan = overlay_plan.make_plan(dfl.round_plan, k=dfl.plan_k,
                                   fraction=dfl.plan_fraction, seed=seed)
+    # a "full" active set is likewise inert (is_subsampling)
+    active = overlay_plan.make_active_set(active_set, k=active_k,
+                                          n_shards=active_shards, seed=seed)
     attack = None
     if attackers > 0:
         attack = failures_lib.sample_attackers(n_clients, attackers,
@@ -240,6 +322,7 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                                                seed=seed)
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
                          dcfg=dcfg, ckpt=ckpt, plan=plan,
+                         active_plan=active, gossip_block=gossip_block,
                          gossip_delay=gossip_delay,
                          gossip_codec=gossip_codec,
                          gossip_screen=gossip_screen,
@@ -304,6 +387,17 @@ def main() -> None:
     ap.add_argument("--gossip-screen", default="none",
                     choices=["none", "norm_clip", "trimmed_mean"],
                     help="Byzantine screen over received gossip payloads")
+    ap.add_argument("--active-set", default="full",
+                    choices=["full", "random_k", "shards", "stratified"],
+                    help="round-level client subsampling plan "
+                         "(participation-as-data, zero retraces)")
+    ap.add_argument("--active-k", type=int, default=1,
+                    help="active clients per round (random_k/stratified)")
+    ap.add_argument("--active-shards", type=int, default=2,
+                    help="cohort count (shards) / strata (stratified)")
+    ap.add_argument("--gossip-block", type=int, default=0,
+                    help="B > 0: blocked substrate, B simulated clients "
+                         "per device (n/B devices; 0 = stacked)")
     ap.add_argument("--attackers", type=int, default=0,
                     help="number of scripted Byzantine clients")
     ap.add_argument("--attack-mode", default="sign_flip",
@@ -324,7 +418,10 @@ def main() -> None:
                        gossip_codec=args.gossip_codec,
                        gossip_screen=args.gossip_screen,
                        attackers=args.attackers,
-                       attack_mode=args.attack_mode)
+                       attack_mode=args.attack_mode,
+                       active_set=args.active_set, active_k=args.active_k,
+                       active_shards=args.active_shards,
+                       gossip_block=args.gossip_block)
     for rec in hist:
         print(json.dumps(rec))
     if args.out:

@@ -13,15 +13,29 @@ first-class, sweepable subsystem on top of the packed gossip engine:
   packed engine executes directly.
 * :mod:`repro.overlay.plan` — time-varying round plans: per-schedule gate
   vectors shipped as donated step data (one-peer rotation, random subsets,
-  bandwidth throttling) with zero retraces across rounds.
+  bandwidth throttling) with zero retraces across rounds, plus active-set
+  plans — per-CLIENT participation vectors (random-k, round-robin shards,
+  stratified cohorts) that decouple the enrolled population from the
+  per-round cohort through the same data-not-structure pathway.
 """
 from repro.overlay.convert import overlay_from_adjacency  # noqa: F401
 from repro.overlay.plan import (  # noqa: F401
+    ActiveSetPlan,
+    FullActiveSet,
     OnePeerPlan,
+    RandomKActiveSet,
     RandomSubsetPlan,
     RoundPlan,
+    ShardActiveSet,
     StaticPlan,
+    StratifiedActiveSet,
     ThrottlePlan,
+    make_active_set,
     make_plan,
 )
-from repro.overlay.registry import build, names, overlay_meta  # noqa: F401
+from repro.overlay.registry import (  # noqa: F401
+    blocked_profile,
+    build,
+    names,
+    overlay_meta,
+)

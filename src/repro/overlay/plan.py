@@ -19,6 +19,20 @@ over the *gated* in-degree inside the same fused HBM pass. Consequences:
 
 Plans are stateless in the round index (``gates(rnd, n_schedules)``), so a
 splice repair that changes the schedule count mid-run needs no plan surgery.
+
+The same design scales to the CLIENT axis: an :class:`ActiveSetPlan` maps the
+round index to a per-client participation vector over ``n_clients`` — the
+cross-device regime enrolls far more clients than gossip in any one round, so
+round cohorts must be round *data*, not membership. The active vector
+multiplies into the straggler ``alive`` mask before the engine's shared
+weight-table path (`gossip.alive_weight_table`): an inactive client keeps its
+params (identity row) and contributes nothing to its neighbors — exactly the
+dead-client mixing semantics — but, unlike `alive`, the active set never feeds
+``HealthTracker``: sitting a round out is scheduled, not suspicious. Cohort
+rotations (random-k, round-robin shards, stratified) therefore reuse ONE
+executable with zero retraces and compose with gates, screens, attacks, and
+splice repair unchanged. Like round plans, active-set plans are stateless in
+``(rnd, n_clients)``, so repair needs no plan surgery.
 """
 from __future__ import annotations
 
@@ -36,6 +50,15 @@ __all__ = [
     "gates_for",
     "is_active",
     "PLAN_NAMES",
+    "ActiveSetPlan",
+    "FullActiveSet",
+    "RandomKActiveSet",
+    "ShardActiveSet",
+    "StratifiedActiveSet",
+    "make_active_set",
+    "active_for",
+    "is_subsampling",
+    "ACTIVE_SET_NAMES",
 ]
 
 # every name make_plan accepts; config validation (launch.steps) checks
@@ -145,3 +168,123 @@ def make_plan(name: str, *, k: int = 1, fraction: float = 0.5,
         return ThrottlePlan(fraction=fraction)
     raise ValueError(f"unknown round plan {name!r}; available: "
                      f"{', '.join(PLAN_NAMES)}")
+
+
+# ---------------------------------------------------------------------------
+# Active-set plans: round-level client subsampling, shipped as step data.
+# ---------------------------------------------------------------------------
+
+# every name make_active_set accepts; config validation (launch.steps) checks
+# against this so a typo'd DFLConfig.active_set errors instead of silently
+# disabling subsampling
+ACTIVE_SET_NAMES = ("full", "random_k", "shards", "stratified")
+
+
+def is_subsampling(plan: "ActiveSetPlan | None") -> bool:
+    """Whether a plan engages the active-set pathway. Mirrors
+    :func:`is_active` for round plans and must agree with the production step
+    builder's config-side rule (``DFLConfig.active_set != "full"``): the full
+    plan is equivalent to no plan, so the step signature stays unchanged and
+    the default-config HLO anchors (delay-0 identity) keep holding."""
+    return plan is not None and plan.name != "full"
+
+
+def active_for(plan: "ActiveSetPlan | None", rnd: int,
+               n_clients: int) -> np.ndarray:
+    """The round's participation vector: all-ones when no plan is configured
+    (the shared helper both trainers ship into the jitted step)."""
+    if plan is None:
+        return np.ones(n_clients, dtype=np.float32)
+    return plan.active(rnd, n_clients)
+
+
+class ActiveSetPlan:
+    """Base: every client participates every round (same as no plan)."""
+
+    name = "full"
+
+    def active(self, rnd: int, n_clients: int) -> np.ndarray:
+        return np.ones(n_clients, dtype=np.float32)
+
+
+class FullActiveSet(ActiveSetPlan):
+    pass
+
+
+@dataclasses.dataclass
+class RandomKActiveSet(ActiveSetPlan):
+    """Uniform random cohorts: k clients drawn per round (stateless: the
+    draw is seeded by (seed, rnd), so replay/resume sees the same cohorts)."""
+
+    k: int = 1
+    seed: int = 0
+    name: str = "random_k"
+
+    def active(self, rnd: int, n_clients: int) -> np.ndarray:
+        a = np.zeros(n_clients, dtype=np.float32)
+        if n_clients:
+            rng = np.random.default_rng((self.seed, rnd))
+            k = min(max(int(self.k), 1), n_clients)
+            a[rng.choice(n_clients, size=k, replace=False)] = 1.0
+        return a
+
+
+@dataclasses.dataclass
+class ShardActiveSet(ActiveSetPlan):
+    """Round-robin shards: round r activates cohort ``i % n_shards ==
+    r % n_shards``. Deterministic, disjoint, and n_shards consecutive rounds
+    cover every client exactly once."""
+
+    n_shards: int = 2
+    name: str = "shards"
+
+    def active(self, rnd: int, n_clients: int) -> np.ndarray:
+        a = np.zeros(n_clients, dtype=np.float32)
+        if n_clients:
+            s = min(max(int(self.n_shards), 1), n_clients)
+            a[np.arange(n_clients) % s == rnd % s] = 1.0
+        return a
+
+
+@dataclasses.dataclass
+class StratifiedActiveSet(ActiveSetPlan):
+    """Stratified cohorts: clients split into ``n_strata`` contiguous strata
+    (a stand-in for any grouping key — region, hardware class), and each
+    round draws ~k/n_strata participants per stratum, so every stratum stays
+    represented in every round's cohort."""
+
+    k: int = 2
+    n_strata: int = 2
+    seed: int = 0
+    name: str = "stratified"
+
+    def active(self, rnd: int, n_clients: int) -> np.ndarray:
+        a = np.zeros(n_clients, dtype=np.float32)
+        if not n_clients:
+            return a
+        s = min(max(int(self.n_strata), 1), n_clients)
+        per = max(1, int(round(self.k / s)))
+        bounds = np.linspace(0, n_clients, s + 1).astype(int)
+        for j in range(s):
+            lo, hi = int(bounds[j]), int(bounds[j + 1])
+            if hi <= lo:
+                continue
+            rng = np.random.default_rng((self.seed, rnd, j))
+            take = min(per, hi - lo)
+            a[lo + rng.choice(hi - lo, size=take, replace=False)] = 1.0
+        return a
+
+
+def make_active_set(name: str, *, k: int = 1, n_shards: int = 2,
+                    seed: int = 0) -> ActiveSetPlan:
+    """Config-level factory (`DFLConfig.active_set`)."""
+    if name == "full":
+        return FullActiveSet()
+    if name == "random_k":
+        return RandomKActiveSet(k=k, seed=seed)
+    if name == "shards":
+        return ShardActiveSet(n_shards=n_shards)
+    if name == "stratified":
+        return StratifiedActiveSet(k=k, n_strata=n_shards, seed=seed)
+    raise ValueError(f"unknown active-set plan {name!r}; available: "
+                     f"{', '.join(ACTIVE_SET_NAMES)}")

@@ -43,6 +43,7 @@ __all__ = [
     "get_family",
     "build",
     "overlay_meta",
+    "blocked_profile",
     "torus_overlay",
     "hypercube_overlay",
     "random_regular_overlay",
@@ -102,6 +103,31 @@ def build(name: str, n: int, degree: int = 4, seed: int = 0
     """Build a named family at size n; returns (overlay, metadata)."""
     overlay = get_family(name)(n, degree, seed)
     return overlay, overlay_meta(overlay)
+
+
+def blocked_profile(overlay: Overlay, block: int) -> dict:
+    """How an overlay's schedules partition under the ``blocked`` substrate
+    (B clients per device, row-major placement): which schedules stay fully
+    intra-device and how many whole-block collectives the rest cost per
+    round. Structured families placed contiguously are intra-heavy (a torus
+    row shift crosses only at block boundaries); a random expander's
+    matchings touch many device pairs — this record is what bench_scale and
+    the sweep reports use to compare them at fixed n.
+    """
+    from repro.core import gossip
+
+    spec = gossip.make_gossip_spec(overlay)
+    bs = gossip.make_blocked_spec(spec, block)
+    return {
+        "family": overlay.name,
+        "n": overlay.n,
+        "block": bs.block,
+        "n_devices": bs.n_devices,
+        "n_schedules": spec.degree,
+        "intra_schedules": spec.degree - bs.cross_schedules,
+        "cross_schedules": bs.cross_schedules,
+        "transfers_per_round": bs.n_transfers,
+    }
 
 
 # ------------------------------------------------------------------ families

@@ -10,7 +10,7 @@ try:  # optional dep (requirements-dev.txt): property tests degrade, not error
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import failures, gossip, topology
+from repro.core import gossip, topology
 
 
 def _tree(n, seed=0):
@@ -116,38 +116,6 @@ class TestShardMapGossip:
 
 
 class TestFailureAdjustedGossip:
-    def test_alive_adjusted_rows_sum_to_one(self):
-        ov = topology.expander_overlay(12, 4, seed=0)
-        spec = gossip.make_gossip_spec(ov)
-        alive = np.ones(12)
-        alive[[2, 7]] = 0
-        with pytest.warns(DeprecationWarning, match="alive_adjusted_spec"):
-            adj = failures.alive_adjusted_spec(spec, alive)
-        # reconstruct the effective matrix
-        m = np.diag(list(adj.self_weights))
-        for rf in adj.recv_from:
-            for i, j in enumerate(rf):
-                if i != j:
-                    m[i, j] += adj.edge_weight
-        np.testing.assert_allclose(m.sum(1), 1.0, atol=1e-9)
-        # dead clients are isolated (identity rows)
-        assert m[2, 2] == pytest.approx(1.0)
-        assert m[7, 7] == pytest.approx(1.0)
-        # no one receives from the dead
-        alive_idx = [i for i in range(12) if alive[i]]
-        assert np.all(m[np.ix_(alive_idx, [2, 7])] == 0)
-
-    def test_dead_clients_keep_params_others_average(self):
-        ov = topology.expander_overlay(8, 4, seed=1)
-        spec = gossip.make_gossip_spec(ov)
-        x = _tree(8, seed=4)
-        alive = np.ones(8)
-        alive[3] = 0
-        with pytest.warns(DeprecationWarning, match="alive_adjusted_spec"):
-            adj = failures.alive_adjusted_spec(spec, alive)
-        y = gossip.mix_schedules(x, adj)
-        np.testing.assert_allclose(y["a"][3], x["a"][3])  # dead keeps params
-
     def test_alive_weight_table_matches_masked_matrix(self):
         """The traced-argument weight table rebuilds mix_dense_masked's
         effective matrix row-for-row (the packed engine's masking math)."""

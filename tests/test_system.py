@@ -45,8 +45,8 @@ def _run_mnist_dfl(overlay, rounds=10, n_clients=10, noniid=False, seed=0,
         batches = {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
         params, _ = round_fn(params, batches, None)
         if failure_plan is not None:
-            # alive-as-data masked engine round (alive_adjusted_spec is
-            # deprecated — it rebakes the spec, i.e. a retrace per mask)
+            # alive-as-data masked engine round (the mask is a traced
+            # argument — rebaking the spec would retrace per mask)
             alive = jnp.asarray(failure_plan.alive_mask(rnd), jnp.float32)
             params = gossip.mix_packed_stacked(params, spec, alive=alive)
         else:
