@@ -105,7 +105,8 @@ def main() -> None:
             jnp.asarray(gates), inflight)
     jax.block_until_ready(params)
     dt = time.perf_counter() - t0
-    n_traces = setup.step_fn._cache_size()
+    from repro.telemetry import TraceCounter
+    n_traces = TraceCounter.cache_size(setup.step_fn)
     assert n_traces == 1, f"pipelined+quant step retraced: {n_traces}"
     for leaf in jax.tree.leaves(params):
         assert bool(jnp.isfinite(jnp.asarray(leaf, jnp.float32)).all())

@@ -34,6 +34,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import gossip
 from repro.overlay import plan as plan_lib, registry
+from repro.telemetry import TraceCounter
 
 # (family, degree) cells; degree is ignored by fixed-degree families
 SWEEP: tuple[tuple[str, int], ...] = (
@@ -71,11 +72,11 @@ def run(n: int = 32, dim: int = 1 << 16, rounds: int = 30,
         overlay, meta = registry.build(family, n, degree=max(degree, 2),
                                        seed=seed)
         spec = gossip.make_gossip_spec(overlay)
-        n_traces = [0]
+        tracer = TraceCounter(f"overlay/{family}")
 
         @jax.jit
+        @tracer.wrap
         def mix(p, gates, spec=spec):
-            n_traces[0] += 1
             return gossip.mix_packed_stacked(p, spec, gates=gates)
 
         s_count = spec.degree
@@ -85,13 +86,13 @@ def run(n: int = 32, dim: int = 1 << 16, rounds: int = 30,
 
         dt_static = _time_rounds(mix, params, ones, rounds)
         dt_onepeer = _time_rounds(mix, params, rotate, rounds)
-        assert n_traces[0] == 1, (family, n_traces)  # gates are data
+        tracer.expect(1, what=f"{family} gates-are-data")
 
         label = (f"{family}-d{degree}" if degree else family)
         row = dict(meta, label=label,
                    rounds_per_sec=round(rounds / dt_static, 2),
                    rounds_per_sec_one_peer=round(rounds / dt_onepeer, 2),
-                   n_traces=n_traces[0])
+                   n_traces=tracer.count)
         rows.append(row)
         emit(f"overlay/{label}/n{n}", dt_static * 1e6 / rounds,
              f"spectral_gap={row['spectral_gap']:.4f};"
@@ -134,22 +135,22 @@ def run_scale(n: int = 4096, dim: int = 512, rounds: int = 5,
         overlay, meta = registry.build(family, n, degree=max(degree, 2),
                                        seed=seed)
         spec = gossip.make_gossip_spec(overlay)
-        n_traces = [0]
+        tracer = TraceCounter(f"overlay_scale/{family}")
 
         @jax.jit
+        @tracer.wrap
         def mix(p, gates, spec=spec):
-            n_traces[0] += 1
             return gossip.mix_packed_stacked(p, spec, gates=gates,
                                              pack_spec=pack)
 
         ones = lambda rnd: jnp.ones(spec.degree, jnp.float32)
         dt = _time_rounds(mix, params, ones, rounds)
-        assert n_traces[0] == 1, (family, n_traces)
+        tracer.expect(1, what=f"{family} gates-are-data")
 
         label = (f"{family}-d{degree}" if degree else family)
         row = dict(meta, label=label,
                    rounds_per_sec=round(rounds / dt, 3),
-                   n_traces=n_traces[0])
+                   n_traces=tracer.count)
         rows.append(row)
         emit(f"overlay_scale/{label}/n{n}", dt * 1e6 / rounds,
              f"spectral_gap={row['spectral_gap']:.4f};"

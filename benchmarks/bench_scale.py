@@ -67,10 +67,11 @@ def main() -> None:
     sh = NamedSharding(mesh, P("clients"))
     tree = jax.device_put(tree, sh)
 
-    traces = {"n": 0}
+    from repro.telemetry import TraceCounter
+    tracer = TraceCounter("scale_round")
 
+    @tracer.wrap
     def round_fn(params, alive):
-        traces["n"] += 1  # python side effect: runs only on trace
         # stand-in local phase (the smoke measures the mixing round)
         params = jax.tree.map(lambda x: x * 0.999, params)
 
@@ -100,7 +101,7 @@ def main() -> None:
     jax.block_until_ready(tree)
     dt = time.perf_counter() - t0
     assert len(cohorts) >= 3, "active-set plan failed to rotate"
-    assert traces["n"] == 1, f"blocked round retraced: {traces['n']}"
+    tracer.expect(1, what="blocked round: churn + cohorts are data")
     for leaf in jax.tree.leaves(tree):
         assert bool(jnp.isfinite(leaf).all())
 
@@ -108,7 +109,7 @@ def main() -> None:
     emit(f"scale/blocked/{N_CLIENTS}x{len(jax.devices())}dev",
          dt * 1e6 / ROUNDS,
          f"rounds_per_sec={rounds_per_sec:.2f};n_transfers={bs.n_transfers};"
-         f"cross_schedules={bs.cross_schedules};n_traces={traces['n']};"
+         f"cross_schedules={bs.cross_schedules};n_traces={tracer.count};"
          f"cohorts={len(cohorts)}")
 
     os.makedirs("experiments/bench", exist_ok=True)
@@ -121,7 +122,7 @@ def main() -> None:
             "cross_schedules": bs.cross_schedules,
             "hlo_collective_permutes": n_perm,
             "rounds": ROUNDS, "rounds_per_sec": rounds_per_sec,
-            "n_traces": traces["n"], "active_k": ACTIVE_K,
+            "n_traces": tracer.count, "active_k": ACTIVE_K,
             "distinct_cohorts": len(cohorts),
         }, f, indent=1)
     print("BENCH_SCALE_OK")

@@ -1,0 +1,179 @@
+"""Telemetry-overhead smoke — the CI guard for the observability layer.
+
+Drives the SAME ElasticTrainer cell with telemetry OFF and ON (engine
+round metrics + JSONL event stream) and hard-asserts:
+
+  * the overhead tolerance: with in-graph metrics on (no event stream)
+    the round keeps at least ``MIN_SPEED_RATIO`` of the plain rounds/sec
+    (the metrics ride values the round already materializes; CPU timing
+    is noisy, so the gate is deliberately loose — the real regression
+    guard is the zero-added-collectives HLO assert in
+    tests/test_telemetry.py).  The streamed cell (JSONL logger attached)
+    is *reported, not gated*: the per-round record is a deliberate
+    device->host sync, the cost of reading the numbers;
+  * zero retraces with telemetry on, under straggler churn + one-peer gate
+    rotation (churn/gates/metrics are data, never trace structure);
+  * the event stream arrives complete: one run header, one compile event,
+    one round record per round, each with the consensus residual.
+
+Records the exact per-codec wire bytes/round from the engine's
+``wire_struct`` accounting, writes ``experiments/bench/telemetry.json``,
+and folds every bench record + the run stream into the ONE summary
+artifact ``experiments/bench/summary.json`` (repro.telemetry.report).
+
+Usage (CI bench-smoke lane):
+    PYTHONPATH=src python -m benchmarks.run --fast --only telemetry
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import dfedavg, engine as engine_lib, gossip, packing, \
+    topology
+from repro.launch.elastic import ElasticTrainer
+from repro.overlay import plan as plan_lib
+from repro.telemetry import TelemetryConfig, TelemetryLogger, read_jsonl, \
+    report as tel_report
+
+N_CLIENTS = 32
+DEGREE = 4
+DIM = 1 << 14
+# The telemetered round must keep at least this fraction of the plain
+# round's throughput. This cell is the WORST CASE for the ratio: the quad
+# loss is ~free, so the round is nearly pure gossip, and the consensus
+# residual costs one extra decode+sqnorm pass per schedule — the same FLOP
+# order as the mix it instruments (measured ~0.35-0.4x here; in a real
+# train step the local compute dominates and the ratio approaches 1).
+# Telemetry adds zero collectives either way (HLO-asserted in
+# tests/test_telemetry.py); this gate only catches gross regressions.
+MIN_SPEED_RATIO = 0.25
+
+
+def quad_loss(p, b):
+    return jnp.mean(jnp.square(p["w"] - b["t"])), {}
+
+
+def _batches(n, local_steps=2):
+    return {"t": jnp.zeros((n, local_steps, DIM), jnp.float32)}
+
+
+def _run_cell(codec: str, delay: int, telemetry: bool, rounds: int,
+              log_path: str | None = None, seed: int = 0) -> dict:
+    logger = (TelemetryLogger(log_path, run=f"{codec}_tel", codec=codec)
+              if log_path else None)
+    trainer = ElasticTrainer(
+        overlay=topology.expander_overlay(N_CLIENTS, DEGREE, seed=seed),
+        loss_fn=quad_loss,
+        dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
+        plan=plan_lib.OnePeerPlan(),
+        gossip_delay=delay, gossip_codec=codec,
+        telemetry=TelemetryConfig() if telemetry else None,
+        logger=logger)
+    r = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(r.standard_normal((N_CLIENTS, DIM)) * 0.02,
+                               jnp.float32)}
+    batches = _batches(N_CLIENTS)
+    # warmup compile outside the timed window
+    params, _, _ = trainer.observe_heartbeats(
+        np.ones(N_CLIENTS, np.float32), params)
+    params, _ = trainer.step(params, batches, 0.2)
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        alive = (r.random(N_CLIENTS) > 0.1).astype(np.float32)  # churn
+        params, _, _ = trainer.observe_heartbeats(alive, params)
+        params, _ = trainer.step(params, batches, 0.2)
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    trainer.tracer.expect(1, what="churn + one-peer gates are data")
+    if logger is not None:
+        logger.close()
+    mode = ("stream" if log_path else "on") if telemetry else "off"
+    return {"label": f"{codec}{'_delay' if delay else ''}/{mode}",
+            "codec": codec, "delay": delay, "telemetry": telemetry,
+            "rounds_per_sec": round(rounds / dt, 2),
+            "n_traces": trainer.n_traces}
+
+
+def _wire_bytes() -> dict[str, int]:
+    """Exact bytes/round per codec for this bench's model (one client's
+    tree through the shard_map engine's wire_struct accounting)."""
+    spec = gossip.make_gossip_spec(
+        topology.expander_overlay(N_CLIENTS, DEGREE, seed=0))
+    pack = packing.make_stacked_pack_spec({"w": jnp.zeros(DIM, jnp.float32)})
+    out = {}
+    for codec in ("f32", "int8", "int8_block"):
+        ex = engine_lib.build_gossip_executor(
+            engine_lib.GossipEngineConfig(substrate="shard_map", codec=codec),
+            spec, axis_names="clients", pack_spec=pack)
+        out[codec] = ex.wire_bytes_per_round()
+    return out
+
+
+def main(rounds: int = 8, out_dir: str | None = "experiments/bench") -> None:
+    os.makedirs(out_dir or ".", exist_ok=True)
+    log_path = os.path.join(out_dir or ".", "telemetry_run.jsonl")
+
+    cells = []
+    overhead = {}
+    for codec, delay in (("f32", 0), ("int8_block", 1)):
+        off = _run_cell(codec, delay, False, rounds)
+        on = _run_cell(codec, delay, True, rounds)
+        cells += [off, on]
+        ratio = on["rounds_per_sec"] / off["rounds_per_sec"]
+        name = off["label"].split("/")[0]
+        overhead[name] = round(ratio, 3)
+        assert ratio >= MIN_SPEED_RATIO, \
+            f"telemetry overhead too high: {on} vs {off}"
+        emit(f"telemetry/{name}/n{N_CLIENTS}", 0.0,
+             f"rps_off={off['rounds_per_sec']};rps_on={on['rounds_per_sec']};"
+             f"on_over_off={ratio:.3f};n_traces={on['n_traces']}")
+
+    # streamed cell: reported only — each round record is a host sync
+    if os.path.exists(log_path):
+        os.remove(log_path)  # the logger appends; start this run fresh
+    stream = _run_cell("f32", 0, True, rounds, log_path=log_path)
+    cells.append(stream)
+    overhead["f32_stream"] = round(
+        stream["rounds_per_sec"] / cells[0]["rounds_per_sec"], 3)
+    emit(f"telemetry/f32_stream/n{N_CLIENTS}", 0.0,
+         f"rps={stream['rounds_per_sec']};"
+         f"vs_off={overhead['f32_stream']:.3f}")
+
+    # the stream cell's run log: header + 1 compile + a round record per
+    # executed round (warmup + timed), each carrying the consensus proxy
+    recs = read_jsonl(log_path)
+    kinds = [r["kind"] for r in recs]
+    assert kinds.count("run") == 1 and kinds.count("compile") == 1, kinds
+    round_recs = [r for r in recs if r["kind"] == "round"]
+    assert len(round_recs) == rounds + 1, len(round_recs)
+    assert all("resid_sqnorm" in r for r in round_recs)
+
+    wire = _wire_bytes()
+    assert wire["f32"] // 4 <= wire["int8_block"] < wire["f32"] // 2
+    emit(f"telemetry/wire_bytes/n{N_CLIENTS}", 0.0,
+         ";".join(f"{c}={b}" for c, b in wire.items()))
+
+    if out_dir:
+        with open(os.path.join(out_dir, "telemetry.json"), "w") as f:
+            json.dump({
+                "bench": "telemetry", "n_clients": N_CLIENTS,
+                "degree": DEGREE, "dim": DIM, "rounds": rounds,
+                "min_speed_ratio": MIN_SPEED_RATIO,
+                "wire_bytes": wire, "overhead_ratio": overhead,
+                "cells": cells,
+            }, f, indent=1)
+        # the ONE artifact: every bench record + this run's stream
+        tel_report.build_summary(out_dir, logs=(log_path,),
+                                 out=os.path.join(out_dir, "summary.json"))
+    print("BENCH_TELEMETRY_OK")
+
+
+if __name__ == "__main__":
+    main()

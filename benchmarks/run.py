@@ -19,6 +19,10 @@ Mapping to the paper:
                      proxy over f x screen x topology, per-round screen
                      overhead, zero-retrace guard under attacker churn
                      (JSON record to experiments/bench/robust.json)
+  bench_telemetry -> telemetry on/off overhead gate + per-codec wire bytes
+                     + event-stream completeness; folds every bench JSON +
+                     the run stream into experiments/bench/summary.json
+                     (run LAST so the summary sees the other records)
 """
 from __future__ import annotations
 
@@ -37,7 +41,8 @@ def main() -> None:
 
     from benchmarks import (bench_comm, bench_elastic, bench_failures,
                             bench_kernels, bench_lm, bench_mnist,
-                            bench_overlay, bench_robust, bench_spectral)
+                            bench_overlay, bench_robust, bench_spectral,
+                            bench_telemetry)
 
     rounds = 6 if args.fast else 10
     suite = [
@@ -50,6 +55,8 @@ def main() -> None:
         ("failures", lambda: bench_failures.main(rounds=rounds)),
         ("elastic", lambda: bench_elastic.main(rounds=rounds)),
         ("robust", lambda: bench_robust.main(rounds=rounds)),
+        # keep last: its summary.json folds in the records written above
+        ("telemetry", lambda: bench_telemetry.main(rounds=rounds)),
     ]
     print("name,us_per_call,derived")
     failed = []

@@ -215,6 +215,14 @@ class ParallelConfig:
     gossip_screen: Literal["none", "norm_clip", "trimmed_mean"] = "none"
     gossip_clip_tau: float = 3.0
     gossip_trim_f: int = 1
+    # in-graph round telemetry (repro.telemetry): False keeps the step HLO
+    # textually identical to an untelemetered build; True makes the step's
+    # metrics dict carry a "telemetry" subtree of traced round metrics
+    # (consensus residual, live in-degree, per-schedule contributor mass,
+    # norm-clip counts, wire bytes — zero extra collectives, zero retraces).
+    # Packed (shard_map) impls only — the per-leaf / dense baselines reject
+    # it at config parse.
+    gossip_telemetry: bool = False
     local_steps: int = 2          # K inside the lowered round (scan)
     use_fused_sgdm: bool = True
     grad_accum: int = 4           # microbatches per local step (memory knob)

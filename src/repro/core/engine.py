@@ -70,6 +70,7 @@ path, and ``delay=0`` is bit-identical to sync (both pinned in tests).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -77,6 +78,7 @@ import jax.numpy as jnp
 
 from repro.core import gossip, packing
 from repro.core.gossip import GossipSpec
+from repro.telemetry.metrics import TelemetryConfig
 
 __all__ = [
     "CODECS",
@@ -84,6 +86,7 @@ __all__ = [
     "SUBSTRATES",
     "DELAY_SUBSTRATES",
     "SCREEN_SUBSTRATES",
+    "TELEMETRY_SUBSTRATES",
     "LEGACY_GOSSIP_IMPLS",
     "GossipEngineConfig",
     "GossipExecutor",
@@ -102,6 +105,7 @@ SCREENS = ("none", "norm_clip", "trimmed_mean")
 # tuple so every error message enumerates the same cells)
 DELAY_SUBSTRATES = ("shard_map", "stacked")
 SCREEN_SUBSTRATES = ("shard_map", "stacked")
+TELEMETRY_SUBSTRATES = ("shard_map", "stacked")
 
 # legacy ParallelConfig.gossip_impl strings -> (substrate, codec). The delay
 # axis rides separately (ParallelConfig.gossip_delay); "ppermute_packed_async"
@@ -148,6 +152,12 @@ class GossipEngineConfig:
         schedule edges ship whole per-device wire blocks via the
         :class:`~repro.core.gossip.BlockedSpec` partition baked at build
         time, so an intra-heavy placement pays almost no wire.
+      telemetry: None (the default — the round's HLO is textually identical
+        to an untelemetered build) or a
+        :class:`repro.telemetry.metrics.TelemetryConfig`, which makes the
+        executor additionally return a RoundMetrics dict of traced values
+        (shard_map | stacked only — see TELEMETRY_SUBSTRATES). Metrics are
+        outputs, never trace structure: no extra collectives, no retraces.
     """
 
     substrate: str = "shard_map"
@@ -158,6 +168,7 @@ class GossipEngineConfig:
     clip_tau: float = 3.0
     trim_f: int = 1
     block: int = 0
+    telemetry: TelemetryConfig | None = None
 
     def __post_init__(self):
         if self.substrate not in SUBSTRATES:
@@ -204,12 +215,25 @@ class GossipEngineConfig:
             raise ValueError(f"clip_tau must be > 0, got {self.clip_tau}")
         if self.trim_f < 0:
             raise ValueError(f"trim_f must be >= 0, got {self.trim_f}")
+        if self.telemetry is not None:
+            if not isinstance(self.telemetry, TelemetryConfig):
+                raise ValueError(
+                    "telemetry must be a repro.telemetry.TelemetryConfig "
+                    f"(or None), got {type(self.telemetry).__name__}")
+            if self.substrate not in TELEMETRY_SUBSTRATES:
+                raise ValueError(
+                    "round telemetry runs on the "
+                    f"{' | '.join(TELEMETRY_SUBSTRATES)} substrates, got "
+                    f"{self.substrate!r}"
+                    + (" (the blocked cell is not wired for metrics yet)"
+                       if self.substrate == "blocked" else ""))
 
 
 def parse_gossip_impl(gossip_impl: str, delay: int = 0,
                       codec: str = "auto", screen: str = "none",
-                      clip_tau: float = 3.0,
-                      trim_f: int = 1) -> GossipEngineConfig:
+                      clip_tau: float = 3.0, trim_f: int = 1,
+                      telemetry: TelemetryConfig | None = None,
+                      ) -> GossipEngineConfig:
     """Parse a legacy ``gossip_impl`` string (+ the ``gossip_delay`` /
     ``gossip_codec`` / ``gossip_screen`` knobs) into an engine config.
 
@@ -218,7 +242,8 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
     that is how the pipelined+quantized composition is spelled:
     ``gossip_impl="ppermute_packed_async", gossip_delay=1,
     gossip_codec="int8_block"``. ``screen`` rides the same way: any packed
-    alias composes with "norm_clip" / "trimmed_mean" through config alone.
+    alias composes with "norm_clip" / "trimmed_mean" through config alone,
+    and ``telemetry`` (a :class:`TelemetryConfig`) with any packed alias.
     """
     if gossip_impl not in LEGACY_GOSSIP_IMPLS:
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}; available: "
@@ -232,7 +257,7 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
                          f"{gossip_impl!r}")
     return GossipEngineConfig(substrate=substrate, codec=codec, delay=delay,
                               screen=screen, clip_tau=clip_tau,
-                              trim_f=trim_f)
+                              trim_f=trim_f, telemetry=telemetry)
 
 
 # ------------------------------------------------------------------ codecs
@@ -473,6 +498,13 @@ class GossipExecutor:
       (mixed_tree, new_state)`` where ``state`` is the codec-wire snapshot
       of the previous round (prime it with :meth:`init_state`).
 
+    With ``config.telemetry`` set, a RoundMetrics dict of traced values is
+    appended as the LAST element of the return tuple (``(mixed, metrics)``
+    sync, ``(mixed, new_state, metrics)`` delayed); :meth:`metrics_structs`
+    declares its exact key set and shapes. Telemetry never changes the
+    collectives or the trace structure — ``telemetry=None`` builds lower to
+    HLO textually identical to pre-telemetry anchors.
+
     ``tree`` is the client-local shard pytree on the ``shard_map`` /
     ``per_leaf`` substrates (call inside the island), the client-stacked
     pytree on ``stacked`` / ``dense``, and the device-local ``(block, ...)``
@@ -499,23 +531,18 @@ class GossipExecutor:
     def codec(self):
         return _CODECS[self.config.codec]
 
-    def __call__(self, tree: PyTree, *, state=None, alive=None, gates=None,
-                 with_stats=False):
+    def __call__(self, tree: PyTree, *, state=None, alive=None, gates=None):
         cfg = self.config
         if self.delayed and state is None:
             raise ValueError("delayed executor needs the carried snapshot "
                              "(prime it with init_state)")
-        if with_stats and not (cfg.substrate == "stacked"
-                               and cfg.screen == "norm_clip"):
-            raise ValueError("with_stats (clip telemetry) needs the stacked "
-                             "substrate with screen='norm_clip'")
         if cfg.substrate == "dense":
             return gossip.mix_dense(
                 tree, gossip.gated_mixing_matrix(self.spec, gates, alive))
         if cfg.substrate == "per_leaf":
             return self._per_leaf_round(tree)
         if cfg.substrate == "stacked":
-            return self._stacked_round(tree, state, alive, gates, with_stats)
+            return self._stacked_round(tree, state, alive, gates)
         if cfg.substrate == "blocked":
             return self._blocked_round(tree, alive, gates)
         return self._shard_map_round(tree, state, alive, gates)
@@ -554,9 +581,75 @@ class GossipExecutor:
             codec.wire_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
             for b in range(ps.n_buffers))
 
+    # ----------------------------------------------------- telemetry
+    def metrics_structs(self) -> dict:
+        """ShapeDtypeStructs of the RoundMetrics this executor returns —
+        the key set is fixed by (telemetry, screen, substrate) at build
+        time ({} when telemetry is off). Stacked metrics are client-stacked
+        arrays; shard_map metrics are per-DEVICE locals (the caller's
+        island sums them host-side — see repro.telemetry.metrics)."""
+        tel = self.config.telemetry
+        if tel is None:
+            return {}
+        out = {}
+        if self.config.substrate == "stacked":
+            n = self.spec.n_clients
+            n_sched = len(self.spec.recv_from)
+            if tel.consensus:
+                out["resid_sqnorm"] = jax.ShapeDtypeStruct((n,), jnp.float32)
+            if tel.degree:
+                out["in_degree"] = jax.ShapeDtypeStruct((n,), jnp.float32)
+                out["sched_contrib"] = jax.ShapeDtypeStruct((n, n_sched),
+                                                            jnp.float32)
+            if tel.clip and self.config.screen == "norm_clip":
+                out["clipped"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+        else:  # shard_map
+            n_sched = len(gossip._live_schedules(self.spec))
+            if tel.consensus:
+                out["resid_sqnorm"] = jax.ShapeDtypeStruct((), jnp.float32)
+            if tel.degree:
+                out["in_degree"] = jax.ShapeDtypeStruct((), jnp.float32)
+                out["sched_contrib"] = jax.ShapeDtypeStruct((n_sched,),
+                                                            jnp.float32)
+            if tel.clip and self.config.screen == "norm_clip":
+                out["clip_recv"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return out
+
+    def wire_bytes_per_round(self) -> int:
+        """EXACT wire bytes one client ships per round: one codec wire per
+        live schedule per packed buffer, from the same ``wire_struct``
+        shapes the collectives move (requires a baked ``pack_spec``; the
+        dense reference substrate has no wire => 0)."""
+        if self.config.substrate == "dense":
+            return 0
+        if self.pack_spec is None:
+            raise ValueError("wire_bytes_per_round needs a baked pack_spec")
+        if self.config.substrate == "per_leaf":
+            raise ValueError("per-leaf wires are per-tensor, not packed; "
+                             "wire accounting covers the packed substrates")
+        ps, codec = self.pack_spec, self.codec
+        per_sched = 0
+        for b in range(ps.n_buffers):
+            st = codec.wire_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
+            per_sched += math.prod(st.shape) * jnp.dtype(st.dtype).itemsize
+        return len(gossip._live_schedules(self.spec)) * per_sched
+
+    def _sq(self, pack_spec):
+        """Whole-buffer squared-norm closure through the fused per-block
+        pass (the telemetry consensus metric's accumulator)."""
+        from repro.kernels.gossip_mix import ops as mix_ops
+
+        def sq(x):
+            return jnp.sum(mix_ops.packed_sqnorms(
+                x.astype(jnp.float32), block_rows=pack_spec.block_rows,
+                impl=self.config.mix_impl))
+
+        return sq
+
     # ---------------------------------------------------- substrates
     def _shard_map_round(self, tree, state, alive, gates):
         cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
         pack_spec = self.pack_spec or packing.make_pack_spec(tree)
         idx = gossip._client_index(self.axis_names)
         live = gossip._live_schedules(spec)
@@ -569,12 +662,28 @@ class GossipExecutor:
                    and cfg.screen != "trimmed_mean"
                    else gossip._local_contrib_vec(spec, idx, live, alive,
                                                   gates))
+        # telemetry reads contributor mass through its OWN vector when the
+        # reduce path runs contrib-less — forcing one into codec.reduce
+        # would change the lowered arithmetic (renorm ops), and telemetry
+        # must never touch the mixing HLO
+        tcontrib = None
+        if tel is not None:
+            tcontrib = (contrib if contrib is not None
+                        else gossip._local_contrib_vec(spec, idx, live,
+                                                       alive, gates))
         if cfg.screen == "norm_clip":
             return self._shard_map_round_clipped(tree, state, weights,
-                                                 contrib, pack_spec, perms)
+                                                 contrib, pack_spec, perms,
+                                                 tcontrib)
         if cfg.screen == "trimmed_mean":
             trim_u = jnp.maximum(weights, 0.0) * contrib
             trim_live = (contrib > 0.0).astype(jnp.float32)
+        metrics = {}
+        if tel is not None and tel.degree:
+            metrics["in_degree"] = jnp.sum(tcontrib[1:])
+            metrics["sched_contrib"] = tcontrib[1:]
+        resid = jnp.float32(0.0)
+        sq = self._sq(pack_spec)
         out_bufs, new_state = [], []
         for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
             n_blocks = pack_spec.buffer_blocks(b)
@@ -593,6 +702,14 @@ class GossipExecutor:
             # all ppermutes issued before the reduction so XLA can overlap
             received = [jax.lax.ppermute(wire, self.axis_names, perm=p)
                         for p in perms]
+            if tel is not None and tel.consensus:
+                # consensus proxy over THIS shard: what each neighbor wire
+                # dequantizes to, against the local fresh buffer
+                for s, rwire in enumerate(received):
+                    dec = codec.decode(rwire, buf.dtype, n_blocks=n_blocks,
+                                       block_rows=pack_spec.block_rows)
+                    resid = resid + tcontrib[1 + s] * sq(
+                        dec.astype(jnp.float32) - buf.astype(jnp.float32))
             if cfg.screen == "trimmed_mean":
                 out_bufs.append(codec.reduce_trimmed(
                     buf, received, trim_u, trim_live, trim=cfg.trim_f,
@@ -603,13 +720,18 @@ class GossipExecutor:
                     buf, received, weights, contrib,
                     edge_weight=float(spec.edge_weight), n_blocks=n_blocks,
                     block_rows=pack_spec.block_rows, impl=cfg.mix_impl))
+        if tel is not None and tel.consensus:
+            metrics["resid_sqnorm"] = resid
         mixed = packing.unpack_tree(tuple(out_bufs), pack_spec)
+        ret = (mixed,)
         if cfg.delay:
-            return mixed, tuple(new_state)
-        return mixed
+            ret = ret + (tuple(new_state),)
+        if tel is not None:
+            ret = ret + (metrics,)
+        return ret[0] if len(ret) == 1 else ret
 
     def _shard_map_round_clipped(self, tree, state, weights, contrib,
-                                 pack_spec, perms):
+                                 pack_spec, perms, tcontrib=None):
         """norm_clip needs whole-model norms, so the round splits into an
         encode+permute pass (all collectives still issued up front — the
         wire is byte-identical to the unscreened round), one tiny norm
@@ -618,6 +740,7 @@ class GossipExecutor:
         from repro.kernels.gossip_mix import ops as mix_ops
 
         cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
         fresh = list(packing.pack_tree(tree, pack_spec))
         wires, new_state = [], []
         s2 = jnp.float32(0.0)
@@ -645,6 +768,30 @@ class GossipExecutor:
               for k in range(len(perms))]
         clip = (_clip_factors(jnp.stack(r2), cfg.clip_tau ** 2 * s2)
                 if r2 else jnp.zeros((0,), jnp.float32))
+        metrics = {}
+        if tel is not None:
+            if tel.degree:
+                metrics["in_degree"] = jnp.sum(tcontrib[1:])
+                metrics["sched_contrib"] = tcontrib[1:]
+            if tel.consensus:
+                sq = self._sq(pack_spec)
+                resid = jnp.float32(0.0)
+                for b, buf in enumerate(fresh):
+                    for k in range(len(perms)):
+                        dec = codec.decode(
+                            received[b][k], buf.dtype,
+                            n_blocks=pack_spec.buffer_blocks(b),
+                            block_rows=pack_spec.block_rows)
+                        resid = resid + tcontrib[1 + k] * sq(
+                            dec.astype(jnp.float32)
+                            - buf.astype(jnp.float32))
+                metrics["resid_sqnorm"] = resid
+            if tel.clip:
+                # LOCAL per-receiver count of incoming wires this client
+                # clipped (a per-sender count here would need a reverse
+                # collective; the stacked substrate has the global view)
+                metrics["clip_recv"] = jnp.sum(
+                    ((clip < 1.0) & (tcontrib[1:] > 0.0)).astype(jnp.int32))
         out_bufs = [
             codec.reduce(buf, received[b], weights, contrib,
                          edge_weight=float(spec.edge_weight),
@@ -653,21 +800,28 @@ class GossipExecutor:
                          sender_scale=clip)
             for b, buf in enumerate(fresh)]
         mixed = packing.unpack_tree(tuple(out_bufs), pack_spec)
+        ret = (mixed,)
         if cfg.delay:
-            return mixed, tuple(new_state)
-        return mixed
+            ret = ret + (tuple(new_state),)
+        if tel is not None:
+            ret = ret + (metrics,)
+        return ret[0] if len(ret) == 1 else ret
 
-    def _stacked_round(self, tree, state, alive, gates, with_stats=False):
+    def _stacked_round(self, tree, state, alive, gates):
         cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
         pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
         if cfg.screen != "none":
             return self._stacked_round_screened(tree, state, alive, gates,
-                                                pack_spec, with_stats)
+                                                pack_spec)
         w = (gossip._static_weight_table(spec)
              if alive is None and gates is None
              else gossip.alive_weight_table(spec, alive, gates))
         gathers = [jnp.asarray(rf) for rf in spec.recv_from]
         fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        metrics, tcontrib = self._stacked_metrics_init(alive, gates)
+        resid = jnp.zeros((spec.n_clients,), jnp.float32)
+        sq = jax.vmap(self._sq(pack_spec))
         out_bufs, new_state = [], []
         for b, buf in enumerate(fresh):
             n_blocks = pack_spec.buffer_blocks(b)
@@ -690,17 +844,40 @@ class GossipExecutor:
                                        for idx in gathers], axis=1)
             out = jnp.einsum("nk,nk...->n...", w, stack.astype(jnp.float32))
             out_bufs.append(out.astype(buf.dtype))
+            if tel is not None and tel.consensus:
+                for s in range(len(gathers)):
+                    resid = resid + tcontrib[:, 1 + s] * sq(
+                        stack[:, 1 + s].astype(jnp.float32)
+                        - buf.astype(jnp.float32))
             if cfg.delay:
                 new_state.append(buf if cfg.codec == "f32"
                                  else jax.vmap(enc)(buf))
+        if tel is not None and tel.consensus:
+            metrics["resid_sqnorm"] = resid
         mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
             tuple(out_bufs))
+        ret = (mixed,)
         if cfg.delay:
-            return mixed, tuple(new_state)
-        return mixed
+            ret = ret + (tuple(new_state),)
+        if tel is not None:
+            ret = ret + (metrics,)
+        return ret[0] if len(ret) == 1 else ret
 
-    def _stacked_round_screened(self, tree, state, alive, gates, pack_spec,
-                                with_stats):
+    def _stacked_metrics_init(self, alive, gates):
+        """(metrics dict seeded with the degree metrics, contributor table)
+        for a stacked telemetry build — (empty, None) when telemetry is off
+        so the call sites stay single-line."""
+        tel = self.config.telemetry
+        if tel is None:
+            return {}, None
+        _, tcontrib = gossip.raw_contrib_tables(self.spec, alive, gates)
+        metrics = {}
+        if tel.degree:
+            metrics["in_degree"] = jnp.sum(tcontrib[:, 1:], axis=1)
+            metrics["sched_contrib"] = tcontrib[:, 1:]
+        return metrics, tcontrib
+
+    def _stacked_round_screened(self, tree, state, alive, gates, pack_spec):
         """Screened stacked round. The gather sources (decoded codec wires /
         the delayed snapshot) are materialized for every buffer first so the
         norm-clip screen can compare whole-model norms; the per-buffer mix
@@ -708,16 +885,16 @@ class GossipExecutor:
         same einsum as the plain round, so an all-ones clip is bitwise
         identical) or the vmapped trimmed-mean kernel (trimmed_mean).
 
-        ``with_stats`` (norm_clip only) additionally returns per-SENDER
+        Under telemetry, the norm_clip cells emit per-SENDER ``clipped``
         counts of receivers that clipped them this round — the suspicion
         signal :class:`repro.core.failures.HealthTracker` accumulates."""
         from repro.kernels.gossip_mix import ops as mix_ops
 
         cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
         if cfg.screen == "norm_clip" and cfg.codec != "f32":
             return self._stacked_round_clipped_quant(tree, state, alive,
-                                                     gates, pack_spec,
-                                                     with_stats)
+                                                     gates, pack_spec)
         gathers = [jnp.asarray(rf) for rf in spec.recv_from]
         fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
         srcs, new_state = [], []
@@ -741,7 +918,7 @@ class GossipExecutor:
             if cfg.delay:
                 new_state.append(buf if cfg.codec == "f32"
                                  else jax.vmap(enc)(buf))
-        stats = None
+        metrics, tcontrib = self._stacked_metrics_init(alive, gates)
         if cfg.screen == "norm_clip":
             w = (gossip._static_weight_table(spec)
                  if alive is None and gates is None
@@ -760,13 +937,13 @@ class GossipExecutor:
             # only — the table already carries the alive/gates renorm and
             # the dead-self identity fallback, both untouched here
             eff = jnp.concatenate([w[:, :1], w[:, 1:] * clip], axis=1)
-            if with_stats:
+            if tel is not None and tel.clip:
                 counts = jnp.zeros(spec.n_clients, jnp.int32)
                 for s, g in enumerate(gathers):
                     flag = ((clip[:, s] < 1.0)
                             & (w[:, 1 + s] > 0.0)).astype(jnp.int32)
                     counts = counts.at[g].add(flag)
-                stats = {"clipped": counts}
+                metrics["clipped"] = counts
 
             def mixer(stack):
                 return jnp.einsum("nk,nk...->n...", eff,
@@ -782,6 +959,8 @@ class GossipExecutor:
                         st, uu, ll, trim=cfg.trim_f,
                         block_rows=pack_spec.block_rows,
                         impl=cfg.mix_impl))(stack, trim_u, trim_live)
+        resid = jnp.zeros((spec.n_clients,), jnp.float32)
+        vsq = jax.vmap(self._sq(pack_spec))
         out_bufs = []
         for b, buf in enumerate(fresh):
             # self row stays the FRESH full-precision buffer; only the
@@ -789,17 +968,24 @@ class GossipExecutor:
             stack = jnp.stack([buf] + [jnp.take(srcs[b], idx, axis=0)
                                        for idx in gathers], axis=1)
             out_bufs.append(mixer(stack).astype(buf.dtype))
+            if tel is not None and tel.consensus:
+                for s in range(len(gathers)):
+                    resid = resid + tcontrib[:, 1 + s] * vsq(
+                        stack[:, 1 + s].astype(jnp.float32)
+                        - buf.astype(jnp.float32))
+        if tel is not None and tel.consensus:
+            metrics["resid_sqnorm"] = resid
         mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
             tuple(out_bufs))
         ret = (mixed,)
         if cfg.delay:
             ret = ret + (tuple(new_state),)
-        if stats is not None:
-            ret = ret + (stats,)
+        if tel is not None:
+            ret = ret + (metrics,)
         return ret[0] if len(ret) == 1 else ret
 
     def _stacked_round_clipped_quant(self, tree, state, alive, gates,
-                                     pack_spec, with_stats):
+                                     pack_spec):
         """Fused quantized norm_clip on the stacked substrate: the int8
         wires are GATHERED, never decoded — the clip norms come straight off
         the wire (``wire_sqnorm``: per-block sum(q^2) x scale^2, exact for
@@ -813,6 +999,7 @@ class GossipExecutor:
         from repro.kernels.gossip_mix import ops as mix_ops
 
         cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
         gathers = [jnp.asarray(rf) for rf in spec.recv_from]
         fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
         wires, new_state = [], []
@@ -845,15 +1032,37 @@ class GossipExecutor:
         # per-client renorm + dead-self identity fallback as the shard_map
         # cell (fixed points stay invisible through the contrib zeros)
         raw, contrib = gossip.raw_contrib_tables(spec, alive, gates)
-        stats = None
-        if with_stats:
-            w = gossip.alive_weight_table(spec, alive, gates)
-            counts = jnp.zeros(spec.n_clients, jnp.int32)
-            for s, g in enumerate(gathers):
-                flag = ((clip[:, s] < 1.0)
-                        & (w[:, 1 + s] > 0.0)).astype(jnp.int32)
-                counts = counts.at[g].add(flag)
-            stats = {"clipped": counts}
+        metrics = {}
+        if tel is not None:
+            if tel.degree:
+                metrics["in_degree"] = jnp.sum(contrib[:, 1:], axis=1)
+                metrics["sched_contrib"] = contrib[:, 1:]
+            if tel.clip:
+                w = gossip.alive_weight_table(spec, alive, gates)
+                counts = jnp.zeros(spec.n_clients, jnp.int32)
+                for s, g in enumerate(gathers):
+                    flag = ((clip[:, s] < 1.0)
+                            & (w[:, 1 + s] > 0.0)).astype(jnp.int32)
+                    counts = counts.at[g].add(flag)
+                metrics["clipped"] = counts
+            if tel.consensus:
+                # the consensus proxy is the ONE telemetry metric this cell
+                # pays real extra compute for: the fused path never decodes
+                # the gathered wires, so residuals dequantize them here
+                vsq = jax.vmap(self._sq(pack_spec))
+                resid = jnp.zeros((spec.n_clients,), jnp.float32)
+                for b, buf in enumerate(fresh):
+                    n_blocks = pack_spec.buffer_blocks(b)
+                    dec = jax.vmap(
+                        lambda x, n_blocks=n_blocks, dtype=buf.dtype:
+                        codec.decode(x, dtype, n_blocks=n_blocks,
+                                     block_rows=pack_spec.block_rows))(
+                        wires[b])
+                    for s, g in enumerate(gathers):
+                        resid = resid + contrib[:, 1 + s] * vsq(
+                            jnp.take(dec, g, axis=0).astype(jnp.float32)
+                            - buf.astype(jnp.float32))
+                metrics["resid_sqnorm"] = resid
         out_bufs = []
         for b, buf in enumerate(fresh):
             n_blocks = pack_spec.buffer_blocks(b)
@@ -873,8 +1082,8 @@ class GossipExecutor:
         ret = (mixed,)
         if cfg.delay:
             ret = ret + (tuple(new_state),)
-        if stats is not None:
-            ret = ret + (stats,)
+        if tel is not None:
+            ret = ret + (metrics,)
         return ret[0] if len(ret) == 1 else ret
 
     def _blocked_round(self, tree, alive, gates):

@@ -81,6 +81,7 @@ threads the in-flight snapshot, see `launch.steps.TrainSetup`).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
@@ -96,6 +97,8 @@ from repro.core.topology import Overlay
 from repro.launch import mesh as mesh_lib
 from repro.overlay import plan as plan_lib
 from repro.overlay.plan import ActiveSetPlan, RoundPlan
+from repro.telemetry import TelemetryLogger, TraceCounter
+from repro.telemetry import metrics as telemetry_metrics
 
 PyTree = Any
 
@@ -157,6 +160,19 @@ class ElasticTrainer:
     # (norm_clip telemetry) is evicted through the SAME splice repair as a
     # heartbeat-dead client. 0 disables.
     quarantine_rounds: int = 0
+    # opt-in in-graph round metrics (repro.telemetry.TelemetryConfig): the
+    # stacked engine round additionally returns a RoundMetrics dict of
+    # traced scalars (consensus residual, live in-degree, gate mass, clip
+    # counts) with ZERO extra retraces — metrics of the latest round are
+    # kept on ``last_metrics``. None = engine round lowers exactly as
+    # before (norm_clip quarantine still works: the screen's clip counters
+    # ride an internal clip-only config).
+    telemetry: telemetry_metrics.TelemetryConfig | None = None
+    # optional structured event stream (repro.telemetry.TelemetryLogger):
+    # round records with metric summaries, compile/retrace events (via the
+    # shared TraceCounter), splice/mask repair records, suspicion counts,
+    # and scripted-attack activations all land in one JSONL log.
+    logger: TelemetryLogger | None = None
 
     def __post_init__(self):
         if self.gossip_delay not in (0, 1):
@@ -198,6 +214,20 @@ class ElasticTrainer:
                 raise ValueError("gossip_block composes with the built-in "
                                  "round only; a custom step_builder owns "
                                  "its own substrate")
+        if self.telemetry is not None:
+            if not isinstance(self.telemetry,
+                              telemetry_metrics.TelemetryConfig):
+                raise TypeError("telemetry must be a telemetry.TelemetryConfig"
+                                f" (got {type(self.telemetry).__name__})")
+            if self.step_builder is not None:
+                raise ValueError("telemetry composes with the built-in "
+                                 "stacked round; a production step_builder "
+                                 "carries its own metrics via "
+                                 "ParallelConfig.gossip_telemetry")
+            if self.gossip_block:
+                raise ValueError("telemetry needs a packed substrate "
+                                 "(stacked/shard_map); the blocked round "
+                                 "is not wired for in-graph metrics")
         if self.gossip_delay and self.step_builder is not None:
             # the production pipelined step threads its own in-flight state
             # (mesh-leading-dims layout, primed via TrainSetup.init_inflight)
@@ -214,8 +244,12 @@ class ElasticTrainer:
             self.overlay.n, self.straggler_rounds, self.failure_rounds,
             self.quarantine_rounds)
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
-        self.n_traces = 0          # jit traces of the round fn (see step())
+        # jit traces of the round fn, via the shared telemetry counter: a
+        # hit per trace, surviving repairs (n_traces == 1 + #splices), and
+        # emitting "compile" events when a logger is attached
+        self.tracer = TraceCounter("elastic_round", logger=self.logger)
         self.round_no = 0          # round index feeding the plan's gates
+        self.last_metrics: dict | None = None  # latest round's RoundMetrics
         self.repairs: list[dict] = []
         # current-index -> original-attack-plan-column map, compacted on
         # every splice repair so attackers keep their script across repairs
@@ -246,10 +280,17 @@ class ElasticTrainer:
         # plan, gates are traced data. plan_lib.is_active is the one shared
         # predicate — it matches steps.py's `round_plan != "static"` rule
         use_plan = plan_lib.is_active(self.plan)
-        # attack + clip telemetry are build-time decisions like the plan:
-        # the operands themselves (attack vector, PRNG key) are traced data
+        # attack + telemetry are build-time decisions like the plan: the
+        # operands themselves (attack vector, PRNG key) are traced data.
+        # norm_clip quarantine needs the per-sender clip counters, so the
+        # screen forces at least a clip-only telemetry config even when the
+        # caller asked for none — same lowering the old with_stats path had.
         use_attack = self.attack_plan is not None
-        with_stats = self.gossip_screen == "norm_clip"
+        tel = self.telemetry
+        if self.gossip_screen == "norm_clip":
+            tel = (dataclasses.replace(tel, clip=True) if tel is not None
+                   else telemetry_metrics.clip_only())
+        use_tel = tel is not None
 
         def client(p, b, lr):
             v = jax.tree.map(jnp.zeros_like, p)
@@ -277,7 +318,7 @@ class ElasticTrainer:
             executor = self._executor
 
             def round_fn(params, batches, lr, alive, gates, attack, akey):
-                self.n_traces += 1  # python side effect: runs only on trace
+                self.tracer.hit()  # python side effect: runs only on trace
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
                 if use_attack:
@@ -299,37 +340,41 @@ class ElasticTrainer:
                                           delay=self.gossip_delay,
                                           screen=self.gossip_screen,
                                           clip_tau=self.screen_tau,
-                                          trim_f=self.screen_trim), spec)
+                                          trim_f=self.screen_trim,
+                                          telemetry=tel), spec)
         executor = self._executor
 
         if self.gossip_delay:
             def round_fn(params, inflight, batches, lr, alive, gates,
                          attack, akey):
-                self.n_traces += 1  # python side effect: only runs on trace
+                self.tracer.hit()  # python side effect: only runs on trace
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
                 if use_attack:
                     params = failures_lib.apply_attack(params, attack, akey)
                 out = executor(params, state=inflight, alive=alive,
-                               gates=gates if use_plan else None,
-                               with_stats=with_stats)
-                mixed, inflight = out[0], out[1]
-                stats = out[2] if with_stats else None
-                return mixed, losses, inflight, stats
+                               gates=gates if use_plan else None)
+                if use_tel:
+                    mixed, inflight, metrics = out
+                else:
+                    mixed, inflight = out
+                    metrics = None
+                return mixed, losses, inflight, metrics
             return jax.jit(round_fn)
 
         def round_fn(params, batches, lr, alive, gates, attack, akey):
-            self.n_traces += 1  # python side effect: runs only when tracing
+            self.tracer.hit()  # python side effect: runs only when tracing
             params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                 params, batches, lr)
             if use_attack:
                 params = failures_lib.apply_attack(params, attack, akey)
             out = executor(params, alive=alive,
-                           gates=gates if use_plan else None,
-                           with_stats=with_stats)
-            mixed = out[0] if with_stats else out
-            stats = out[1] if with_stats else None
-            return mixed, losses, stats
+                           gates=gates if use_plan else None)
+            if use_tel:
+                mixed, metrics = out
+            else:
+                mixed, metrics = out, None
+            return mixed, losses, metrics
         return jax.jit(round_fn)
 
     def gates_for_round(self, rnd: int | None = None) -> jax.Array:
@@ -346,6 +391,11 @@ class ElasticTrainer:
     @property
     def n_clients(self) -> int:
         return self.overlay.n
+
+    @property
+    def n_traces(self) -> int:
+        """Jit traces of the round fn so far (TraceCounter-backed)."""
+        return self.tracer.count
 
     def observe_heartbeats(self, alive: np.ndarray, params: PyTree,
                            client_state: PyTree | None = None
@@ -386,6 +436,8 @@ class ElasticTrainer:
             self.repairs.append({"dead": dead, "spliced": False,
                                  "masked": sorted(self._masked),
                                  "n_after": self.overlay.n})
+            if self.logger is not None:
+                self.logger.repair(self.repairs[-1])
             return params, client_state, None
 
         # the in-flight snapshot rides the same remap as params: its layout
@@ -400,6 +452,8 @@ class ElasticTrainer:
         self.repairs.append({"dead": evict, "spliced": True,
                              "quarantined": sorted(suspects & set(evict)),
                              "n_after": self.overlay.n})
+        if self.logger is not None:
+            self.logger.repair(self.repairs[-1])
         self._masked.clear()
         # attackers keep their plan column across compaction: survivors'
         # current indices shift, their original-plan identity must not
@@ -446,26 +500,49 @@ class ElasticTrainer:
             attack = jnp.asarray(vec[:, self._attack_cols])
             akey = jnp.asarray(
                 np.array([self.attack_seed, self.round_no], np.uint32))
+            if self.logger is not None:
+                for r, ids, mode, mag in self.attack_plan.events:
+                    if r == self.round_no:  # script activates this round
+                        self.logger.event(
+                            "attack", round=self.round_no, mode=mode,
+                            clients=[int(c) for c in ids],
+                            magnitude=float(mag))
+        rnd = self.round_no
         self.round_no += 1
         lr = jnp.asarray(lr, jnp.float32)
         if self.step_builder is not None:
             # custom builders keep the documented 5-arg StepBuilder contract
             # (screens/attacks with a builder are rejected in __post_init__)
             return self._round(params, batches, lr, alive, gates)
-        if self.gossip_delay:
-            if self._inflight is None:  # prime: round 0 mixes the initial
-                # snapshot in the codec's wire format (packed f32 buffers,
-                # or the folded int8 wire for the quantized codecs)
-                self._inflight = self._executor.init_state(params)
-            params, losses, self._inflight, stats = self._round(
-                params, self._inflight, batches, lr, alive, gates,
-                attack, akey)
-        else:
-            params, losses, stats = self._round(params, batches, lr, alive,
-                                                gates, attack, akey)
-        if stats is not None:
+        phase = (self.logger.phase("round") if self.logger is not None
+                 else contextlib.nullcontext())
+        with phase:
+            if self.gossip_delay:
+                if self._inflight is None:  # prime: round 0 mixes the
+                    # initial snapshot in the codec's wire format (packed
+                    # f32 buffers, or the folded int8 wire when quantized)
+                    self._inflight = self._executor.init_state(params)
+                params, losses, self._inflight, metrics = self._round(
+                    params, self._inflight, batches, lr, alive, gates,
+                    attack, akey)
+            else:
+                params, losses, metrics = self._round(params, batches, lr,
+                                                      alive, gates, attack,
+                                                      akey)
+        self.last_metrics = metrics
+        if metrics is not None and "clipped" in metrics:
             # per-sender count of receivers that clipped them this round
-            self.health.observe_suspicion(np.asarray(stats["clipped"]))
+            counts = np.asarray(metrics["clipped"])
+            self.health.observe_suspicion(counts)
+            if self.logger is not None and counts.sum() > 0:
+                self.logger.event("suspicion", round=rnd,
+                                  clipped=[int(c) for c in counts])
+        if self.logger is not None:
+            self.logger.round(
+                rnd, loss=float(jnp.mean(losses)),
+                alive=int(np.asarray(alive).sum()),
+                **telemetry_metrics.summarize_metrics(
+                    metrics, n_clients=self.overlay.n))
         return params, losses
 
     def checkpoint(self, rnd: int, params: PyTree) -> None:

@@ -64,6 +64,7 @@ from repro.models import params as params_lib
 from repro.models.api import ModelAPI
 from repro.models.params import Leaf
 from repro.models.sharding_ctx import activation_sharding
+from repro.telemetry.metrics import TelemetryConfig
 
 PyTree = Any
 
@@ -148,6 +149,9 @@ class TrainSetup:
     init_inflight: Any = None      # jitted params -> in-flight snapshot
     # the parsed engine cell (substrate x codec x timing) the step runs on
     engine_config: engine_lib.GossipEngineConfig | None = None
+    # exact per-client wire bytes one round ships (0 when untelemetered /
+    # no overlay) — the static fact behind metrics["telemetry"]["wire_bytes"]
+    wire_bytes_per_round: int = 0
 
 
 def _train_rules(caxes: tuple[str, ...], zero3: bool = True) -> dict:
@@ -251,7 +255,10 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     ecfg = engine_lib.parse_gossip_impl(par.gossip_impl, par.gossip_delay,
                                         par.gossip_codec, par.gossip_screen,
                                         par.gossip_clip_tau,
-                                        par.gossip_trim_f)
+                                        par.gossip_trim_f,
+                                        telemetry=(TelemetryConfig()
+                                                   if par.gossip_telemetry
+                                                   else None))
     pack_spec = None
     if ecfg.substrate == "shard_map":
         pack_spec = packing_lib.make_pack_spec(
@@ -296,6 +303,21 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             f"available: {', '.join(plan_lib.ACTIVE_SET_NAMES)}")
     use_active = dfl.active_set != "full"
 
+    # in-graph telemetry (build-time branch, same discipline as gates /
+    # active / delay: config decides at trace time, off lowers to the exact
+    # untelemetered HLO). The island additionally returns the executor's
+    # RoundMetrics as per-DEVICE partials — each metric leaf gains one
+    # leading dim per mesh axis with out_spec P(*axis_names), so NO
+    # collective aggregates them in-graph; the host sums the device partials
+    # (repro.telemetry.summarize_metrics — a per-shard proxy for leaves
+    # replicated over fsdp/tp, which count once per copy).
+    use_tel = run_cfg.telemetry is not None and executor is not None
+    wire_bytes = executor.wire_bytes_per_round() if use_tel else 0
+    axis_names = tuple(dmesh.axis_names)
+    axis_sizes = tuple(int(dmesh.shape[a]) for a in axis_names)
+    lead = (1,) * len(axis_sizes)
+    tel_spec = P(*axis_names)
+
     def gossip_fn(params, alive, gates):
         if executor is None:
             return params
@@ -311,12 +333,22 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             # the packed engine is failure/plan-aware (the per-leaf
             # baseline substrate ignores both, and a static config drops
             # the gate pathway at trace time)
+            if use_tel:
+                mixed, met = executor(local, alive=alive_vec,
+                                      gates=gate_vec if use_gates else None)
+                return (jax.tree.map(lambda x: x[None], mixed),
+                        jax.tree.map(lambda x: x.reshape(lead + x.shape),
+                                     met))
             mixed = (executor(local)
                      if run_cfg.substrate == "per_leaf"
                      else executor(local, alive=alive_vec,
                                    gates=gate_vec if use_gates else None))
             return jax.tree.map(lambda x: x[None], mixed)
 
+        if use_tel:
+            return mesh_lib.shard_map(
+                body, dmesh, in_specs=(pspecs, P(), P()),
+                out_specs=(pspecs, tel_spec))(params, alive, gates)
         return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P(), P()),
                                   out_specs=pspecs)(params, alive, gates)
 
@@ -327,8 +359,6 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     # bytes). Its global representation carries one leading dim per mesh
     # axis (each sharded over that axis), so the fully-manual island sees
     # exactly one (rows, LANE) block per device — the state never reshards.
-    axis_names = tuple(dmesh.axis_names)
-    axis_sizes = tuple(int(dmesh.shape[a]) for a in axis_names)
     inflight_structs = inflight_pspecs = None
     if use_delay:
         local_state_structs = executor.state_structs()
@@ -337,22 +367,31 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         inflight_structs = tuple(
             jax.ShapeDtypeStruct(axis_sizes + s.shape, s.dtype)
             for s in local_state_structs)
-        lead = (1,) * len(axis_sizes)
 
         def gossip_fn_delayed(params, alive, gates, inflight):
             def body(p, alive_vec, gate_vec, state):
                 local = jax.tree.map(lambda x: x[0], p)
                 state_local = tuple(s.reshape(s.shape[-2:]) for s in state)
+                if use_tel:
+                    mixed, new_state, met = executor(
+                        local, state=state_local, alive=alive_vec,
+                        gates=gate_vec if use_gates else None)
+                    return (jax.tree.map(lambda x: x[None], mixed),
+                            tuple(s.reshape(lead + s.shape)
+                                  for s in new_state),
+                            jax.tree.map(lambda x: x.reshape(lead + x.shape),
+                                         met))
                 mixed, new_state = executor(
                     local, state=state_local, alive=alive_vec,
                     gates=gate_vec if use_gates else None)
                 return (jax.tree.map(lambda x: x[None], mixed),
                         tuple(s.reshape(lead + s.shape) for s in new_state))
 
+            out_specs = ((pspecs, inflight_pspecs, tel_spec) if use_tel
+                         else (pspecs, inflight_pspecs))
             return mesh_lib.shard_map(
                 body, dmesh, in_specs=(pspecs, P(), P(), inflight_pspecs),
-                out_specs=(pspecs, inflight_pspecs))(params, alive, gates,
-                                                     inflight)
+                out_specs=out_specs)(params, alive, gates, inflight)
 
         def snapshot_fn(params):
             """Prime the pipeline: encode the current post-mix params into
@@ -418,7 +457,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         # renormalize) — the multiply happens outside the gossip island so
         # the island's trace is independent of whether a plan is on
         eff_alive = alive * kw["active"] if use_active else alive
-        out_state = None
+        out_state = tel_met = None
         with activation_sharding(act_rules):
             params, loss = _local_phase(params, batch, lr)
             if use_attack:
@@ -428,11 +467,28 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                 # the d ppermutes inside gossip_fn_delayed read only the
                 # snapshot (a step input), so the scheduler overlaps them
                 # with the local-step scan
-                params, out_state = gossip_fn_delayed(params, eff_alive,
-                                                      gates, kw["inflight"])
+                island = gossip_fn_delayed(params, eff_alive, gates,
+                                           kw["inflight"])
+                if use_tel:
+                    params, out_state, tel_met = island
+                else:
+                    params, out_state = island
+            elif use_tel:
+                params, tel_met = gossip_fn(params, eff_alive, gates)
             else:
                 params = gossip_fn(params, eff_alive, gates)
         metrics = {"loss": jnp.mean(loss)}
+        if use_tel:
+            tel_met = dict(tel_met)
+            # exact per-codec wire bytes (a static wire_struct fact) and the
+            # attack-vector energy (zero on all-honest rounds) ride as
+            # replicated scalars next to the island's per-device partials
+            tel_met["wire_bytes"] = jnp.float32(wire_bytes)
+            if use_attack:
+                atk = kw["attack"]
+                tel_met["attack_energy"] = (jnp.sum((atk[0] - 1.0) ** 2)
+                                            + jnp.sum(atk[1] ** 2))
+            metrics["telemetry"] = tel_met
         if use_delay:
             return params, metrics, out_state
         return params, metrics
@@ -446,9 +502,21 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         repl,
         repl,
     ]
+    metrics_shardings = NamedSharding(dmesh, P())
+    if use_tel:
+        # the telemetry subtree keeps the island's per-device layout (one
+        # leading dim per mesh axis) — forcing it replicated here would
+        # make jit insert the very all-gather telemetry promises not to add
+        tel_shardings = {k: NamedSharding(dmesh, tel_spec)
+                         for k in executor.metrics_structs()}
+        tel_shardings["wire_bytes"] = NamedSharding(dmesh, P())
+        if use_attack:
+            tel_shardings["attack_energy"] = NamedSharding(dmesh, P())
+        metrics_shardings = {"loss": NamedSharding(dmesh, P()),
+                             "telemetry": tel_shardings}
     out_shardings = (
         param_shardings,
-        NamedSharding(dmesh, P()),
+        metrics_shardings,
     )
     input_specs = {"batch": batch_specs,
                    "lr": jax.ShapeDtypeStruct((), jnp.float32),
@@ -493,7 +561,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
         dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec,
         gossip_delay=par.gossip_delay if use_delay else 0,
-        init_inflight=init_inflight, engine_config=run_cfg)
+        init_inflight=init_inflight, engine_config=run_cfg,
+        wire_bytes_per_round=wire_bytes)
 
 
 # ------------------------------------------------------------- serve steps

@@ -32,6 +32,8 @@ from repro.launch.steps import build_overlay
 from repro.models import lstm as lstm_model
 from repro.models import params as params_lib
 from repro.overlay import plan as overlay_plan
+from repro.telemetry import TelemetryLogger, TraceCounter
+from repro.telemetry import metrics as telemetry_metrics
 
 PyTree = Any
 
@@ -69,6 +71,15 @@ class SimTrainer:
     # data, so attacker churn never retraces the round
     attack_plan: failures_lib.AttackPlan | None = None
     attack_seed: int = 0
+    # opt-in in-graph round metrics (repro.telemetry.TelemetryConfig):
+    # when set, the stacked engine round additionally returns a traced
+    # RoundMetrics dict and run()'s history records carry its host summary
+    # (consensus residual, in-degree, gate mass, clip counts). None (the
+    # default) lowers the round exactly as before.
+    telemetry: telemetry_metrics.TelemetryConfig | None = None
+    # optional structured JSONL event stream (round records, compiles,
+    # repairs) — see repro.telemetry.TelemetryLogger
+    logger: TelemetryLogger | None = None
 
     def __post_init__(self):
         if self.gossip_delay not in (0, 1):
@@ -92,7 +103,14 @@ class SimTrainer:
                     f"blocked layout needs "
                     f"{self.overlay.n // self.gossip_block} devices "
                     f"(= n/block), only {len(jax.devices())} visible")
+        if self.telemetry is not None and self.gossip_block:
+            raise ValueError("telemetry needs the stacked substrate; the "
+                             "blocked round is not wired for in-graph "
+                             "metrics")
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
+        # shared retrace accounting (emits "compile" events when logging)
+        self.tracer = TraceCounter("sim_round", logger=self.logger)
+        self.last_metrics: dict | None = None
         self._alive = np.ones(self.overlay.n, dtype=np.float32)
         self._inflight = None  # delayed mode's carried snapshot
         # current-index -> original-plan-column map (compacted on repair)
@@ -104,6 +122,7 @@ class SimTrainer:
         # (exact Chow weights; shared predicate with ElasticTrainer/steps.py)
         use_plan = overlay_plan.is_active(self.plan)
         use_attack = self.attack_plan is not None
+        use_tel = self.telemetry is not None
 
         def client(p, b, lr):
             v = jax.tree.map(jnp.zeros_like, p)
@@ -131,6 +150,7 @@ class SimTrainer:
 
             @partial(jax.jit, static_argnames=())
             def round_fn(params, batches, lr, alive, gates, attack, akey):
+                self.tracer.hit()  # python side effect: runs only on trace
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
                 if use_attack:
@@ -143,7 +163,7 @@ class SimTrainer:
                 params = mesh_lib.shard_map(
                     island, mesh, in_specs=(P("clients"), P(), P()),
                     out_specs=P("clients"))(params, alive, gates)
-                return params, losses
+                return params, losses, None
             return round_fn
 
         self._executor = engine_lib.build_gossip_executor(
@@ -152,32 +172,42 @@ class SimTrainer:
                                           delay=self.gossip_delay,
                                           screen=self.gossip_screen,
                                           clip_tau=self.screen_tau,
-                                          trim_f=self.screen_trim), spec)
+                                          trim_f=self.screen_trim,
+                                          telemetry=self.telemetry), spec)
         executor = self._executor
 
         if self.gossip_delay:
             @partial(jax.jit, static_argnames=())
             def round_fn(params, inflight, batches, lr, alive, gates,
                          attack, akey):
+                self.tracer.hit()  # python side effect: only runs on trace
                 params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                     params, batches, lr)
                 if use_attack:
                     params = failures_lib.apply_attack(params, attack, akey)
-                params, inflight = executor(
-                    params, state=inflight, alive=alive,
-                    gates=gates if use_plan else None)
-                return params, losses, inflight
+                out = executor(params, state=inflight, alive=alive,
+                               gates=gates if use_plan else None)
+                if use_tel:
+                    params, inflight, metrics = out
+                else:
+                    (params, inflight), metrics = out, None
+                return params, losses, inflight, metrics
             return round_fn
 
         @partial(jax.jit, static_argnames=())
         def round_fn(params, batches, lr, alive, gates, attack, akey):
+            self.tracer.hit()  # python side effect: runs only when tracing
             params, losses = jax.vmap(client, in_axes=(0, 0, None))(
                 params, batches, lr)
             if use_attack:
                 params = failures_lib.apply_attack(params, attack, akey)
-            params = executor(params, alive=alive,
-                              gates=gates if use_plan else None)
-            return params, losses
+            out = executor(params, alive=alive,
+                           gates=gates if use_plan else None)
+            if use_tel:
+                params, metrics = out
+            else:
+                params, metrics = out, None
+            return params, losses, metrics
         return round_fn
 
     def _attack_operands(self, rnd: int):
@@ -223,6 +253,10 @@ class SimTrainer:
         self._alive = new_alive
         # attackers keep their original plan column across compaction
         self._attack_cols = self._attack_cols[survivors]
+        if self.logger is not None:
+            self.logger.repair({"dead": [int(d) for d in dead],
+                                "spliced": True,
+                                "n_after": self.overlay.n})
         self._round_fn = self._build(self.spec)
         if self.gossip_block:
             # a splice can shrink the blocked mesh; the remapped rows are
@@ -259,21 +293,26 @@ class SimTrainer:
             if self.gossip_delay:
                 if self._inflight is None:  # prime with the initial params
                     self._inflight = self._executor.init_state(params)
-                params, losses, self._inflight = self._round_fn(
+                params, losses, self._inflight, metrics = self._round_fn(
                     params, self._inflight, batches, lr_t,
                     jnp.asarray(alive_t), self._gates(rnd),
                     attack, akey)
             else:
-                params, losses = self._round_fn(params, batches, lr_t,
-                                                jnp.asarray(alive_t),
-                                                self._gates(rnd),
-                                                attack, akey)
+                params, losses, metrics = self._round_fn(
+                    params, batches, lr_t, jnp.asarray(alive_t),
+                    self._gates(rnd), attack, akey)
+            self.last_metrics = metrics
             rec = {"round": rnd,
                    "train_loss": float(jnp.mean(losses)),
                    "seconds": round(time.time() - t0, 3)}
+            rec.update(telemetry_metrics.summarize_metrics(
+                metrics, n_clients=self.overlay.n))
             if eval_fn is not None and rnd % log_every == 0:
                 rec.update(eval_fn(params))
             history.append(rec)
+            if self.logger is not None:
+                self.logger.round(rnd, **{k: v for k, v in rec.items()
+                                          if k != "round"})
             if self.ckpt is not None:
                 self.ckpt.maybe_save(rnd, params, {"round": rnd})
         return params, history
@@ -287,7 +326,8 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 gossip_codec="f32", gossip_screen="none",
                 attackers=0, attack_mode="sign_flip",
                 attack_magnitude=1.0, active_set="full", active_k=1,
-                active_shards=2, gossip_block=0) -> list[dict]:
+                active_shards=2, gossip_block=0,
+                telemetry=False, telemetry_log=None) -> list[dict]:
     from repro.data import federated, pipeline, shakespeare
 
     toks, vocab = shakespeare.corpus()
@@ -320,13 +360,21 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                                                mode=attack_mode,
                                                magnitude=attack_magnitude,
                                                seed=seed)
+    logger = None
+    if telemetry_log is not None:
+        logger = TelemetryLogger(telemetry_log, run="char_lm",
+                                 n_clients=n_clients, topology=topology,
+                                 degree=degree, codec=gossip_codec)
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
                          dcfg=dcfg, ckpt=ckpt, plan=plan,
                          active_plan=active, gossip_block=gossip_block,
                          gossip_delay=gossip_delay,
                          gossip_codec=gossip_codec,
                          gossip_screen=gossip_screen,
-                         attack_plan=attack, attack_seed=seed)
+                         attack_plan=attack, attack_seed=seed,
+                         telemetry=(telemetry_metrics.TelemetryConfig()
+                                    if telemetry or telemetry_log else None),
+                         logger=logger)
 
     # held-out evaluation: last 10% of the corpus
     ev = pipeline.TokenBatcher(tokens=toks, spans=[(int(len(toks) * .9),
@@ -362,6 +410,8 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
     params, history = trainer.run(params, batch_fn, rounds,
                                   lr_fn=lambda r: lr, eval_fn=eval_fn,
                                   failure_plan=plan, start_round=start)
+    if logger is not None:
+        logger.close()
     return history
 
 
@@ -402,6 +452,13 @@ def main() -> None:
                     help="number of scripted Byzantine clients")
     ap.add_argument("--attack-mode", default="sign_flip",
                     choices=["sign_flip", "scale", "noise"])
+    ap.add_argument("--telemetry", action="store_true",
+                    help="emit in-graph round metrics into the history "
+                         "records (consensus residual, in-degree, gate "
+                         "mass, clip counts)")
+    ap.add_argument("--telemetry-log", default=None,
+                    help="write the structured JSONL event stream here "
+                         "(implies --telemetry)")
     ap.add_argument("--local-steps", type=int, default=3)
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default=None)
@@ -421,7 +478,9 @@ def main() -> None:
                        attack_mode=args.attack_mode,
                        active_set=args.active_set, active_k=args.active_k,
                        active_shards=args.active_shards,
-                       gossip_block=args.gossip_block)
+                       gossip_block=args.gossip_block,
+                       telemetry=args.telemetry,
+                       telemetry_log=args.telemetry_log)
     for rec in hist:
         print(json.dumps(rec))
     if args.out:

@@ -1,0 +1,105 @@
+"""Event schema + the one shared retrace counter.
+
+Every record in the telemetry stream is a flat JSON-able dict with three
+reserved fields stamped by :class:`repro.telemetry.log.TelemetryLogger`:
+``seq`` (per-logger monotone ordinal — total order within a run), ``ts``
+(wall clock, seconds) and ``kind`` (one of :data:`EVENT_KINDS`). Everything
+else is kind-specific payload:
+
+* ``run``     — run header (config echo, wire bytes, client count).
+* ``round``   — one training round: loss, metrics summary, phase seconds.
+* ``compile`` — a jit trace happened (:class:`TraceCounter` hook): counter
+  name + running count. Round 0 emits exactly one; any later one is the
+  re-jit of a membership change — anything else is a retrace bug.
+* ``repair``  — a splice repair / permanent masking (the elastic runtime's
+  ``repairs`` record verbatim: dead, spliced, quarantined/masked, n_after).
+* ``suspicion`` — one round of norm-clip clip counts entering the
+  :class:`repro.core.failures.HealthTracker` (per-sender totals).
+* ``attack``  — the scripted attacker set changed (AttackPlan activation).
+* ``note``    — freeform.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+__all__ = ["EVENT_KINDS", "TraceCounter", "validate_event"]
+
+EVENT_KINDS = ("run", "round", "compile", "repair", "suspicion", "attack",
+               "note")
+
+
+def validate_event(record: dict) -> dict:
+    """Check the reserved fields of one stream record (round-trip guard)."""
+    for field in ("seq", "ts", "kind"):
+        if field not in record:
+            raise ValueError(f"telemetry record missing {field!r}: {record}")
+    if record["kind"] not in EVENT_KINDS:
+        raise ValueError(f"unknown telemetry event kind {record['kind']!r}; "
+                         f"available: {', '.join(EVENT_KINDS)}")
+    return record
+
+
+class TraceCounter:
+    """THE retrace counter — one implementation for every ``n_traces`` /
+    ``_cache_size()`` variant the tests and benches used to hand-roll.
+
+    Three equivalent hookups, matching the three legacy idioms:
+
+    * :meth:`hit` — call it inside the function being jitted (a python
+      side effect, so it runs at trace time only)::
+
+          tc = TraceCounter("round")
+          @jax.jit
+          def round_fn(...):
+              tc.hit()
+              ...
+          assert tc.count == 1
+
+    * :meth:`wrap` — the same, as a decorator for a pre-built body.
+    * :meth:`cache_size` — read an already-jitted function's executable
+      cache (the ``step_fn._cache_size()`` idiom; no instance needed).
+
+    With a :class:`repro.telemetry.log.TelemetryLogger` attached, every hit
+    additionally emits a ``compile`` event into the stream, so retraces are
+    queryable next to the rounds that caused them.
+    """
+
+    def __init__(self, name: str = "step", logger: Any = None):
+        self.name = name
+        self.count = 0
+        self.logger = logger
+
+    def hit(self) -> None:
+        """Count one trace (call from inside the traced function)."""
+        self.count += 1
+        if self.logger is not None:
+            self.logger.event("compile", counter=self.name, count=self.count)
+
+    def wrap(self, fn):
+        """``fn`` with a :meth:`hit` on entry (count traces of ``jit(
+        tc.wrap(fn))``)."""
+        @functools.wraps(fn)
+        def counted(*args, **kwargs):
+            self.hit()
+            return fn(*args, **kwargs)
+        return counted
+
+    def reset(self) -> None:
+        self.count = 0
+
+    @staticmethod
+    def cache_size(jitted: Any) -> int:
+        """Executable-cache size of a jitted function — the compiled-trace
+        count for callers that cannot instrument the body."""
+        return int(jitted._cache_size())
+
+    def expect(self, expected: int, what: str = "") -> None:
+        """Assert the count (the shared assertion the benches emit)."""
+        if self.count != expected:
+            raise AssertionError(
+                f"{self.name}: {self.count} traces, expected {expected}"
+                + (f" ({what})" if what else ""))
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"TraceCounter({self.name!r}, count={self.count})"

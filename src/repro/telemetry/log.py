@@ -1,0 +1,115 @@
+"""TelemetryLogger: the one structured JSONL stream both trainers thread.
+
+A logger is a cheap host-side object: it stamps records (``seq``/``ts``/
+``kind``), keeps them in memory (``records``), and — when given a path —
+appends each as one JSON line (flushed per record, so a crashed run keeps
+everything up to its last round). Phase wall-clock rides a context
+manager::
+
+    log = TelemetryLogger("run.jsonl", run="demo")
+    with log.phase("local+gossip"):
+        params, losses = trainer.step(params, batches, lr)
+    log.round(rnd, loss=float(losses.mean()), metrics=summary)
+
+``round`` folds the phase seconds accumulated since the previous round
+record into the emitted record (``{"phases": {name: seconds}}``) — the
+local-step vs gossip vs host breakdown is whatever phases the caller
+brackets. ``phase(..., profile=True)`` additionally wraps the block in a
+``jax.profiler.TraceAnnotation`` so the same names show up on a profiler
+timeline when one is being captured (a no-op otherwise).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Any, IO
+
+from repro.telemetry.events import validate_event
+
+__all__ = ["TelemetryLogger", "read_jsonl"]
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Load a telemetry stream back, validating the reserved fields."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(validate_event(json.loads(line)))
+    return records
+
+
+class TelemetryLogger:
+    """Structured JSONL event stream (see :mod:`repro.telemetry.events`
+    for the record schema). ``path=None`` keeps the stream in memory only
+    (tests, throwaway runs)."""
+
+    def __init__(self, path: str | None = None, run: str | None = None,
+                 **header: Any):
+        self.path = path
+        self.records: list[dict] = []
+        self._seq = 0
+        self._t0 = time.time()
+        self._phases: dict[str, float] = {}
+        self._fh: IO[str] | None = open(path, "a") if path else None
+        if run is not None or header:
+            self.event("run", run=run, **header)
+
+    # ------------------------------------------------------------- stream
+    def event(self, kind: str, **fields: Any) -> dict:
+        record = {"seq": self._seq, "ts": round(time.time() - self._t0, 6),
+                  "kind": kind, **fields}
+        validate_event(record)
+        self._seq += 1
+        self.records.append(record)
+        if self._fh is not None:
+            self._fh.write(json.dumps(record) + "\n")
+            self._fh.flush()
+        return record
+
+    def round(self, rnd: int, **fields: Any) -> dict:
+        """One training-round record; folds in (and clears) the phase
+        seconds accumulated since the last round record."""
+        phases = {k: round(v, 6) for k, v in self._phases.items()}
+        self._phases.clear()
+        extra = {"phases": phases} if phases else {}
+        return self.event("round", round=rnd, **extra, **fields)
+
+    def repair(self, record: dict) -> dict:
+        """An elastic-runtime repair record (splice or permanent mask)."""
+        return self.event("repair", **record)
+
+    # ------------------------------------------------------------- phases
+    @contextlib.contextmanager
+    def phase(self, name: str, profile: bool = False):
+        """Accumulate wall-clock for ``name`` until the next :meth:`round`.
+        ``profile=True`` also annotates a captured profiler timeline."""
+        ctx = contextlib.nullcontext()
+        if profile:
+            try:
+                import jax
+                ctx = jax.profiler.TraceAnnotation(name)
+            except Exception:  # profiler unavailable: timing still works
+                ctx = contextlib.nullcontext()
+        t0 = time.perf_counter()
+        with ctx:
+            yield
+        self._phases[name] = (self._phases.get(name, 0.0)
+                              + time.perf_counter() - t0)
+
+    # -------------------------------------------------------------- query
+    def of_kind(self, kind: str) -> list[dict]:
+        return [r for r in self.records if r["kind"] == kind]
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "TelemetryLogger":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

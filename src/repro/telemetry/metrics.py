@@ -1,0 +1,146 @@
+"""In-graph round metrics: the traced half of the telemetry subsystem.
+
+:class:`TelemetryConfig` is a static (hashable, frozen) knob carried by
+:class:`repro.core.engine.GossipEngineConfig`. When set, the executor (and
+through it the production train step) additionally returns a
+:data:`RoundMetrics` dict of traced values, every one of them computed from
+something the round already materializes:
+
+* ``resid_sqnorm`` — the **consensus proxy**: per receiver, the
+  contributor-weighted squared distance between each mixed-in neighbor
+  payload and the receiver's own fresh buffer,
+  ``sum_s contrib[1+s] * ||decode(recv_s) - fresh||^2``, accumulated over
+  buffers through the same fused :func:`packed_sqnorms` per-block pass the
+  norm-clip screen uses. It measures what was *actually mixed* — the
+  delayed snapshot in pipelined mode, the dequantized wire under the int8
+  codecs. On the shard_map substrate each device reports its local
+  *shard's* residual (summing them host-side over the non-client mesh axes
+  gives the whole-model value up to replicated leaves — a monotone proxy,
+  which is all a consensus trajectory needs, and the price of adding
+  **zero** collectives).
+* ``in_degree`` — this round's effective live/active in-degree per client:
+  ``sum_s contrib[1+s]`` (gates x live-mask x sender-liveness; fixed points
+  are invisible, exactly as in the mixing reduction).
+* ``sched_contrib`` — the per-(client, schedule) contributor mass, the
+  pre-aggregation form of "per-schedule gate mass" (column-sum host-side;
+  a per-schedule *global* sum in-graph would cost a collective on
+  shard_map, so aggregation stays on the host).
+* ``clipped`` / ``clip_recv`` — norm-clip screen counts
+  (``screen="norm_clip"`` only). The stacked substrate has the global view
+  and emits per-SENDER counts of receivers that clipped them (the
+  suspicion signal :class:`repro.core.failures.HealthTracker` accumulates);
+  the shard_map substrate emits the local per-RECEIVER count of incoming
+  wires it clipped (a per-sender count there would need a reverse
+  collective).
+
+Wire bytes and attack energy ride next to these at the layer that owns the
+data: exact per-codec wire bytes come from
+:meth:`repro.core.engine.GossipExecutor.wire_bytes_per_round` (static — a
+constant output / a logged field), and ``attack_energy`` is computed by the
+step/trainer from the (2, n) attack operand (``sum (scale-1)^2 + noise^2``;
+zero on all-honest rounds).
+
+The build-time-branch discipline is the delay-0 one: ``telemetry=None``
+(the default everywhere) adds **no ops and no outputs** — the lowered HLO
+is textually identical to the untelemetered step (regression-anchored in
+``tests/test_telemetry.py``). A non-None config only appends outputs; the
+collectives and the trace structure are untouched, so churn / gate
+rotation / cohort rotation still reuse ONE executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "RoundMetrics",
+    "TelemetryConfig",
+    "block_sqnorm",
+    "clip_only",
+    "summarize_metrics",
+]
+
+# a RoundMetrics value is a plain dict of traced arrays; the key set is
+# fixed by (TelemetryConfig, engine cell) at build time — data flows, the
+# structure never changes (zero retraces)
+RoundMetrics = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static per-metric switches (frozen => hashable, closable by jit).
+
+    Attributes:
+      consensus: emit ``resid_sqnorm`` (costs one fused sqnorm pass per
+        (buffer, schedule); the quantized stacked norm-clip cell also pays
+        a dequant of the gathered wires it otherwise never decodes).
+      degree: emit ``in_degree`` + ``sched_contrib`` (a handful of scalar
+        ops off the contributor table the round already builds).
+      clip: emit the norm-clip screen counts (``screen="norm_clip"``
+        cells only; ignored elsewhere).
+    """
+
+    consensus: bool = True
+    degree: bool = True
+    clip: bool = True
+
+    @property
+    def any_on(self) -> bool:
+        return self.consensus or self.degree or self.clip
+
+
+def clip_only() -> TelemetryConfig:
+    """The minimal cell the elastic runtime uses to keep quarantine fed
+    when the user did not ask for metrics: clip counts, nothing else."""
+    return TelemetryConfig(consensus=False, degree=False, clip=True)
+
+
+def block_sqnorm(buf: jax.Array, *, block_rows: int, impl: str) -> jax.Array:
+    """Whole-buffer squared norm through the fused per-block pass (the
+    same ``packed_sqnorms`` kernel the norm-clip screen piggybacks on)."""
+    from repro.kernels.gossip_mix import ops as mix_ops
+
+    return jnp.sum(mix_ops.packed_sqnorms(buf, block_rows=block_rows,
+                                          impl=impl))
+
+
+def summarize_metrics(metrics: RoundMetrics | None,
+                      n_clients: int | None = None) -> dict:
+    """Host-side JSON-ready summary of one round's RoundMetrics pytree.
+
+    Accepts both layouts: the stacked substrate's client-leading arrays
+    and the production step's mesh-shaped arrays (per-device values with
+    one leading dim per mesh axis — see the module docstring's shard_map
+    note). ``resid`` sums everything (shards partition the model);
+    per-client-replicated quantities (``in_degree``, ``sched_contrib``)
+    average over the device copies, scaled back up by ``n_clients`` where
+    the quantity is a population total.
+    """
+    if not metrics:
+        return {}
+    out: dict[str, Any] = {}
+    if "resid_sqnorm" in metrics:
+        out["resid_sqnorm"] = float(jnp.sum(metrics["resid_sqnorm"]))
+    if "in_degree" in metrics:
+        deg = np.asarray(metrics["in_degree"], np.float64)
+        out["in_degree_mean"] = float(deg.mean())
+    if "sched_contrib" in metrics:
+        sc = np.asarray(metrics["sched_contrib"], np.float64)
+        sc = sc.reshape(-1, sc.shape[-1])           # (copies*clients, S)
+        mass = sc.mean(axis=0)
+        if n_clients is not None:
+            mass = mass * n_clients                 # per-schedule gate mass
+        out["sched_mass"] = [round(float(m), 6) for m in mass]
+    for key in ("clipped", "clip_recv"):
+        if key in metrics:
+            arr = np.asarray(metrics[key])
+            out[f"{key}_total"] = int(arr.sum())
+    if "attack_energy" in metrics:
+        out["attack_energy"] = float(np.asarray(metrics["attack_energy"]))
+    if "wire_bytes" in metrics:
+        out["wire_bytes"] = int(float(np.asarray(metrics["wire_bytes"])))
+    return out

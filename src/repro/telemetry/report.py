@@ -1,0 +1,150 @@
+"""Report aggregation: one summary from bench JSONs + run JSONL streams.
+
+The benches each drop a JSON record under ``experiments/bench/`` and the
+trainers write JSONL event streams; this module folds both into one
+summary record with the headline tables —
+
+* ``wire_bytes_per_round`` per codec (exact, from the engine's
+  ``wire_struct``-derived accounting; recorded by ``bench_telemetry``),
+* ``rounds_per_sec`` per measured cell (every bench row that carries one),
+* ``retraces`` per counted cell (every ``n_traces`` a bench recorded, plus
+  the ``compile`` events of each run stream),
+* ``consensus`` trajectory per run (the ``resid_sqnorm`` series from the
+  round records),
+* ``repairs`` / round + phase-seconds totals per run.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.telemetry.report \
+        --bench-dir experiments/bench --log runs/demo.jsonl \
+        --out experiments/bench/summary.json
+
+``benchmarks/run.py --report`` and the CI bench-smoke lane call
+:func:`build_summary` directly and upload the result as one artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any
+
+from repro.telemetry.log import read_jsonl
+
+__all__ = ["build_summary", "load_bench_records", "summarize_run_log"]
+
+
+def load_bench_records(bench_dir: str) -> dict[str, Any]:
+    """``{basename-without-ext: parsed json}`` for every bench record."""
+    records = {}
+    for path in sorted(glob.glob(os.path.join(bench_dir, "*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        if name == "summary":
+            continue  # never fold a previous summary into the next one
+        try:
+            with open(path) as f:
+                records[name] = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            records[name] = {"error": f"unreadable: {path}"}
+    return records
+
+
+def _walk(node: Any, path: str):
+    """Yield (dotted-path, dict) for every dict in a parsed JSON tree."""
+    if isinstance(node, dict):
+        yield path, node
+        for k, v in node.items():
+            yield from _walk(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk(v, f"{path}[{i}]")
+
+
+def _cell_label(path: str, d: dict) -> str:
+    return str(d.get("label") or d.get("bench") or d.get("name") or path)
+
+
+def summarize_run_log(path: str) -> dict:
+    """Headline summary of one JSONL run stream (see events.py schema)."""
+    records = read_jsonl(path)
+    rounds = [r for r in records if r["kind"] == "round"]
+    compiles = [r for r in records if r["kind"] == "compile"]
+    repairs = [r for r in records if r["kind"] == "repair"]
+    consensus = []
+    for r in rounds:
+        # trainers flatten the metric summary into the round record; accept
+        # a nested "metrics" sub-dict too for hand-rolled streams
+        v = r.get("resid_sqnorm")
+        if v is None and isinstance(r.get("metrics"), dict):
+            v = r["metrics"].get("resid_sqnorm")
+        if v is not None:
+            consensus.append([r["round"], v])
+    phases: dict[str, float] = {}
+    for r in rounds:
+        for name, sec in (r.get("phases") or {}).items():
+            phases[name] = phases.get(name, 0.0) + sec
+    out = {
+        "log": path,
+        "rounds": len(rounds),
+        "retraces": len(compiles),
+        "repairs": len(repairs),
+        "phase_seconds": {k: round(v, 3) for k, v in sorted(phases.items())},
+    }
+    if consensus:
+        out["consensus"] = consensus
+    losses = [r["loss"] for r in rounds if "loss" in r]
+    if losses:
+        out["first_loss"], out["last_loss"] = losses[0], losses[-1]
+    return out
+
+
+def build_summary(bench_dir: str = "experiments/bench",
+                  logs: tuple[str, ...] = (),
+                  out: str | None = None) -> dict:
+    """Merge every bench record + run stream into the one summary dict
+    (written to ``out`` when given)."""
+    benches = load_bench_records(bench_dir)
+    rounds_per_sec: dict[str, dict] = {}
+    retraces: dict[str, int] = {}
+    for bench, record in benches.items():
+        for path, d in _walk(record, bench):
+            if "rounds_per_sec" in d:
+                label = _cell_label(path, d)
+                cell = {"rounds_per_sec": d["rounds_per_sec"]}
+                for extra in ("rounds_per_sec_one_peer", "codec", "screen",
+                              "n_clients", "spectral_gap"):
+                    if extra in d:
+                        cell[extra] = d[extra]
+                rounds_per_sec[f"{bench}/{label}"] = cell
+            if "n_traces" in d:
+                retraces[f"{bench}/{_cell_label(path, d)}"] = d["n_traces"]
+    wire_bytes = (benches.get("telemetry") or {}).get("wire_bytes", {})
+    summary = {
+        "bench_dir": bench_dir,
+        "benches": sorted(benches),
+        "wire_bytes_per_round": wire_bytes,
+        "rounds_per_sec": rounds_per_sec,
+        "retraces": retraces,
+        "runs": [summarize_run_log(p) for p in logs],
+    }
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default="experiments/bench")
+    ap.add_argument("--log", action="append", default=[],
+                    help="run JSONL stream(s) to fold in (repeatable)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    summary = build_summary(args.bench_dir, tuple(args.log), args.out)
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -519,13 +519,17 @@ class TestByzantineScreens:
                                        clip_tau=2.5)
         assert (cfg.screen, cfg.clip_tau) == ("norm_clip", 2.5)
 
-    def test_with_stats_only_on_stacked_norm_clip(self):
-        spec = gossip.make_gossip_spec(topology.expander_overlay(8, 4, seed=0))
-        ex = engine.build_gossip_executor(
-            engine.GossipEngineConfig(substrate="stacked",
-                                      screen="trimmed_mean"), spec)
+    def test_telemetry_needs_packed_substrate(self):
+        from repro.telemetry import TelemetryConfig
         with pytest.raises(ValueError):
-            ex(_tree(8), with_stats=True)
+            engine.GossipEngineConfig(substrate="dense",
+                                      telemetry=TelemetryConfig())
+        with pytest.raises(ValueError):
+            engine.GossipEngineConfig(substrate="blocked", block=2,
+                                      telemetry=TelemetryConfig())
+        cfg = engine.parse_gossip_impl("ppermute_packed",
+                                       telemetry=TelemetryConfig())
+        assert cfg.telemetry == TelemetryConfig()
 
     def test_norm_clip_identity_at_large_tau_is_bitwise(self):
         """When no sender exceeds tau x the receiver's own norm, every clip
@@ -558,11 +562,13 @@ class TestByzantineScreens:
         xa = jax.tree.map(lambda v: v.at[3].mul(1e4), x)
         ex0 = engine.build_gossip_executor(
             engine.GossipEngineConfig(substrate="stacked"), spec)
+        from repro.telemetry import metrics as telemetry_metrics
         exc = engine.build_gossip_executor(
             engine.GossipEngineConfig(substrate="stacked",
-                                      screen="norm_clip", clip_tau=3.0),
+                                      screen="norm_clip", clip_tau=3.0,
+                                      telemetry=telemetry_metrics.clip_only()),
             spec)
-        got, stats = exc(xa, with_stats=True)
+        got, stats = exc(xa)
         plain = ex0(xa)
         # the attacker's OWN row keeps its huge self-term by design —
         # screens defend receivers, not the attacker

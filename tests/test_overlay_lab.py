@@ -332,6 +332,7 @@ class TestGatedPackedShardMap:
             from repro.core import gossip, topology
             from repro.launch.mesh import shard_map
             from repro.overlay.plan import OnePeerPlan
+            from repro.telemetry import TraceCounter
 
             mesh = jax.make_mesh((8,), ("client",))
             ov = topology.expander_overlay(8, 4, seed=0)
@@ -343,9 +344,9 @@ class TestGatedPackedShardMap:
             xs = jax.device_put(x, jax.tree.map(
                 lambda _: NamedSharding(mesh, P("client")), x))
 
-            n_traces = [0]
+            tracer = TraceCounter("one_peer")
+            @tracer.wrap
             def body(t, a, g):
-                n_traces[0] += 1   # python side effect: counts jit traces
                 local = jax.tree.map(lambda v: v[0], t)
                 out = gossip.ppermute_mix_packed(local, spec, "client",
                                                  alive=a, gates=g)
@@ -364,8 +365,8 @@ class TestGatedPackedShardMap:
                 for k in x:   # bit-for-bit in f32
                     np.testing.assert_array_equal(np.asarray(got[k]),
                                                   np.asarray(ref[k]))
-            assert n_traces[0] == 1, n_traces
-            print("ONE_PEER_BITWISE_OK traces=%d" % n_traces[0])
+            tracer.expect(1, what="one-peer gates are data")
+            print("ONE_PEER_BITWISE_OK traces=%d" % tracer.count)
         """)
 
     def test_converted_overlay_executable_by_ppermute_mix_packed(self):
