@@ -12,7 +12,13 @@ Four views:
      arch-shard sized (same ``comm.json`` record, key ``overlap``);
   4. compiled: per-device wire bytes of the *lowered production gossip* for a
      mid-size LM on the single-pod mesh, dense-mixing vs ppermute vs
-     int8-quantized ppermute (from the dry-run JSONs when present).
+     int8-quantized ppermute (from the dry-run JSONs when present);
+  5. sparse: top-k + error-feedback gossip (codec="topk_ef") at
+     k in {1%, 10%} — exact per-codec wire bytes/round (hard gate: the k=1%
+     wire is <= 10% of the dense f32 wire) plus a convergence proxy on the
+     stacked consensus cell, with the 10% variant registered through the
+     public ``register_codec`` hook (same ``comm.json`` record, key
+     ``sparse``).
 """
 from __future__ import annotations
 
@@ -272,6 +278,68 @@ def overlap_speedup(rounds: int = 12, fast: bool = False) -> dict:
     return record
 
 
+def sparse_convergence(rounds: int = 20, fast: bool = False, n: int = 8,
+                       degree: int = 2, dim: int = 4096) -> dict:
+    """Top-k + EF gossip: wire acceptance gate + convergence proxy.
+
+    Registers the 10% variant through the PUBLIC registry hook — after
+    ``register_codec`` the name is a first-class codec everywhere (the
+    trainers' ``engine=`` front door below, and the wire accounting) — and
+    hard-asserts the ISSUE acceptance: the k=1% topk_ef wire ships <= 10%
+    of the dense f32 bytes per round. The proxy column is final mean-square
+    distance to the consensus target after identical stacked rounds; EF
+    keeps the sparse cells contracting (each must end below where it
+    started), and every cell keeps the one-executable guard."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import dfedavg, engine as engine_lib
+    from repro.core.topology import expander_overlay
+    from repro.launch.elastic import ElasticTrainer
+
+    if "topk_ef_k10" not in engine_lib.CODECS:
+        engine_lib.register_codec(
+            "topk_ef_k10", engine_lib.TopKEFCodec(0.1, name="topk_ef_k10"))
+
+    rounds = max(6, rounds // 2) if fast else rounds
+    wire = wire_bytes_per_round(dim, degree)
+    ratios = {name: wire[name] / wire["f32"]
+              for name in ("topk_ef", "topk_ef_k10")}
+    assert ratios["topk_ef"] <= 0.10, (
+        f"topk_ef (k=1%) wire must be <= 10% of f32: {ratios['topk_ef']}")
+
+    def quad_loss(params, batch):
+        return jnp.mean(jnp.square(params["w"] - batch["target"])), {}
+
+    r = np.random.default_rng(0)
+    init = jnp.asarray(r.standard_normal((n, dim)), jnp.float32)
+    init_msd = float(jnp.mean(jnp.square(init)))
+    batches = {"target": jnp.zeros((n, 2, dim), jnp.float32)}
+    proxies = {}
+    for codec in ("f32", "topk_ef_k10", "topk_ef"):
+        trainer = ElasticTrainer(
+            overlay=expander_overlay(n, degree, seed=0), loss_fn=quad_loss,
+            dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
+            failure_rounds=10**9,
+            engine=engine_lib.GossipEngineConfig(substrate="stacked",
+                                                 codec=codec))
+        params = {"w": init}
+        for _ in range(rounds):
+            params, _ = trainer.step(params, batches, 0.2)
+        proxies[codec] = float(jnp.mean(jnp.square(params["w"])))
+        assert trainer.n_traces == 1, (codec, trainer.n_traces)
+        assert np.isfinite(proxies[codec]) and proxies[codec] < init_msd, (
+            codec, proxies[codec], init_msd)
+        emit(f"comm/sparse/{codec}/n{n}-d{degree}-dim{dim}", 0.0,
+             f"proxy={proxies[codec]:.3e};"
+             f"wire_bytes_per_round={wire[codec]};"
+             f"wire_ratio_vs_f32={wire[codec] / wire['f32']:.4f}")
+    return {"n_clients": n, "degree": degree, "dim": dim, "rounds": rounds,
+            "init_msd": round(init_msd, 6),
+            "wire_bytes_per_round": wire,
+            "wire_ratio_vs_f32": {k: round(v, 4) for k, v in ratios.items()},
+            "proxy": proxies}
+
+
 def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*train_4k*.json"))):
         with open(path) as f:
@@ -294,9 +362,11 @@ def main(fast: bool = False, out_dir: str | None = "experiments/bench") -> None:
     packed_vs_per_leaf()
     padding = padding_by_arch(out_dir=None)
     overlap = overlap_speedup(rounds=6 if fast else 12, fast=fast)
+    sparse = sparse_convergence(fast=fast)
     if out_dir:
         _merge_record(out_dir, {"padding_by_arch": padding,
-                                "overlap": overlap})
+                                "overlap": overlap,
+                                "sparse": sparse})
     compiled()
 
 

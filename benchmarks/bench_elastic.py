@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import dfedavg, failures
+from repro.core import dfedavg, engine as engine_lib, failures
 from repro.core.topology import expander_overlay
 from repro.launch.elastic import ElasticTrainer
 
@@ -137,8 +137,9 @@ def run_delayed(n_clients: int = 16, degree: int = 4, dim: int = 4096,
             overlay=expander_overlay(n_clients, degree, seed=seed),
             loss_fn=quad_loss,
             dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
-            straggler_rounds=1, failure_rounds=10**9, gossip_delay=delay,
-            gossip_codec=codec)
+            straggler_rounds=1, failure_rounds=10**9,
+            engine=engine_lib.GossipEngineConfig(
+                substrate="stacked", codec=codec, delay=delay))
         params = {"w": jnp.asarray(r.standard_normal((n_clients, dim)),
                                    jnp.float32)}
         rng = np.random.default_rng(seed + 1)

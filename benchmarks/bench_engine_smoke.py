@@ -25,7 +25,12 @@ criteria on every push:
     identical* to ``ppermute_packed`` (no drift from the codec plumbing);
   * executing rounds under straggler churn + rotating one-peer gates reuses
     ONE executable (``_cache_size() == 1`` — alive/gates/snapshot are step
-    data, never trace structure).
+    data, never trace structure);
+  * the **sparse EF** cell (``gossip_codec="topk_ef"``): same d-collective
+    count with the lane-folded int8 top-k wire, per-round wire bytes <= 10%
+    of the dense f32 build, the EF residual threading the donated
+    ``codec_state`` operand (nonzero after one round), and the same
+    one-executable guard under churn + gate rotation.
 
 Usage (CI bench-smoke lane):
     PYTHONPATH=src python -m benchmarks.bench_engine_smoke
@@ -114,6 +119,54 @@ def main() -> None:
     emit("engine_smoke/async_quant/4x4", dt * 1e6 / rounds,
          f"d_collectives={len(perms)};int8_wire=1;n_traces={n_traces};"
          f"rounds={rounds};delay0_identity=1")
+
+    # --- sparse EF cell: topk_ef through the SAME production step
+    par_s = ParallelConfig(clients_per_pod=4, local_steps=2, grad_accum=2,
+                           gossip_impl="ppermute_packed",
+                           gossip_codec="topk_ef")
+    s_t = steps.build_train_step(cfg, shape, mesh, par_s, dfl)
+    args = [params_lib.shape_structs(s_t.param_struct),
+            s_t.input_specs["batch"], s_t.input_specs["lr"],
+            s_t.input_specs["alive"], s_t.input_specs["gates"],
+            s_t.input_specs["codec_state"]]
+    sperms = [ln for ln in s_t.step_fn.lower(*args).as_text().splitlines()
+              if "collective_permute" in ln]
+    assert len(sperms) == d, (len(sperms), d)
+    assert all("xi8>" in ln for ln in sperms), "non-int8 top-k wire"
+    # wire accounting rides the telemetry builds (wire_bytes_per_round is
+    # the executor's exact wire-struct sum, populated when telemetry is on)
+    wire = {}
+    for codec in ("f32", "topk_ef"):
+        par_w = ParallelConfig(clients_per_pod=4, local_steps=2,
+                               grad_accum=2, gossip_impl="ppermute_packed",
+                               gossip_codec=codec, gossip_telemetry=True)
+        wire[codec] = steps.build_train_step(
+            cfg, shape, mesh, par_w, dfl).wire_bytes_per_round
+    ratio = wire["topk_ef"] / wire["f32"]
+    assert ratio <= 0.10, f"topk_ef wire ratio vs f32: {ratio}"
+
+    cstate = s_t.init_codec_state(params)
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        alive = (r.random(n) > 0.3).astype(np.float32)
+        if alive.sum() < 2:
+            alive[:] = 1.0
+        gates = np.zeros(d, np.float32)
+        gates[rnd % d] = 1.0
+        params, _m, cstate = s_t.step_fn(
+            params, batch, jnp.float32(0.01), jnp.asarray(alive),
+            jnp.asarray(gates), cstate)
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    s_traces = TraceCounter.cache_size(s_t.step_fn)
+    assert s_traces == 1, f"sparse EF step retraced: {s_traces}"
+    resid = sum(float(jnp.sum(jnp.abs(c))) for c in cstate)
+    assert resid > 0, "EF residual stayed zero — error feedback inert"
+    for leaf in jax.tree.leaves(params):
+        assert bool(jnp.isfinite(jnp.asarray(leaf, jnp.float32)).all())
+    emit("engine_smoke/sparse_ef/4x4", dt * 1e6 / rounds,
+         f"d_collectives={len(sperms)};wire_ratio_vs_f32={ratio:.4f};"
+         f"n_traces={s_traces};rounds={rounds};residual_mass={resid:.3e}")
     print("ENGINE_SMOKE_OK")
 
 

@@ -44,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core import dfedavg, failures, gossip
+from repro.core import dfedavg, engine as engine_lib, failures, gossip
 from repro.core.topology import expander_overlay, ring_overlay
 from repro.launch.elastic import ElasticTrainer
 
@@ -87,8 +87,9 @@ def _run_cell(overlay_fn, screen, f, *, dim, rounds, trim, seed=0):
     trainer = ElasticTrainer(
         overlay=overlay, loss_fn=quad_loss,
         dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
-        failure_rounds=10**9, gossip_screen=screen,
-        screen_tau=3.0, screen_trim=trim, attack_plan=plan)
+        failure_rounds=10**9, attack_plan=plan,
+        engine=engine_lib.GossipEngineConfig(
+            substrate="stacked", screen=screen, clip_tau=3.0, trim_f=trim))
     r = np.random.default_rng(seed)
     params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
     batches = _batches(n, dim)
@@ -120,7 +121,9 @@ def _screen_overhead(n, degree, dim, *, trim, seed=0):
             overlay=expander_overlay(n, degree, seed=seed),
             loss_fn=quad_loss,
             dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
-            failure_rounds=10**9, gossip_screen=screen, screen_trim=trim)
+            failure_rounds=10**9,
+            engine=engine_lib.GossipEngineConfig(
+                substrate="stacked", screen=screen, trim_f=trim))
         r = np.random.default_rng(seed)
         params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
         alive = jnp.ones(n, jnp.float32)

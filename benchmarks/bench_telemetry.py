@@ -73,8 +73,9 @@ def _run_cell(codec: str, delay: int, telemetry: bool, rounds: int,
         loss_fn=quad_loss,
         dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
         plan=plan_lib.OnePeerPlan(),
-        gossip_delay=delay, gossip_codec=codec,
-        telemetry=TelemetryConfig() if telemetry else None,
+        engine=engine_lib.GossipEngineConfig(
+            substrate="stacked", codec=codec, delay=delay,
+            telemetry=TelemetryConfig() if telemetry else None),
         logger=logger)
     r = np.random.default_rng(seed)
     params = {"w": jnp.asarray(r.standard_normal((N_CLIENTS, DIM)) * 0.02,

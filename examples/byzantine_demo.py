@@ -8,7 +8,7 @@ splice repair that handles crashed clients.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dfedavg, failures
+from repro.core import dfedavg, engine as engine_lib, failures
 from repro.core.topology import ring_overlay
 from repro.launch.elastic import ElasticTrainer
 
@@ -38,7 +38,8 @@ def make_trainer(screen, *, quarantine=0):
         overlay=ring_overlay(N), loss_fn=loss_fn,
         dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.5),
         failure_rounds=10**9, attack_plan=plan,
-        gossip_screen=screen, screen_tau=3.0, screen_trim=1,
+        engine=engine_lib.GossipEngineConfig(
+            substrate="stacked", screen=screen, clip_tau=3.0, trim_f=1),
         quarantine_rounds=quarantine)
 
 

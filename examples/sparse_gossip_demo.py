@@ -1,0 +1,108 @@
+"""Sparse top-k gossip with error feedback, end to end: the wire shrinks
+~50x while error feedback keeps consensus honest — and a custom-k codec
+registered through the public hook is a first-class engine citizen.
+
+Three acts on the shared quadratic consensus task (everyone pulls toward
+the origin; gossip is what makes them AGREE on the way down):
+
+  1. wire accounting — exact per-codec bytes/round from the engine's
+     wire structs (dense f32 vs int8 vs top-k at 1% and 10%);
+  2. convergence — identical stacked rounds per codec, tracking the
+     consensus residual (mean-square spread around the client mean): the
+     k=1% run rides within a small factor of dense at ~2% of the bytes;
+  3. elasticity — a client dies mid-run; the EF residual (per-client
+     codec state) rides the SAME splice repair as the params, byte-exact,
+     and training continues without a hiccup.
+
+    PYTHONPATH=src python examples/sparse_gossip_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfedavg, engine, packing
+from repro.core.topology import expander_overlay
+from repro.launch.elastic import ElasticTrainer
+
+N, DIM = 12, 1 << 14
+DEGREE = 2
+
+
+def loss_fn(params, batch):
+    return jnp.mean(jnp.square(params["w"] - batch["target"])), {}
+
+
+def batches(n, k=2):
+    return {"target": jnp.zeros((n, k, DIM), jnp.float32)}
+
+
+def spread(params):
+    """Consensus residual: mean-square distance to the client mean."""
+    w = params["w"]
+    return float(jnp.mean(jnp.square(w - jnp.mean(w, axis=0))))
+
+
+def make_trainer(codec):
+    return ElasticTrainer(
+        overlay=expander_overlay(N, DEGREE, seed=0), loss_fn=loss_fn,
+        dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.1, momentum=0.5),
+        failure_rounds=2, straggler_rounds=1,
+        engine=engine.GossipEngineConfig(substrate="stacked", codec=codec))
+
+
+# a 10%-sparsity variant registered through the PUBLIC hook — after this
+# line "topk_ef_k10" is as first-class as the built-ins
+if "topk_ef_k10" not in engine.CODECS:
+    engine.register_codec("topk_ef_k10",
+                          engine.TopKEFCodec(0.1, name="topk_ef_k10"))
+
+print(f"== act 1: what one gossip round ships (n={N}, d={DEGREE}, "
+      f"dim={DIM}) ==")
+ps = packing.make_pack_spec({"w": jax.ShapeDtypeStruct((DIM,), "float32")})
+f32_bytes = None
+for name in ("f32", "int8_block", "topk_ef_k10", "topk_ef"):
+    codec = engine.get_codec(name)
+    total = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                for s in (codec.wire_struct(ps.buffer_struct(b),
+                                            ps.buffer_blocks(b))
+                          for b in range(ps.n_buffers))) * DEGREE
+    f32_bytes = f32_bytes or total
+    print(f"  {name:12s} {total:9d} bytes/round  "
+          f"({total / f32_bytes:6.1%} of f32)")
+
+print("\n== act 2: consensus residual by round (EF keeps sparse honest) ==")
+rng = np.random.default_rng(0)
+init = {"w": jnp.asarray(rng.standard_normal((N, DIM)), jnp.float32)}
+trainers = {name: make_trainer(name)
+            for name in ("f32", "topk_ef_k10", "topk_ef")}
+states = {name: init for name in trainers}
+print(f"{'round':>5s} " + " ".join(f"{n:>12s}" for n in trainers))
+for rnd in range(8):
+    row = []
+    for name, tr in trainers.items():
+        p, _, _ = tr.observe_heartbeats(np.ones(tr.n_clients), states[name])
+        p, _ = tr.step(p, batches(tr.n_clients), 0.1)
+        states[name] = p
+        row.append(spread(p))
+    print(f"{rnd:5d} " + " ".join(f"{v:12.5f}" for v in row))
+for name, tr in trainers.items():
+    assert tr.n_traces == 1, (name, tr.n_traces)
+print("one executable per codec (churn-ready): n_traces == 1 across all")
+
+print("\n== act 3: a death mid-run — the EF residual rides the splice ==")
+tr = trainers["topk_ef"]
+params = states["topk_ef"]
+pre = [np.asarray(b) for b in tr._codec_state]
+alive = np.ones(tr.n_clients, np.float32)
+alive[4] = 0.0
+for _ in range(2):  # miss failure_rounds heartbeats -> declared dead
+    params, _, old2new = tr.observe_heartbeats(alive, params)
+assert old2new is not None and old2new[4] == -1
+survivors = np.arange(len(alive)) != 4
+for b_pre, b_post in zip(pre, tr._codec_state):
+    np.testing.assert_array_equal(np.asarray(b_post), b_pre[survivors])
+params, losses = tr.step(params, batches(tr.n_clients), 0.1)
+print(f"client 4 spliced out ({len(alive)} -> {tr.n_clients}); survivors' "
+      "residual rows byte-identical through old2new; next round loss "
+      f"{float(jnp.mean(losses)):.5f} (finite: "
+      f"{bool(jnp.isfinite(losses).all())})")

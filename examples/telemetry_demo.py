@@ -23,7 +23,7 @@ import tempfile
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dfedavg, failures
+from repro.core import dfedavg, engine as engine_lib, failures
 from repro.core.topology import expander_overlay
 from repro.launch.elastic import ElasticTrainer
 from repro.telemetry import TelemetryConfig, TelemetryLogger, read_jsonl
@@ -72,8 +72,9 @@ with TelemetryLogger(log_path, run="telemetry_demo", n_clients=N,
     trainer = ElasticTrainer(
         overlay=expander_overlay(N, DEGREE, seed=0), loss_fn=loss_fn,
         dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.5),
-        failure_rounds=10**9, attack_plan=plan,
-        gossip_screen="norm_clip", screen_tau=3.0, quarantine_rounds=2,
+        failure_rounds=10**9, attack_plan=plan, quarantine_rounds=2,
+        engine=engine_lib.GossipEngineConfig(
+            substrate="stacked", screen="norm_clip", clip_tau=3.0),
         logger=logger)
     params = init
     for rnd in range(6):

@@ -199,13 +199,17 @@ class ParallelConfig:
     gossip_delay: int = 0
     # wire codec override (repro.core.engine): "auto" keeps the impl
     # alias's historical codec (f32 for the plain impls, int8_block for the
-    # quant impls); "f32" / "int8" (per-buffer scale) / "int8_block" (one
-    # scale per kernel row-block tile) name a codec explicitly. Pipelined +
-    # quantized gossip = "ppermute_packed_async" + gossip_delay=1 +
-    # gossip_codec="int8_block" (the delayed snapshot is then carried AND
-    # shipped in the int8 wire format: d int8 collectives/round, 4x smaller
-    # donated state)
-    gossip_codec: Literal["auto", "f32", "int8", "int8_block"] = "auto"
+    # quant impls); any codec in the engine registry (engine.CODECS) names
+    # one explicitly — built-ins: "f32" / "int8" (per-buffer scale) /
+    # "int8_block" (one scale per kernel row-block tile) / "topk_ef"
+    # (sparse top-k with error feedback: values + lane-folded indices wire,
+    # per-client EF-residual codec state threaded as a donated step
+    # operand). Pipelined + quantized gossip = "ppermute_packed_async" +
+    # gossip_delay=1 + gossip_codec="int8_block" (the delayed snapshot is
+    # then carried AND shipped in the int8 wire format: d int8
+    # collectives/round, 4x smaller donated state); with "topk_ef" the
+    # carried snapshot is the ~k-fold smaller sparse wire.
+    gossip_codec: str = "auto"
     # Byzantine screen over received payloads (repro.core.engine): "none"
     # trusts every wire; "norm_clip" rescales any received buffer whose norm
     # exceeds gossip_clip_tau x the receiver's own norm; "trimmed_mean"

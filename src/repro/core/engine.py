@@ -86,25 +86,32 @@ __all__ = [
     "SUBSTRATES",
     "DELAY_SUBSTRATES",
     "SCREEN_SUBSTRATES",
+    "STATEFUL_SUBSTRATES",
     "TELEMETRY_SUBSTRATES",
     "LEGACY_GOSSIP_IMPLS",
     "GossipEngineConfig",
     "GossipExecutor",
+    "TopKEFCodec",
     "build_gossip_executor",
     "get_codec",
     "parse_gossip_impl",
+    "register_codec",
+    "resolve_trainer_engine",
 ]
 
 PyTree = Any
 
 SUBSTRATES = ("shard_map", "stacked", "blocked", "per_leaf", "dense")
-CODECS = ("f32", "int8", "int8_block")
 SCREENS = ("none", "norm_clip", "trimmed_mean")
 # the cells the delay and screen layers are wired for; "blocked" joins when
 # its snapshot-carry and screen-norm passes land (validation names this
-# tuple so every error message enumerates the same cells)
+# tuple so every error message enumerates the same cells). Stateful codecs
+# (per-client codec state, e.g. the topk_ef EF residual) ride the same two
+# substrates the delay snapshot does — the state threads through the step
+# exactly like the in-flight wire.
 DELAY_SUBSTRATES = ("shard_map", "stacked")
 SCREEN_SUBSTRATES = ("shard_map", "stacked")
+STATEFUL_SUBSTRATES = ("shard_map", "stacked")
 TELEMETRY_SUBSTRATES = ("shard_map", "stacked")
 
 # legacy ParallelConfig.gossip_impl strings -> (substrate, codec). The delay
@@ -174,9 +181,19 @@ class GossipEngineConfig:
         if self.substrate not in SUBSTRATES:
             raise ValueError(f"unknown substrate {self.substrate!r}; "
                              f"available: {', '.join(SUBSTRATES)}")
-        if self.codec not in CODECS:
-            raise ValueError(f"unknown codec {self.codec!r}; "
-                             f"available: {', '.join(CODECS)}")
+        codec_obj = get_codec(self.codec)  # raises the unknown-codec error
+        if getattr(codec_obj, "stateful", False):
+            if self.substrate not in STATEFUL_SUBSTRATES:
+                raise ValueError(
+                    f"stateful codec {self.codec!r} (per-client codec "
+                    "state) runs on the "
+                    f"{' | '.join(STATEFUL_SUBSTRATES)} substrates, got "
+                    f"{self.substrate!r}")
+            if self.screen != "none":
+                raise ValueError(
+                    f"screen={self.screen!r} is not wired for the stateful "
+                    f"codec {self.codec!r} yet (the screened rounds do not "
+                    "thread per-client codec state)")
         if self.delay not in (0, 1):
             raise ValueError(f"delay must be 0 or 1, got {self.delay}")
         if self.delay and self.substrate not in DELAY_SUBSTRATES:
@@ -189,7 +206,8 @@ class GossipEngineConfig:
         if self.substrate == "per_leaf" and self.codec == "int8_block":
             raise ValueError("per-leaf payloads are not tile-aligned; use "
                              "codec='int8' for the per-leaf baseline")
-        if self.substrate == "dense" and self.codec != "f32":
+        if (self.substrate == "dense"
+                and not getattr(codec_obj, "identity_wire", False)):
             raise ValueError("the dense reference substrate has no wire; "
                              f"codec must be 'f32', got {self.codec!r}")
         if self.screen not in SCREENS:
@@ -260,6 +278,77 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
                               trim_f=trim_f, telemetry=telemetry)
 
 
+# legacy per-knob trainer arguments and their defaults — the shim behind the
+# trainers' ``engine=GossipEngineConfig(...)`` front door. NOTE the naming
+# drift this resolves: the trainers historically called the norm-clip
+# threshold ``screen_tau`` while ParallelConfig calls it ``gossip_clip_tau``;
+# both are GossipEngineConfig.clip_tau.
+_LEGACY_TRAINER_KNOBS = (
+    ("gossip_codec", "f32"),
+    ("gossip_delay", 0),
+    ("gossip_block", 0),
+    ("gossip_screen", "none"),
+    ("screen_tau", 3.0),
+    ("screen_trim", 1),
+)
+
+
+def resolve_trainer_engine(trainer) -> None:
+    """ONE engine-config front door for the simulator trainers.
+
+    ``trainer`` is an ElasticTrainer / SimTrainer mid-``__post_init__``: if
+    ``trainer.engine`` is a :class:`GossipEngineConfig`, its cell is mirrored
+    onto the legacy per-knob attributes (everything downstream — round
+    builders, splice repair, the step — keeps reading one source of truth),
+    so ``engine=`` construction is bitwise-equivalent to the knobs it
+    replaces. Passing both is an error; passing non-default legacy knobs
+    without ``engine=`` emits a :class:`DeprecationWarning` naming the
+    replacement.
+    """
+    explicit = [k for k, d in _LEGACY_TRAINER_KNOBS
+                if getattr(trainer, k) != d]
+    if trainer.engine is not None:
+        if explicit:
+            raise ValueError(
+                "pass the engine cell EITHER as engine=GossipEngineConfig("
+                "...) or via the legacy gossip_* knobs, not both (legacy "
+                f"knobs set: {', '.join(explicit)})")
+        ecfg = trainer.engine
+        if not isinstance(ecfg, GossipEngineConfig):
+            raise TypeError("engine must be a repro.core.engine."
+                            "GossipEngineConfig (got "
+                            f"{type(ecfg).__name__})")
+        if ecfg.substrate not in ("stacked", "blocked"):
+            raise ValueError(
+                f"{type(trainer).__name__} runs the stacked | blocked "
+                f"substrates, got engine.substrate={ecfg.substrate!r} "
+                "(production shard_map cells are built by "
+                "launch.steps.build_train_step from ParallelConfig)")
+        trainer.gossip_codec = ecfg.codec
+        trainer.gossip_delay = ecfg.delay
+        trainer.gossip_screen = ecfg.screen
+        trainer.screen_tau = ecfg.clip_tau
+        trainer.screen_trim = ecfg.trim_f
+        trainer.gossip_block = ecfg.block if ecfg.substrate == "blocked" else 0
+        if ecfg.telemetry is not None:
+            if trainer.telemetry is not None:
+                raise ValueError("telemetry passed twice: on the engine "
+                                 "config AND the trainer; set it in one "
+                                 "place")
+            trainer.telemetry = ecfg.telemetry
+    elif explicit:
+        import warnings
+        warnings.warn(
+            f"the per-knob gossip arguments ({', '.join(explicit)}) of "
+            f"{type(trainer).__name__} are deprecated; pass engine="
+            "repro.core.engine.GossipEngineConfig(substrate='stacked' | "
+            "'blocked', codec=..., delay=..., screen=..., clip_tau=..., "
+            "trim_f=..., block=...) instead (the trainer knob screen_tau "
+            "is GossipEngineConfig.clip_tau — the value ParallelConfig "
+            "calls gossip_clip_tau)",
+            DeprecationWarning, stacklevel=4)
+
+
 # ------------------------------------------------------------------ codecs
 def _renormalized_weights(weights, contrib):
     """The alive/gates renormalization of the fused masked kernels, computed
@@ -297,6 +386,8 @@ class _F32Codec:
     pre-refactor delayed executors."""
 
     name = "f32"
+    identity_wire = True   # wire IS the packed buffer (no encode/decode)
+    stateful = False
 
     def wire_struct(self, struct: jax.ShapeDtypeStruct,
                     n_blocks: int) -> jax.ShapeDtypeStruct:
@@ -354,6 +445,9 @@ class _Int8Codec:
     accumulator through the fused dequant-accumulate kernels. The local term
     stays full precision, so the int8 error only enters through the (small,
     renormalized) edge weights."""
+
+    identity_wire = False
+    stateful = False
 
     def __init__(self, block_scales: bool):
         self.block_scales = block_scales
@@ -473,11 +567,149 @@ class _Int8Codec:
         return qops.dequantize_int8(parts[0], parts[1], dtype, impl=impl)
 
 
-_CODECS = {
-    "f32": _F32Codec(),
-    "int8": _Int8Codec(block_scales=False),
-    "int8_block": _Int8Codec(block_scales=True),
-}
+class TopKEFCodec:
+    """Sparse top-k wire with error feedback — the first STATEFUL codec.
+
+    The WireCodec contract grows three optional hooks for codecs that carry
+    per-client state across rounds (all declared via class attrs / methods,
+    never via executor special-casing):
+
+    * ``stateful = True`` — the executor threads a per-buffer state operand
+      through the round and returns the updated state right after the delay
+      snapshot (a donated step input, exactly like the in-flight wire);
+    * ``state_struct(struct, n_blocks)`` — the per-client state layout for
+      one packed buffer (here: an f32 residual shaped like the payload);
+    * ``init_state(struct)`` — the priming value (zeros: nothing dropped
+      yet); :meth:`GossipExecutor.init_codec_state` maps it over the pack
+      spec (with the client axis in front on the stacked substrate, so a
+      splice repair remaps the state by the same old2new row take as the
+      params and the in-flight snapshot).
+
+    Encode is ``ef_compress`` on the packed ``(rows, 128)`` buffer: add the
+    residual, keep the k = max(1, floor(k_fraction * rows * 128)) largest-
+    magnitude entries, remember what was dropped. The wire is the k f32
+    values with their k int32 flat indices lane-folded into ONE int8 buffer
+    (:func:`repro.kernels.quant_gossip.ops.fold_topk_into_wire`), so each
+    schedule still ships a single collective of ~8k bytes — ~2 *
+    k_fraction of the dense f32 wire. Reduce folds each received wire into
+    the accumulator through the fused scatter-accumulate Pallas kernel
+    (``scatter_accumulate_2d``), one dense HBM pass per wire like the int8
+    path. The self row stays the FRESH full-precision buffer everywhere, so
+    sparsification error only enters through the received edges (and is
+    re-injected next round by the sender's residual).
+    """
+
+    identity_wire = False
+    stateful = True
+
+    def __init__(self, k_fraction: float, name: str = "topk_ef"):
+        if not 0.0 < float(k_fraction) <= 1.0:
+            raise ValueError("k_fraction must be in (0, 1], got "
+                             f"{k_fraction}")
+        self.k_fraction = float(k_fraction)
+        self.name = name
+
+    def k_for(self, rows: int) -> int:
+        """ef_compress's k on a (rows, LANE) packed buffer."""
+        return max(1, int(self.k_fraction * rows * packing.LANE))
+
+    def wire_struct(self, struct: jax.ShapeDtypeStruct,
+                    n_blocks: int) -> jax.ShapeDtypeStruct:
+        rows = packing.topk_wire_rows(self.k_for(struct.shape[0]))
+        return jax.ShapeDtypeStruct((rows, packing.LANE), jnp.int8)
+
+    def state_struct(self, struct: jax.ShapeDtypeStruct,
+                     n_blocks: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(struct.shape, jnp.float32)
+
+    def init_state(self, struct: jax.ShapeDtypeStruct) -> jax.Array:
+        return jnp.zeros(struct.shape, jnp.float32)
+
+    def encode(self, buf, *, n_blocks, block_rows, impl, state):
+        from repro.core import compression
+        from repro.kernels.quant_gossip import ops as qops
+
+        y = buf.astype(jnp.float32) + state
+        vals, idx = compression.topk_sparsify(y, self.k_for(buf.shape[0]))
+        dense = (jnp.zeros(y.size, jnp.float32).at[idx].set(vals)
+                 .reshape(y.shape))
+        return qops.fold_topk_into_wire(vals, idx), y - dense
+
+    def decode(self, wire, dtype, *, n_blocks, block_rows):
+        """Scatter back to dense (the stacked substrate's gather source);
+        the shard_map substrate never materializes this — it uses the fused
+        :meth:`reduce` scatter-accumulation instead."""
+        from repro.kernels.quant_gossip import ops as qops
+
+        rows = n_blocks * block_rows
+        vals, idx = qops.split_topk_wire(wire, self.k_for(rows))
+        dense = jnp.zeros(rows * packing.LANE, jnp.float32).at[idx].set(vals)
+        return dense.reshape(rows, packing.LANE).astype(dtype)
+
+    def reduce(self, fresh, received, weights, contrib, *, edge_weight,
+               n_blocks, block_rows, impl, sender_scale=None):
+        from repro.kernels.quant_gossip import ops as qops
+
+        c = edge_weight
+        if contrib is None:
+            self_scale = weights[0]
+            recv_w = [None] * len(received)
+        else:
+            a_self, src_a = contrib[0], contrib[1:]
+            wa0 = weights[0] * a_self
+            tot = wa0 + c * jnp.sum(src_a)
+            # no renormalizable mass => identity row REPLACES the
+            # renormalized term (same fallback as the int8 reduce)
+            ok = (tot > 1e-12).astype(jnp.float32)
+            inv = ok / jnp.maximum(tot, 1e-12)
+            self_scale = (a_self * wa0 * inv + (1.0 - a_self)
+                          + a_self * (1.0 - ok))
+            recv_w = [a_self * src_a[k] * inv for k in range(len(received))]
+        if sender_scale is not None:
+            recv_w = [sender_scale[k] if a is None else a * sender_scale[k]
+                      for k, a in enumerate(recv_w)]
+        k_top = self.k_for(n_blocks * block_rows)
+        acc = self_scale.astype(fresh.dtype) * fresh
+        for rwire, a in zip(received, recv_w):
+            vals, idx = qops.split_topk_wire(rwire, k_top)
+            acc = qops.scatter_accumulate_packed(
+                vals, idx, c, acc, a, block_rows=block_rows, impl=impl)
+        return acc
+
+    def wire_sqnorm(self, wire, *, n_blocks, block_rows, impl):
+        from repro.kernels.quant_gossip import ops as qops
+
+        vals, _ = qops.split_topk_wire(wire,
+                                       self.k_for(n_blocks * block_rows))
+        return jnp.sum(vals.astype(jnp.float32) ** 2)
+    # no reduce_trimmed / encode_leaf hooks: screens and the per-leaf
+    # baseline are rejected for stateful codecs at config validation.
+
+
+# ------------------------------------------------------------ registry
+# Codecs plug in by NAME: config validation, the trainers' front door, the
+# legacy-knob shims and the wire-byte accounting all consult this registry,
+# so a new codec (including out-of-tree ones) never edits the engine body.
+_CODECS: dict[str, Any] = {}
+CODECS: tuple[str, ...] = ()
+
+
+def register_codec(name: str, codec) -> Any:
+    """Register a WireCodec instance under ``name`` (last write wins).
+
+    ``codec`` follows the duck-typed WireCodec contract (wire_struct /
+    encode / decode / reduce / wire_sqnorm, plus the optional stateful
+    hooks — see :class:`TopKEFCodec`). After registration the name is valid
+    anywhere a codec is spelled: ``GossipEngineConfig(codec=name)``, the
+    trainers' ``engine=`` front door, and the benches' wire accounting.
+    """
+    global CODECS
+    if not name or not isinstance(name, str):
+        raise ValueError(f"codec name must be a non-empty string, got "
+                         f"{name!r}")
+    _CODECS[name] = codec
+    CODECS = tuple(_CODECS)
+    return codec
 
 
 def get_codec(name: str):
@@ -486,6 +718,12 @@ def get_codec(name: str):
         raise ValueError(f"unknown codec {name!r}; available: "
                          f"{', '.join(CODECS)}")
     return _CODECS[name]
+
+
+register_codec("f32", _F32Codec())
+register_codec("int8", _Int8Codec(block_scales=False))
+register_codec("int8_block", _Int8Codec(block_scales=True))
+register_codec("topk_ef", TopKEFCodec(k_fraction=0.01))
 
 
 # --------------------------------------------------------------- executor
@@ -497,6 +735,15 @@ class GossipExecutor:
     * delayed: ``executor(tree, state=..., alive=..., gates=...) ->
       (mixed_tree, new_state)`` where ``state`` is the codec-wire snapshot
       of the previous round (prime it with :meth:`init_state`).
+
+    A STATEFUL codec (``codec.stateful``, e.g. ``topk_ef``'s EF residual)
+    adds one more threaded operand: pass ``codec_state=...`` (prime it with
+    :meth:`init_codec_state`) and the updated per-buffer state tuple is
+    returned right AFTER the delay snapshot (``(mixed, new_codec_state)``
+    sync, ``(mixed, new_state, new_codec_state)`` delayed). Like the
+    snapshot, codec state is step data in the codec's ``state_struct``
+    layout — donated, remapped through splice repair by the same old2new
+    row compaction, never trace structure.
 
     With ``config.telemetry`` set, a RoundMetrics dict of traced values is
     appended as the LAST element of the return tuple (``(mixed, metrics)``
@@ -531,21 +778,35 @@ class GossipExecutor:
     def codec(self):
         return _CODECS[self.config.codec]
 
-    def __call__(self, tree: PyTree, *, state=None, alive=None, gates=None):
+    @property
+    def stateful(self) -> bool:
+        """Whether this executor threads per-client codec state."""
+        return bool(getattr(self.codec, "stateful", False))
+
+    def __call__(self, tree: PyTree, *, state=None, codec_state=None,
+                 alive=None, gates=None):
         cfg = self.config
         if self.delayed and state is None:
             raise ValueError("delayed executor needs the carried snapshot "
                              "(prime it with init_state)")
+        if self.stateful and codec_state is None:
+            raise ValueError(f"codec {cfg.codec!r} is stateful and needs "
+                             "its per-client codec state (prime it with "
+                             "init_codec_state)")
+        if not self.stateful and codec_state is not None:
+            raise ValueError(f"codec {cfg.codec!r} carries no codec state; "
+                             "drop the codec_state operand")
         if cfg.substrate == "dense":
             return gossip.mix_dense(
                 tree, gossip.gated_mixing_matrix(self.spec, gates, alive))
         if cfg.substrate == "per_leaf":
             return self._per_leaf_round(tree)
         if cfg.substrate == "stacked":
-            return self._stacked_round(tree, state, alive, gates)
+            return self._stacked_round(tree, state, codec_state, alive,
+                                       gates)
         if cfg.substrate == "blocked":
             return self._blocked_round(tree, alive, gates)
-        return self._shard_map_round(tree, state, alive, gates)
+        return self._shard_map_round(tree, state, codec_state, alive, gates)
 
     # ------------------------------------------------- pipelined state
     def init_state(self, tree: PyTree) -> tuple[jax.Array, ...]:
@@ -556,18 +817,28 @@ class GossipExecutor:
         a splice repair remaps it by the same old2new row compaction as the
         params."""
         cfg, codec = self.config, self.codec
+
+        def enc(x, b, pack_spec):
+            kw = dict(n_blocks=pack_spec.buffer_blocks(b),
+                      block_rows=pack_spec.block_rows, impl=cfg.mix_impl)
+            if self.stateful:
+                # prime against a zero residual; the priming residual is
+                # discarded (init_codec_state owns the carried zeros) — the
+                # y_{-1} := x_0 snapshot is the one EF-unfed wire
+                wire, _ = codec.encode(
+                    x, state=jnp.zeros(x.shape, jnp.float32), **kw)
+                return wire
+            return codec.encode(x, **kw)
+
         if cfg.substrate == "stacked":
             pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
             bufs = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
             return tuple(
-                jax.vmap(lambda x, b=b: codec.encode(
-                    x, n_blocks=pack_spec.buffer_blocks(b),
-                    block_rows=pack_spec.block_rows, impl=cfg.mix_impl))(buf)
+                jax.vmap(lambda x, b=b: enc(x, b, pack_spec))(buf)
                 for b, buf in enumerate(bufs))
         pack_spec = self.pack_spec or packing.make_pack_spec(tree)
         return tuple(
-            codec.encode(buf, n_blocks=pack_spec.buffer_blocks(b),
-                         block_rows=pack_spec.block_rows, impl=cfg.mix_impl)
+            enc(buf, b, pack_spec)
             for b, buf in enumerate(packing.pack_tree(tree, pack_spec)))
 
     def state_structs(self) -> tuple[jax.ShapeDtypeStruct, ...]:
@@ -579,6 +850,43 @@ class GossipExecutor:
         ps, codec = self.pack_spec, self.codec
         return tuple(
             codec.wire_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
+            for b in range(ps.n_buffers))
+
+    # ------------------------------------------------- codec state
+    def init_codec_state(self, tree: PyTree) -> tuple[jax.Array, ...]:
+        """Prime the per-client codec state (``codec.init_state`` per packed
+        buffer — the topk_ef EF residual starts at zeros: nothing dropped
+        yet). On the stacked substrate the client axis rides in front, so a
+        splice repair remaps this state by the same old2new row take as the
+        params and the in-flight snapshot."""
+        cfg, codec = self.config, self.codec
+        if not self.stateful:
+            raise ValueError(f"codec {cfg.codec!r} carries no codec state")
+        if cfg.substrate == "stacked":
+            pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
+            n = jax.tree.leaves(tree)[0].shape[0]
+            return tuple(
+                jnp.zeros((n,) + st.shape, st.dtype)
+                for st in (codec.state_struct(pack_spec.buffer_struct(b),
+                                              pack_spec.buffer_blocks(b))
+                           for b in range(pack_spec.n_buffers)))
+        pack_spec = self.pack_spec or packing.make_pack_spec(tree)
+        return tuple(
+            codec.init_state(pack_spec.buffer_struct(b))
+            for b in range(pack_spec.n_buffers))
+
+    def codec_state_structs(self) -> tuple[jax.ShapeDtypeStruct, ...]:
+        """Per-device codec-state shapes (requires a baked ``pack_spec``) —
+        what the production step declares as its donated codec-state
+        argument."""
+        if self.pack_spec is None:
+            raise ValueError("codec_state_structs needs a baked pack_spec")
+        if not self.stateful:
+            raise ValueError(f"codec {self.config.codec!r} carries no "
+                             "codec state")
+        ps, codec = self.pack_spec, self.codec
+        return tuple(
+            codec.state_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
             for b in range(ps.n_buffers))
 
     # ----------------------------------------------------- telemetry
@@ -647,7 +955,7 @@ class GossipExecutor:
         return sq
 
     # ---------------------------------------------------- substrates
-    def _shard_map_round(self, tree, state, alive, gates):
+    def _shard_map_round(self, tree, state, cstate, alive, gates):
         cfg, codec, spec = self.config, self.codec, self.spec
         tel = cfg.telemetry
         pack_spec = self.pack_spec or packing.make_pack_spec(tree)
@@ -684,10 +992,23 @@ class GossipExecutor:
             metrics["sched_contrib"] = tcontrib[1:]
         resid = jnp.float32(0.0)
         sq = self._sq(pack_spec)
-        out_bufs, new_state = [], []
+        out_bufs, new_state, new_cstate = [], [], []
         for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
             n_blocks = pack_spec.buffer_blocks(b)
-            if cfg.delay:
+            if self.stateful:
+                # the codec updates its per-client state exactly once per
+                # round, at encode; with delay the permutes still read the
+                # carried snapshot while the fresh wire becomes next
+                # round's snapshot (sparse pipelined gossip: the donated
+                # in-flight buffer IS the ~k-fold smaller codec wire)
+                wire_fresh, res = codec.encode(
+                    buf, n_blocks=n_blocks, block_rows=pack_spec.block_rows,
+                    impl=cfg.mix_impl, state=cstate[b])
+                new_cstate.append(res)
+                wire = state[b] if cfg.delay else wire_fresh
+                if cfg.delay:
+                    new_state.append(wire_fresh)
+            elif cfg.delay:
                 # the permutes read the carried snapshot (a step input): no
                 # dep on the local-step scan, so the scheduler can start
                 # them at program entry and hide the wire behind compute
@@ -726,6 +1047,8 @@ class GossipExecutor:
         ret = (mixed,)
         if cfg.delay:
             ret = ret + (tuple(new_state),)
+        if self.stateful:
+            ret = ret + (tuple(new_cstate),)
         if tel is not None:
             ret = ret + (metrics,)
         return ret[0] if len(ret) == 1 else ret
@@ -807,7 +1130,7 @@ class GossipExecutor:
             ret = ret + (metrics,)
         return ret[0] if len(ret) == 1 else ret
 
-    def _stacked_round(self, tree, state, alive, gates):
+    def _stacked_round(self, tree, state, cstate, alive, gates):
         cfg, codec, spec = self.config, self.codec, self.spec
         tel = cfg.telemetry
         pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
@@ -822,7 +1145,7 @@ class GossipExecutor:
         metrics, tcontrib = self._stacked_metrics_init(alive, gates)
         resid = jnp.zeros((spec.n_clients,), jnp.float32)
         sq = jax.vmap(self._sq(pack_spec))
-        out_bufs, new_state = [], []
+        out_bufs, new_state, new_cstate = [], [], []
         for b, buf in enumerate(fresh):
             n_blocks = pack_spec.buffer_blocks(b)
 
@@ -831,13 +1154,28 @@ class GossipExecutor:
                                     block_rows=pack_spec.block_rows,
                                     impl=cfg.mix_impl)
 
-            if cfg.codec == "f32":
+            def dec(x, n_blocks=n_blocks, dtype=buf.dtype):
+                return codec.decode(x, dtype, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows)
+
+            if self.stateful:
+                # per-client encode updates the codec state exactly once
+                # per round; with delay the gathers read the carried
+                # snapshot while the fresh wire becomes next round's
+                wire, res = jax.vmap(
+                    lambda x, r, b=b: codec.encode(
+                        x, n_blocks=n_blocks,
+                        block_rows=pack_spec.block_rows,
+                        impl=cfg.mix_impl, state=r))(buf, cstate[b])
+                new_cstate.append(res)
+                src = jax.vmap(dec)(state[b] if cfg.delay else wire)
+                if cfg.delay:
+                    new_state.append(wire)
+            elif codec.identity_wire:
                 src = state[b] if cfg.delay else buf
             else:
                 wire = state[b] if cfg.delay else jax.vmap(enc)(buf)
-                src = jax.vmap(lambda x: codec.decode(
-                    x, buf.dtype, n_blocks=n_blocks,
-                    block_rows=pack_spec.block_rows))(wire)
+                src = jax.vmap(dec)(wire)
             # self row stays the FRESH full-precision buffer; only the
             # gathered neighbor rows go through the codec / the snapshot
             stack = jnp.stack([buf] + [jnp.take(src, idx, axis=0)
@@ -849,8 +1187,8 @@ class GossipExecutor:
                     resid = resid + tcontrib[:, 1 + s] * sq(
                         stack[:, 1 + s].astype(jnp.float32)
                         - buf.astype(jnp.float32))
-            if cfg.delay:
-                new_state.append(buf if cfg.codec == "f32"
+            if cfg.delay and not self.stateful:
+                new_state.append(buf if codec.identity_wire
                                  else jax.vmap(enc)(buf))
         if tel is not None and tel.consensus:
             metrics["resid_sqnorm"] = resid
@@ -859,6 +1197,8 @@ class GossipExecutor:
         ret = (mixed,)
         if cfg.delay:
             ret = ret + (tuple(new_state),)
+        if self.stateful:
+            ret = ret + (tuple(new_cstate),)
         if tel is not None:
             ret = ret + (metrics,)
         return ret[0] if len(ret) == 1 else ret
@@ -892,7 +1232,7 @@ class GossipExecutor:
 
         cfg, codec, spec = self.config, self.codec, self.spec
         tel = cfg.telemetry
-        if cfg.screen == "norm_clip" and cfg.codec != "f32":
+        if cfg.screen == "norm_clip" and not codec.identity_wire:
             return self._stacked_round_clipped_quant(tree, state, alive,
                                                      gates, pack_spec)
         gathers = [jnp.asarray(rf) for rf in spec.recv_from]
@@ -906,7 +1246,7 @@ class GossipExecutor:
                                     block_rows=pack_spec.block_rows,
                                     impl=cfg.mix_impl)
 
-            if cfg.codec == "f32":
+            if codec.identity_wire:
                 src = state[b] if cfg.delay else buf
             else:
                 wire = state[b] if cfg.delay else jax.vmap(enc)(buf)
@@ -916,7 +1256,7 @@ class GossipExecutor:
                                  block_rows=pack_spec.block_rows))(wire)
             srcs.append(src)
             if cfg.delay:
-                new_state.append(buf if cfg.codec == "f32"
+                new_state.append(buf if codec.identity_wire
                                  else jax.vmap(enc)(buf))
         metrics, tcontrib = self._stacked_metrics_init(alive, gates)
         if cfg.screen == "norm_clip":
@@ -1117,7 +1457,7 @@ class GossipExecutor:
                                     block_rows=pack_spec.block_rows,
                                     impl=cfg.mix_impl)
 
-            wire = buf if cfg.codec == "f32" else jax.vmap(enc)(buf)
+            wire = buf if codec.identity_wire else jax.vmap(enc)(buf)
             # all whole-block permutes issued before any gather so XLA can
             # overlap the wire; devices outside a partial permutation
             # receive zeros, which no gather table entry ever points at
@@ -1126,7 +1466,7 @@ class GossipExecutor:
             cand = jnp.concatenate([wire[None]] + [r[None] for r in received],
                                    axis=0)
             flat = cand.reshape((bs.n_transfers + 1) * b_sz, *wire.shape[1:])
-            if cfg.codec != "f32":
+            if not codec.identity_wire:
                 flat = jax.vmap(
                     lambda x, n_blocks=n_blocks, dtype=buf.dtype:
                     codec.decode(x, dtype, n_blocks=n_blocks,

@@ -35,7 +35,7 @@ import numpy as np
 
 __all__ = ["LANE", "PACK_BLOCK_ROWS", "SCALE_BYTES", "LeafSlot", "PackSpec",
            "make_pack_spec", "make_stacked_pack_spec", "pack_tree",
-           "unpack_tree", "scale_rows"]
+           "unpack_tree", "scale_rows", "topk_wire_rows"]
 
 PyTree = Any
 
@@ -54,6 +54,16 @@ def scale_rows(n_blocks: int) -> int:
     wire format). One row carries LANE // SCALE_BYTES = 32 scales, so the
     wire overhead stays <= 1 row per 32 tile blocks (each >= 32 KiB)."""
     return (SCALE_BYTES * n_blocks + LANE - 1) // LANE
+
+
+def topk_wire_rows(k: int) -> int:
+    """Lane rows of a sparse top-k wire buffer: ``k`` f32 values followed by
+    ``k`` int32 flat indices, each 4 bytes, bitcast into int8 lane rows (the
+    same fold that carries quant scales — one int8 buffer per schedule, ONE
+    collective). The two sections are padded to whole rows independently so
+    both bitcasts stay static slices."""
+    half = (SCALE_BYTES * k + LANE - 1) // LANE
+    return 2 * half
 
 
 @dataclasses.dataclass(frozen=True)

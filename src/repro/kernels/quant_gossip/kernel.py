@@ -50,6 +50,76 @@ def _dequant_acc_kernel(q_ref, s_ref, acc_ref, o_ref):
                   ).astype(o_ref.dtype)
 
 
+def _scatter_acc_kernel(v_ref, i_ref, s_ref, acc_ref, o_ref):
+    """o = acc + alive * c * scatter(vals at flat idx).
+
+    ``v_ref`` / ``i_ref`` hold the lane-folded sparse entries — (k_rows,
+    LANE) f32 values and int32 flat indices into THIS (dense) buffer, zero-
+    padded past k (val 0 at idx 0 is a no-op). ``s_ref`` = (1, 1) holding
+    (c,) or (1, 2) holding (c, alive) — the failure-aware gossip path folds
+    the sender's renormalized alive weight into the same fused pass, exactly
+    like ``_dequant_acc_kernel``. Grid tiles cover the dense accumulator;
+    every tile walks all k entries and lands the ones inside its flat range
+    (top-k keeps k small — the walk is k scalar ops per tile, while the
+    dense copy stays one vector pass).
+    """
+    c = s_ref[0, 0]
+    if s_ref.shape[1] == 2:
+        c = c * s_ref[0, 1]
+    block_rows, lane = o_ref.shape
+    tile = block_rows * lane
+    base = pl.program_id(0) * tile
+    o_ref[...] = acc_ref[...]
+    kr, kl = i_ref.shape
+
+    def body(e, carry):
+        j = i_ref[e // kl, e % kl] - base
+
+        @pl.when((j >= 0) & (j < tile))
+        def _():
+            r = j // lane
+            col = j - r * lane
+            o_ref[r, col] = (o_ref[r, col].astype(jnp.float32)
+                             + c * v_ref[e // kl, e % kl]
+                             ).astype(o_ref.dtype)
+
+        return carry
+
+    jax.lax.fori_loop(0, kr * kl, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def scatter_accumulate_2d(vals: jax.Array, idx: jax.Array,
+                          c_alive: jax.Array, acc: jax.Array, *,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          interpret: bool = False) -> jax.Array:
+    """Fused sparse scatter-accumulate over a packed (rows, LANE) buffer.
+
+    ``vals`` / ``idx`` are (k_rows, LANE) lane-folded sparse entries (f32 /
+    int32, zero-padded); ``c_alive`` is (1, 1) = (c,) or (1, 2) =
+    (c, alive weight). The whole sparse set rides into every grid tile
+    (index map (0, 0)) — it is ~k_fraction of one tile, so the duplicated
+    VMEM traffic is noise next to the dense acc pass."""
+    rows, lane = acc.shape
+    assert lane == LANE and rows % block_rows == 0
+    kr, kl = vals.shape
+    assert kl == LANE and idx.shape == vals.shape, (vals.shape, idx.shape)
+    n_scalars = int(c_alive.size)
+    assert n_scalars in (1, 2), c_alive.shape
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    full = pl.BlockSpec((kr, LANE), lambda i: (0, 0))
+    return pl.pallas_call(
+        _scatter_acc_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[full, full,
+                  pl.BlockSpec((1, n_scalars), lambda i: (0, 0)), blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), acc.dtype),
+        interpret=interpret,
+    )(vals, idx.astype(jnp.int32),
+      c_alive.reshape(1, n_scalars).astype(jnp.float32), acc)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def quantize_2d(x: jax.Array, scale: jax.Array, *,
                 block_rows: int = DEFAULT_BLOCK_ROWS,

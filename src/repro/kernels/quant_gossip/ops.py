@@ -121,6 +121,87 @@ def split_wire_blockwise(wire: jax.Array,
     return wire[:-tail_rows], scales.reshape(n_blocks)
 
 
+# ------------------------------------------- sparse top-k wire format (one
+# collective per schedule): k f32 values and their k int32 flat indices both
+# bitcast into int8 lane rows of ONE shipped buffer — the same fold that
+# carries quant scales, taken to its limit: the whole payload is 8k bytes
+# (vs 4 bytes/element dense), so k_fraction = 0.01 ships ~2% of the f32
+# wire. Sections are padded to whole rows independently (see
+# repro.core.packing.topk_wire_rows) so every slice below is static.
+def fold_topk_into_wire(vals: jax.Array, idx: jax.Array) -> jax.Array:
+    """(k,) f32 values + (k,) int32 flat indices -> (topk_wire_rows(k), LANE)
+    int8 wire buffer (values section first, indices section after)."""
+    from repro.core import packing
+    half = packing.topk_wire_rows(vals.shape[0]) // 2
+
+    def section(x):
+        b = jax.lax.bitcast_convert_type(x, jnp.int8).reshape(-1)
+        out = jnp.zeros((half * packing.LANE,), jnp.int8)
+        return out.at[:b.shape[0]].set(b).reshape(half, packing.LANE)
+
+    return jnp.concatenate([section(vals.astype(jnp.float32)),
+                            section(idx.astype(jnp.int32))], axis=0)
+
+
+def split_topk_wire(wire: jax.Array, k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Invert :func:`fold_topk_into_wire`: ((k,) f32 values, (k,) int32 flat
+    indices). All slices are static given ``k`` (baked from the codec's
+    k_fraction and the PackSpec rows)."""
+    from repro.core import packing
+    half = wire.shape[0] // 2
+
+    def section(rows, dtype):
+        b = rows.reshape(-1)[:packing.SCALE_BYTES * k]
+        return jax.lax.bitcast_convert_type(
+            b.reshape(k, packing.SCALE_BYTES), dtype).reshape(k)
+
+    return section(wire[:half], jnp.float32), section(wire[half:], jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "impl"))
+def scatter_accumulate_packed(vals: jax.Array, idx: jax.Array, c,
+                              acc: jax.Array, alive=None, *,
+                              block_rows: int = _k.DEFAULT_BLOCK_ROWS,
+                              impl: str = "auto") -> jax.Array:
+    """Fused acc + alive * c * scatter(vals at flat idx) for pre-packed
+    (rows, LANE) buffers — the sparse top-k analogue of
+    :func:`dequant_accumulate_packed`: the dense accumulator is read and
+    written exactly once while the k sparse entries land in place.
+
+    ``vals`` / ``idx`` are the flat (k,) arrays off the wire
+    (:func:`split_topk_wire`); ``alive`` (traced scalar) is the
+    failure-aware per-sender weight, folded into the same fused pass.
+    """
+    rows, lane = acc.shape
+    assert lane == _k.LANE and rows % block_rows == 0, (acc.shape, block_rows)
+    assert vals.shape == idx.shape and vals.ndim == 1, (vals.shape, idx.shape)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        eff_c = jnp.asarray(c, jnp.float32)
+        if alive is not None:
+            eff_c = eff_c * jnp.asarray(alive, jnp.float32)
+        return _ref.scatter_accumulate(vals, idx, eff_c, acc)
+    k = vals.shape[0]
+    pad = (-k) % _k.LANE
+
+    def fold(x, fill):
+        xf = x.reshape(-1)
+        if pad:
+            xf = jnp.pad(xf, (0, pad), constant_values=fill)
+        return xf.reshape(-1, _k.LANE)
+
+    scalars = [jnp.asarray(c, jnp.float32)]
+    if alive is not None:
+        scalars.append(jnp.asarray(alive, jnp.float32))
+    sc = jnp.stack(scalars).reshape(1, len(scalars))
+    return _k.scatter_accumulate_2d(
+        fold(vals.astype(jnp.float32), 0.0), fold(idx.astype(jnp.int32), 0),
+        sc, acc, block_rows=block_rows,
+        interpret=(impl == "pallas_interpret"))
+
+
 def dequantize_packed(q: jax.Array, scale: jax.Array,
                       dtype=jnp.float32) -> jax.Array:
     """Plain dequantize of a per-buffer-scaled packed payload (the stacked

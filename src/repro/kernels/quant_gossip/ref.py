@@ -37,3 +37,16 @@ def dequant_accumulate_blockwise(q: jax.Array, scales: jax.Array,
     return (acc.astype(jnp.float32)
             + c.astype(jnp.float32) * s * q.astype(jnp.float32)
             ).astype(acc.dtype)
+
+
+def scatter_accumulate(vals: jax.Array, idx: jax.Array, c: jax.Array,
+                       acc: jax.Array) -> jax.Array:
+    """acc + c * scatter(vals at flat idx): the sparse top-k accumulation.
+
+    ``idx`` indexes the flattened ``acc``. Top-k indices are unique; padded
+    entries carry val = 0 (conventionally at idx 0), so they are no-ops.
+    """
+    flat = acc.astype(jnp.float32).reshape(-1)
+    upd = jnp.asarray(c, jnp.float32) * vals.astype(jnp.float32).reshape(-1)
+    flat = flat.at[idx.reshape(-1)].add(upd)
+    return flat.reshape(acc.shape).astype(acc.dtype)

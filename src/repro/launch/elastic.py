@@ -120,6 +120,16 @@ class ElasticTrainer:
     straggler_rounds: int = 1
     failure_rounds: int = 3
     step_builder: StepBuilder | None = None
+    # THE engine front door: pass the whole gossip cell as one
+    # repro.core.engine.GossipEngineConfig (substrate "stacked" or
+    # "blocked" + codec x delay x screen x telemetry). The per-knob
+    # gossip_* arguments below are a deprecated shim over this — they
+    # mirror into the same config (engine_lib.resolve_trainer_engine), so
+    # either spelling builds the bitwise-identical round. Stateful codecs
+    # (engine.CODECS entry "topk_ef": sparse top-k wire + per-client EF
+    # residual) thread their codec state as trainer-carried rows, remapped
+    # through splice repair like params and the in-flight snapshot.
+    engine: engine_lib.GossipEngineConfig | None = None
     plan: RoundPlan | None = None  # time-varying round plan (gate source)
     # round-level client subsampling (repro.overlay.plan active-set plans):
     # the plan's 0/1 participation vector multiplies the health mask each
@@ -175,6 +185,10 @@ class ElasticTrainer:
     logger: TelemetryLogger | None = None
 
     def __post_init__(self):
+        # engine= front door first: mirrors the config onto the legacy
+        # knobs (or warns on deprecated per-knob use), so every check and
+        # builder below reads one source of truth
+        engine_lib.resolve_trainer_engine(self)
         if self.gossip_delay not in (0, 1):
             raise ValueError(f"gossip_delay must be 0 or 1, "
                              f"got {self.gossip_delay}")
@@ -261,6 +275,10 @@ class ElasticTrainer:
         # round's post-local-step params); primed lazily at the first step
         # so round 0 mixes the caller's initial params
         self._inflight = None
+        # stateful codec's per-client codec state (the topk_ef EF
+        # residual) — primed lazily like the snapshot, remapped through
+        # splice repair by the same old2new row compaction
+        self._codec_state = None
         self._round = self._build(self.spec)
 
     def _build(self, spec: gossip_lib.GossipSpec):
@@ -343,6 +361,30 @@ class ElasticTrainer:
                                           trim_f=self.screen_trim,
                                           telemetry=tel), spec)
         executor = self._executor
+
+        if executor.stateful:
+            # stateful codec (topk_ef): the per-client codec state rides
+            # as a second threaded state channel next to the optional
+            # delay snapshot — returned right after it, threaded back in
+            # by step(). inflight stays None (an empty pytree) at delay=0.
+            def round_fn(params, inflight, cstate, batches, lr, alive,
+                         gates, attack, akey):
+                self.tracer.hit()  # python side effect: only runs on trace
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+                kw = dict(codec_state=cstate, alive=alive,
+                          gates=gates if use_plan else None)
+                if self.gossip_delay:
+                    kw["state"] = inflight
+                out = list(executor(params, **kw))
+                mixed = out.pop(0)
+                inflight = out.pop(0) if self.gossip_delay else None
+                cstate = out.pop(0)
+                metrics = out.pop(0) if use_tel else None
+                return mixed, losses, inflight, cstate, metrics
+            return jax.jit(round_fn)
 
         if self.gossip_delay:
             def round_fn(params, inflight, batches, lr, alive, gates,
@@ -440,14 +482,14 @@ class ElasticTrainer:
                 self.logger.repair(self.repairs[-1])
             return params, client_state, None
 
-        # the in-flight snapshot rides the same remap as params: its layout
-        # depends only on the parameter structure (never on the topology),
-        # so dropping the dead rows keeps the delayed semantics exact — the
-        # survivors' next round still mixes the survivors' last snapshot
-        bundle = (params, client_state, self._inflight)
+        # the in-flight snapshot and the codec state ride the same remap as
+        # params: their layouts depend only on the parameter structure
+        # (never on the topology), so dropping the dead rows keeps the
+        # delayed semantics — and the survivors' EF residuals — exact
+        bundle = (params, client_state, self._inflight, self._codec_state)
         self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
             self.overlay, evict, bundle)
-        params, client_state, self._inflight = bundle
+        params, client_state, self._inflight, self._codec_state = bundle
         suspects = set(int(s) for s in self.health.suspects())
         self.repairs.append({"dead": evict, "spliced": True,
                              "quarantined": sorted(suspects & set(evict)),
@@ -517,7 +559,17 @@ class ElasticTrainer:
         phase = (self.logger.phase("round") if self.logger is not None
                  else contextlib.nullcontext())
         with phase:
-            if self.gossip_delay:
+            if self._executor.stateful:
+                if self._codec_state is None:  # prime: EF residual zeros
+                    self._codec_state = self._executor.init_codec_state(
+                        params)
+                if self.gossip_delay and self._inflight is None:
+                    self._inflight = self._executor.init_state(params)
+                (params, losses, self._inflight, self._codec_state,
+                 metrics) = self._round(
+                    params, self._inflight, self._codec_state, batches, lr,
+                    alive, gates, attack, akey)
+            elif self.gossip_delay:
                 if self._inflight is None:  # prime: round 0 mixes the
                     # initial snapshot in the codec's wire format (packed
                     # f32 buffers, or the folded int8 wire when quantized)
@@ -537,7 +589,10 @@ class ElasticTrainer:
             if self.logger is not None and counts.sum() > 0:
                 self.logger.event("suspicion", round=rnd,
                                   clipped=[int(c) for c in counts])
-        if self.logger is not None:
+        if self.logger is not None and self.logger.wants_round(rnd):
+            # peeked BEFORE building the record: the loss/metrics floats
+            # are the round's only deliberate device->host sync, and the
+            # sampled logger (round_every > 1) skips it on off-rounds
             self.logger.round(
                 rnd, loss=float(jnp.mean(losses)),
                 alive=int(np.asarray(alive).sum()),

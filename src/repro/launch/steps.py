@@ -132,6 +132,11 @@ class TrainSetup:
     #               new snapshot as a third output. Prime it once with
     #               init_inflight(params) (round 0 then mixes the initial
     #               params as its delayed snapshot).
+    #   codec_state state tuple        stateful codec (e.g. "topk_ef") —
+    #               the per-client codec state (the EF residual), in the
+    #               codec's state_struct layout; the step RETURNS the
+    #               updated state as its LAST output. Prime it once with
+    #               init_codec_state(params).
     # input_specs holds a ShapeDtypeStruct per present operand, in call
     # order, so callers can assemble the argument list generically.
     step_fn: Any
@@ -147,6 +152,8 @@ class TrainSetup:
     pack_spec: packing_lib.PackSpec | None = None  # packed-gossip layout
     gossip_delay: int = 0          # 1 = pipelined (one-round-delayed) gossip
     init_inflight: Any = None      # jitted params -> in-flight snapshot
+    init_codec_state: Any = None   # jitted params -> codec state (stateful
+    #                                codecs only; None otherwise)
     # the parsed engine cell (substrate x codec x timing) the step runs on
     engine_config: engine_lib.GossipEngineConfig | None = None
     # exact per-client wire bytes one round ships (0 when untelemetered /
@@ -405,6 +412,68 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs,),
                                       out_specs=inflight_pspecs)(params)
 
+    # ---- stateful codec (e.g. "topk_ef"): the per-client codec state (the
+    # error-feedback residual) is a SECOND threaded state channel, parallel
+    # to the delay snapshot: one f32 (rows, LANE) buffer per packed buffer
+    # per device, carried as a donated step operand and returned as the
+    # step's LAST output. Same sharding discipline as the in-flight
+    # snapshot — one leading dim per mesh axis, so the island sees exactly
+    # its own (rows, LANE) block and the state never reshards.
+    use_cstate = (executor is not None and executor.stateful
+                  and run_cfg.substrate == "shard_map")
+    cstate_structs = cstate_pspecs = None
+    if use_cstate:
+        local_cstate_structs = executor.codec_state_structs()
+        cstate_pspecs = tuple(P(*axis_names, None, None)
+                              for _ in local_cstate_structs)
+        cstate_structs = tuple(
+            jax.ShapeDtypeStruct(axis_sizes + s.shape, s.dtype)
+            for s in local_cstate_structs)
+
+        def gossip_fn_stateful(params, alive, gates, cstate, inflight=None):
+            def body(p, alive_vec, gate_vec, cst, *maybe_state):
+                local = jax.tree.map(lambda x: x[0], p)
+                kw = dict(codec_state=tuple(s.reshape(s.shape[-2:])
+                                            for s in cst),
+                          alive=alive_vec,
+                          gates=gate_vec if use_gates else None)
+                if use_delay:
+                    kw["state"] = tuple(s.reshape(s.shape[-2:])
+                                        for s in maybe_state[0])
+                out = executor(local, **kw)
+                rest = list(out[1:])
+                res = [jax.tree.map(lambda x: x[None], out[0])]
+                if use_delay:
+                    res.append(tuple(s.reshape(lead + s.shape)
+                                     for s in rest.pop(0)))
+                res.append(tuple(s.reshape(lead + s.shape)
+                                 for s in rest.pop(0)))
+                if use_tel:
+                    res.append(jax.tree.map(
+                        lambda x: x.reshape(lead + x.shape), rest.pop(0)))
+                return tuple(res)
+
+            in_specs = (pspecs, P(), P(), cstate_pspecs) \
+                + ((inflight_pspecs,) if use_delay else ())
+            out_specs = (pspecs,) \
+                + ((inflight_pspecs,) if use_delay else ()) \
+                + (cstate_pspecs,) + ((tel_spec,) if use_tel else ())
+            args = (params, alive, gates, cstate) \
+                + ((inflight,) if use_delay else ())
+            return mesh_lib.shard_map(body, dmesh, in_specs=in_specs,
+                                      out_specs=out_specs)(*args)
+
+        def cstate_init_fn(params):
+            """Prime the codec state (the topk_ef EF residual starts at
+            zeros: nothing has been dropped yet)."""
+            def body(p):
+                local = jax.tree.map(lambda x: x[0], p)
+                bufs = executor.init_codec_state(local)
+                return tuple(b.reshape(lead + b.shape) for b in bufs)
+
+            return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs,),
+                                      out_specs=cstate_pspecs)(params)
+
     # activation constraints visible inside the vmapped client round
     act_rules = {}
     if par.seq_parallel:
@@ -448,7 +517,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     # extra list and lowers to the exact historical 5-argument HLO.
     extra_names = (["active"] if use_active else []) \
         + (["attack", "attack_key"] if use_attack else []) \
-        + (["inflight"] if use_delay else [])
+        + (["inflight"] if use_delay else []) \
+        + (["codec_state"] if use_cstate else [])
 
     def train_step(params, batch, lr, alive, gates, *extra):
         kw = dict(zip(extra_names, extra))
@@ -457,13 +527,23 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         # renormalize) — the multiply happens outside the gossip island so
         # the island's trace is independent of whether a plan is on
         eff_alive = alive * kw["active"] if use_active else alive
-        out_state = tel_met = None
+        out_state = out_cstate = tel_met = None
         with activation_sharding(act_rules):
             params, loss = _local_phase(params, batch, lr)
             if use_attack:
                 params = failures_lib.apply_attack(params, kw["attack"],
                                                    kw["attack_key"])
-            if use_delay:
+            if use_cstate:
+                island = list(gossip_fn_stateful(
+                    params, eff_alive, gates, kw["codec_state"],
+                    kw.get("inflight")))
+                params = island.pop(0)
+                if use_delay:
+                    out_state = island.pop(0)
+                out_cstate = island.pop(0)
+                if use_tel:
+                    tel_met = island.pop(0)
+            elif use_delay:
                 # the d ppermutes inside gossip_fn_delayed read only the
                 # snapshot (a step input), so the scheduler overlaps them
                 # with the local-step scan
@@ -489,9 +569,12 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                 tel_met["attack_energy"] = (jnp.sum((atk[0] - 1.0) ** 2)
                                             + jnp.sum(atk[1] ** 2))
             metrics["telemetry"] = tel_met
+        out = (params, metrics)
         if use_delay:
-            return params, metrics, out_state
-        return params, metrics
+            out = out + (out_state,)
+        if use_cstate:
+            out = out + (out_cstate,)
+        return out
 
     param_shardings = jax.tree.map(lambda s: NamedSharding(dmesh, s), pspecs)
     repl = NamedSharding(dmesh, P())
@@ -533,18 +616,25 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         "attack": jax.ShapeDtypeStruct((2, n_cl), jnp.float32),
         "attack_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
     }
-    inflight_shardings = None
+    inflight_shardings = cstate_shardings = None
     for name in extra_names:
         donate.append(len(in_shardings))
         if name == "inflight":
-            # the snapshot (always the last argnum) is donated too: the
-            # step consumes last round's in-flight buffers and emits this
-            # round's
+            # the snapshot is donated too: the step consumes last round's
+            # in-flight buffers and emits this round's
             inflight_shardings = tuple(NamedSharding(dmesh, s)
                                        for s in inflight_pspecs)
             in_shardings.append(inflight_shardings)
             out_shardings = out_shardings + (inflight_shardings,)
             input_specs["inflight"] = inflight_structs
+        elif name == "codec_state":
+            # per-client codec state (the EF residual): donated in, updated
+            # state is the step's LAST output
+            cstate_shardings = tuple(NamedSharding(dmesh, s)
+                                     for s in cstate_pspecs)
+            in_shardings.append(cstate_shardings)
+            out_shardings = out_shardings + (cstate_shardings,)
+            input_specs["codec_state"] = cstate_structs
         else:
             in_shardings.append(repl)
             input_specs[name] = extra_specs[name]
@@ -555,14 +645,19 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     if use_delay:
         init_inflight = jax.jit(snapshot_fn, in_shardings=(param_shardings,),
                                 out_shardings=inflight_shardings)
+    init_codec_state = None
+    if use_cstate:
+        init_codec_state = jax.jit(cstate_init_fn,
+                                   in_shardings=(param_shardings,),
+                                   out_shardings=cstate_shardings)
     return TrainSetup(
         step_fn=step, param_specs=pspecs, param_struct=struct,
         input_specs=input_specs,
         in_shardings=in_shardings, overlay=overlay, gossip_spec=gspec,
         dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec,
         gossip_delay=par.gossip_delay if use_delay else 0,
-        init_inflight=init_inflight, engine_config=run_cfg,
-        wire_bytes_per_round=wire_bytes)
+        init_inflight=init_inflight, init_codec_state=init_codec_state,
+        engine_config=run_cfg, wire_bytes_per_round=wire_bytes)
 
 
 # ------------------------------------------------------------- serve steps

@@ -46,6 +46,13 @@ class SimTrainer:
     loss_fn: Callable
     dcfg: dfedavg.DFedAvgMConfig
     ckpt: CheckpointManager | None = None
+    # THE engine front door: the whole gossip cell as one
+    # repro.core.engine.GossipEngineConfig (substrate "stacked" or
+    # "blocked" + codec x delay x screen x telemetry). The per-knob
+    # gossip_* arguments below are a deprecated shim that mirrors into the
+    # same config (engine_lib.resolve_trainer_engine) — either spelling
+    # builds the bitwise-identical round.
+    engine: engine_lib.GossipEngineConfig | None = None
     plan: overlay_plan.RoundPlan | None = None  # time-varying gates source
     # round-level client subsampling (active-set plans): the 0/1
     # participation vector multiplies the alive mask each round — inactive
@@ -82,6 +89,10 @@ class SimTrainer:
     logger: TelemetryLogger | None = None
 
     def __post_init__(self):
+        # engine= front door first: mirrors the config onto the legacy
+        # knobs (or warns on deprecated per-knob use), so every check and
+        # builder below reads one source of truth
+        engine_lib.resolve_trainer_engine(self)
         if self.gossip_delay not in (0, 1):
             raise ValueError(f"gossip_delay must be 0 or 1, "
                              f"got {self.gossip_delay}")
@@ -113,6 +124,9 @@ class SimTrainer:
         self.last_metrics: dict | None = None
         self._alive = np.ones(self.overlay.n, dtype=np.float32)
         self._inflight = None  # delayed mode's carried snapshot
+        # stateful codec's per-client codec state (topk_ef EF residual);
+        # primed lazily, remapped through repair like the snapshot
+        self._codec_state = None
         # current-index -> original-plan-column map (compacted on repair)
         self._attack_cols = np.arange(self.overlay.n)
         self._round_fn = self._build(self.spec)
@@ -175,6 +189,30 @@ class SimTrainer:
                                           trim_f=self.screen_trim,
                                           telemetry=self.telemetry), spec)
         executor = self._executor
+
+        if executor.stateful:
+            # stateful codec (topk_ef): the per-client codec state rides as
+            # a second threaded state channel next to the optional delay
+            # snapshot (inflight stays None — an empty pytree — at delay=0)
+            @partial(jax.jit, static_argnames=())
+            def round_fn(params, inflight, cstate, batches, lr, alive,
+                         gates, attack, akey):
+                self.tracer.hit()  # python side effect: only runs on trace
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+                kw = dict(codec_state=cstate, alive=alive,
+                          gates=gates if use_plan else None)
+                if self.gossip_delay:
+                    kw["state"] = inflight
+                out = list(executor(params, **kw))
+                mixed = out.pop(0)
+                inflight = out.pop(0) if self.gossip_delay else None
+                cstate = out.pop(0)
+                metrics = out.pop(0) if use_tel else None
+                return mixed, losses, inflight, cstate, metrics
+            return round_fn
 
         if self.gossip_delay:
             @partial(jax.jit, static_argnames=())
@@ -242,10 +280,10 @@ class SimTrainer:
                 f"splicing {len(dead)} of {self.overlay.n} clients leaves a "
                 f"partial device block (block={self.gossip_block}); keep the "
                 "dead masked or evict a block-multiple")
-        bundle = (params, self._inflight)
+        bundle = (params, self._inflight, self._codec_state)
         self.overlay, self.spec, bundle, old2new = failures_lib.repair_and_remap(
             self.overlay, dead, bundle)
-        params, self._inflight = bundle
+        params, self._inflight, self._codec_state = bundle
         # surviving stragglers keep their mask through the index compaction
         survivors = old2new >= 0
         new_alive = np.ones(self.overlay.n, dtype=np.float32)
@@ -290,7 +328,18 @@ class SimTrainer:
                 # persistent straggler mask itself
                 alive_t = alive_t * overlay_plan.active_for(
                     self.active_plan, rnd, self.overlay.n)
-            if self.gossip_delay:
+            if self._executor.stateful:
+                if self._codec_state is None:  # prime: EF residual zeros
+                    self._codec_state = self._executor.init_codec_state(
+                        params)
+                if self.gossip_delay and self._inflight is None:
+                    self._inflight = self._executor.init_state(params)
+                (params, losses, self._inflight, self._codec_state,
+                 metrics) = self._round_fn(
+                    params, self._inflight, self._codec_state, batches,
+                    lr_t, jnp.asarray(alive_t), self._gates(rnd),
+                    attack, akey)
+            elif self.gossip_delay:
                 if self._inflight is None:  # prime with the initial params
                     self._inflight = self._executor.init_state(params)
                 params, losses, self._inflight, metrics = self._round_fn(
@@ -310,7 +359,7 @@ class SimTrainer:
             if eval_fn is not None and rnd % log_every == 0:
                 rec.update(eval_fn(params))
             history.append(rec)
-            if self.logger is not None:
+            if self.logger is not None and self.logger.wants_round(rnd):
                 self.logger.round(rnd, **{k: v for k, v in rec.items()
                                           if k != "round"})
             if self.ckpt is not None:
@@ -365,15 +414,18 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
         logger = TelemetryLogger(telemetry_log, run="char_lm",
                                  n_clients=n_clients, topology=topology,
                                  degree=degree, codec=gossip_codec)
+    # the one engine-config front door: substrate x codec x delay x screen
+    # (x telemetry) as a single cell instead of five loose knobs
+    engine = engine_lib.GossipEngineConfig(
+        substrate="blocked" if gossip_block else "stacked",
+        codec=gossip_codec, delay=gossip_delay, screen=gossip_screen,
+        block=gossip_block,
+        telemetry=(telemetry_metrics.TelemetryConfig()
+                   if telemetry or telemetry_log else None))
     trainer = SimTrainer(overlay=overlay, loss_fn=lstm_model.loss_fn,
                          dcfg=dcfg, ckpt=ckpt, plan=plan,
-                         active_plan=active, gossip_block=gossip_block,
-                         gossip_delay=gossip_delay,
-                         gossip_codec=gossip_codec,
-                         gossip_screen=gossip_screen,
+                         active_plan=active, engine=engine,
                          attack_plan=attack, attack_seed=seed,
-                         telemetry=(telemetry_metrics.TelemetryConfig()
-                                    if telemetry or telemetry_log else None),
                          logger=logger)
 
     # held-out evaluation: last 10% of the corpus
@@ -431,9 +483,10 @@ def main() -> None:
     ap.add_argument("--gossip-delay", type=int, default=0, choices=[0, 1],
                     help="1 = pipelined (one-round-delayed) gossip")
     ap.add_argument("--gossip-codec", default="f32",
-                    choices=["f32", "int8", "int8_block"],
+                    choices=list(engine_lib.CODECS),
                     help="wire codec of the engine round (int8_block + "
-                         "--gossip-delay 1 = pipelined+quantized)")
+                         "--gossip-delay 1 = pipelined+quantized; topk_ef "
+                         "= sparse top-k wire with error feedback)")
     ap.add_argument("--gossip-screen", default="none",
                     choices=["none", "norm_clip", "trimmed_mean"],
                     help="Byzantine screen over received gossip payloads")

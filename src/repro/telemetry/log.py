@@ -17,6 +17,13 @@ local-step vs gossip vs host breakdown is whatever phases the caller
 brackets. ``phase(..., profile=True)`` additionally wraps the block in a
 ``jax.profiler.TraceAnnotation`` so the same names show up on a profiler
 timeline when one is being captured (a no-op otherwise).
+
+``round_every=k`` samples the round records: only every k-th round is
+emitted (``rnd % k == 0``), and both trainers consult ``wants_round``
+before materializing the record's floats — on off-rounds the per-round
+device->host sync is skipped entirely, so a streamed run at ``k > 1``
+keeps near the un-streamed throughput. The default ``k=1`` emits every
+round and produces a byte-identical stream to pre-knob loggers.
 """
 from __future__ import annotations
 
@@ -47,8 +54,11 @@ class TelemetryLogger:
     (tests, throwaway runs)."""
 
     def __init__(self, path: str | None = None, run: str | None = None,
-                 **header: Any):
+                 round_every: int = 1, **header: Any):
+        if round_every < 1:
+            raise ValueError(f"round_every must be >= 1, got {round_every}")
         self.path = path
+        self.round_every = round_every
         self.records: list[dict] = []
         self._seq = 0
         self._t0 = time.time()
@@ -69,9 +79,20 @@ class TelemetryLogger:
             self._fh.flush()
         return record
 
+    def wants_round(self, rnd: int) -> bool:
+        """True when round ``rnd`` would be emitted under ``round_every``
+        sampling. Callers should peek this BEFORE materializing round
+        fields: the loss/metrics floats are device->host syncs, and the
+        whole point of sampling is to skip that sync on off-rounds."""
+        return rnd % self.round_every == 0
+
     def round(self, rnd: int, **fields: Any) -> dict:
         """One training-round record; folds in (and clears) the phase
-        seconds accumulated since the last round record."""
+        seconds accumulated since the last round record. Off-sample rounds
+        (``round_every > 1``) emit nothing and keep accumulating phase
+        seconds into the next emitted record."""
+        if not self.wants_round(rnd):
+            return {}
         phases = {k: round(v, 6) for k, v in self._phases.items()}
         self._phases.clear()
         extra = {"phases": phases} if phases else {}

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import dfedavg, failures, gossip
+from repro.core import dfedavg, engine, failures, gossip
 from repro.core.topology import expander_overlay
 from repro.launch.elastic import ElasticTrainer
 
@@ -254,7 +254,9 @@ def test_delayed_zero_retrace_under_churn_and_plan():
     trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=0),
                              loss_fn=quad_loss, dcfg=cfg,
                              straggler_rounds=1, failure_rounds=99,
-                             gossip_delay=1, plan=OnePeerPlan())
+                             engine=engine.GossipEngineConfig(
+                                 substrate="stacked", delay=1),
+                             plan=OnePeerPlan())
     params = {"w": jnp.ones((n, dim))}
     rng = np.random.default_rng(0)
     for rnd in range(8):
@@ -279,7 +281,8 @@ def test_delayed_trainer_matches_dense_delayed_reference():
     overlay = expander_overlay(n, 4, seed=3)
     trainer = ElasticTrainer(overlay=overlay, loss_fn=quad_loss, dcfg=cfg,
                              straggler_rounds=1, failure_rounds=99,
-                             gossip_delay=1)
+                             engine=engine.GossipEngineConfig(
+                                 substrate="stacked", delay=1))
     params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
     ref = {"w": params["w"]}
     snap = {"w": params["w"]}          # y_{-1} := initial params
@@ -322,7 +325,8 @@ def test_delayed_inflight_survives_repair():
     trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=0),
                              loss_fn=quad_loss, dcfg=cfg,
                              straggler_rounds=1, failure_rounds=2,
-                             gossip_delay=1)
+                             engine=engine.GossipEngineConfig(
+                                 substrate="stacked", delay=1))
     params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
     params, _ = trainer.step(params, _batches(targets, 2), 0.1)  # primes
     alive = np.ones(n)
@@ -416,13 +420,15 @@ def test_attacker_churn_and_screen_zero_retrace():
         (3, (7,), "scale", 10.0),
         (5, (2,), "noise", 1.0)))          # mode changes too
     rng = np.random.default_rng(0)
-    for screen, kw in (("norm_clip", {"screen_tau": 3.0}),
-                       ("trimmed_mean", {"screen_trim": 1})):
+    for screen, kw in (("norm_clip", {"clip_tau": 3.0}),
+                       ("trimmed_mean", {"trim_f": 1})):
         trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=0),
                                  loss_fn=quad_loss, dcfg=cfg,
                                  straggler_rounds=1, failure_rounds=99,
-                                 gossip_screen=screen, attack_plan=plan,
-                                 **kw)
+                                 engine=engine.GossipEngineConfig(
+                                     substrate="stacked", screen=screen,
+                                     **kw),
+                                 attack_plan=plan)
         params = {"w": jnp.ones((n, dim))}
         for rnd in range(7):
             alive = (rng.random(n) > 0.2).astype(np.float32)  # churn too
@@ -445,7 +451,9 @@ def test_quarantine_evicts_attackers_through_splice_repair():
     trainer = ElasticTrainer(overlay=expander_overlay(n, 4, seed=1),
                              loss_fn=quad_loss, dcfg=cfg,
                              straggler_rounds=1, failure_rounds=99,
-                             gossip_screen="norm_clip", screen_tau=3.0,
+                             engine=engine.GossipEngineConfig(
+                                 substrate="stacked", screen="norm_clip",
+                                 clip_tau=3.0),
                              attack_plan=plan, quarantine_rounds=3)
     params = {"w": jnp.asarray(r.standard_normal((n, dim)) * 0.1,
                                jnp.float32)}

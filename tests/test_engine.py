@@ -292,7 +292,9 @@ class TestPipelinedQuantElastic:
 
         n, dim = 10, 3
         trainer = self._trainer(n, straggler_rounds=1, failure_rounds=99,
-                                gossip_delay=1, gossip_codec="int8_block",
+                                engine=engine.GossipEngineConfig(
+                                    substrate="stacked", codec="int8_block",
+                                    delay=1),
                                 plan=OnePeerPlan())
         params = {"w": jnp.ones((n, dim))}
         targets = jnp.zeros((n, dim))
@@ -314,7 +316,9 @@ class TestPipelinedQuantElastic:
         r = np.random.default_rng(1)
         targets = jnp.asarray(r.standard_normal((n, dim)), jnp.float32)
         trainer = self._trainer(n, straggler_rounds=1, failure_rounds=2,
-                                gossip_delay=1, gossip_codec="int8_block")
+                                engine=engine.GossipEngineConfig(
+                                    substrate="stacked", codec="int8_block",
+                                    delay=1))
         params = {"w": jnp.asarray(r.standard_normal((n, dim)), jnp.float32)}
         params, _ = trainer.step(params, self._batches(targets, 1), 0.1)
         alive = np.ones(n)
@@ -345,8 +349,10 @@ class TestPipelinedQuantElastic:
         finals = {}
         for codec in ("f32", "int8_block"):
             trainer = self._trainer(n, straggler_rounds=1,
-                                    failure_rounds=99, gossip_delay=1,
-                                    gossip_codec=codec)
+                                    failure_rounds=99,
+                                    engine=engine.GossipEngineConfig(
+                                        substrate="stacked", codec=codec,
+                                        delay=1))
             params = {"w": jnp.asarray(r.standard_normal((n, dim)),
                                        jnp.float32)}
             for _ in range(12):

@@ -268,7 +268,9 @@ class TestElasticActiveSetComposition:
             active_plan=plan_lib.make_active_set("random_k", k=n // 2,
                                                  seed=1),
             attack_plan=failures_lib.sample_attackers(n, 2, seed=3),
-            gossip_block=gossip_block)
+            engine=engine_lib.GossipEngineConfig(
+                substrate="blocked" if gossip_block else "stacked",
+                block=gossip_block))
         params, batches = _quad_setup(n)
         r = np.random.default_rng(7)
         for rnd in range(rounds):
@@ -363,7 +365,9 @@ class TestElasticActiveSetComposition:
         client is permanently masked instead of spliced — repairs records
         spliced=False and the executable never retraces."""
         n = 12
-        t = _make_trainer(n, gossip_block=n, failure_rounds=2)
+        t = _make_trainer(n, failure_rounds=2,
+                          engine=engine_lib.GossipEngineConfig(
+                              substrate="blocked", block=n))
         params, batches = _quad_setup(n)
         hb = np.ones(n, np.float32)
         hb[3] = 0.0
@@ -377,9 +381,12 @@ class TestElasticActiveSetComposition:
 
     def test_blocked_validation(self):
         with pytest.raises(ValueError, match="divisor"):
-            _make_trainer(12, gossip_block=5)
+            _make_trainer(12, engine=engine_lib.GossipEngineConfig(
+                substrate="blocked", block=5))
         with pytest.raises(ValueError, match="devices"):
-            _make_trainer(12, gossip_block=1)  # 12 devices on a 1-CPU host
+            # 12 devices on a 1-CPU host
+            _make_trainer(12, engine=engine_lib.GossipEngineConfig(
+                substrate="blocked", block=1))
 
 
 # -------------------------------------------------- multi-device (slow)
@@ -454,7 +461,7 @@ class TestBlockedMultiDevice:
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
             import sys; sys.path.insert(0, "src")
             import numpy as np, jax, jax.numpy as jnp
-            from repro.core import dfedavg, topology
+            from repro.core import dfedavg, engine as engine_lib, topology
             from repro.launch.elastic import ElasticTrainer
             from repro.overlay import plan as plan_lib
 
@@ -470,7 +477,9 @@ class TestBlockedMultiDevice:
                 dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.05,
                                             momentum=0.9),
                 active_plan=plan_lib.make_active_set("shards", n_shards=2),
-                gossip_block=b, failure_rounds=2)
+                engine=engine_lib.GossipEngineConfig(substrate="blocked",
+                                                     block=b),
+                failure_rounds=2)
             r = np.random.default_rng(0)
             params = {"w": jnp.asarray(r.standard_normal((n, 5, 3)),
                                        jnp.float32)}

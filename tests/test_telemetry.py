@@ -121,8 +121,10 @@ class TestEventStream:
             overlay=topology.expander_overlay(n, 4, seed=0),
             loss_fn=_quad_loss,
             dcfg=dfedavg.DFedAvgMConfig(local_steps=2, lr=0.2, momentum=0.9),
-            gossip_screen="norm_clip", screen_tau=3.0, quarantine_rounds=2,
-            attack_plan=atk, telemetry=TelemetryConfig(), logger=logger)
+            engine=engine.GossipEngineConfig(
+                substrate="stacked", screen="norm_clip", clip_tau=3.0,
+                telemetry=TelemetryConfig()),
+            quarantine_rounds=2, attack_plan=atk, logger=logger)
         params = _tree(n, shapes=((64,),))
         params = {"w": params["p0"]}
         for rnd in range(6):
@@ -469,3 +471,40 @@ class TestProductionStepTelemetry:
                     assert np.isfinite(np.asarray(tel[k])).all(), (codec, k)
             print("TELEMETRY_STEP_EXEC_OK")
         """)
+
+
+class TestRoundSampling:
+    """TelemetryLogger(round_every=k): sampled round records."""
+
+    def test_default_stream_unchanged(self):
+        a = TelemetryLogger(run="a")
+        b = TelemetryLogger(run="b", round_every=1)
+        for rnd in range(4):
+            a.round(rnd, loss=float(rnd))
+            b.round(rnd, loss=float(rnd))
+        strip = lambda recs: [{k: v for k, v in r.items() if k != "ts"}
+                              for r in recs if r["kind"] == "round"]
+        assert strip(a.records) == strip(b.records)
+
+    def test_round_every_samples_and_peeks(self):
+        log = TelemetryLogger(round_every=3)
+        assert [log.wants_round(r) for r in range(6)] == [
+            True, False, False, True, False, False]
+        for rnd in range(7):
+            log.round(rnd, loss=float(rnd))
+        rounds = [r["round"] for r in log.of_kind("round")]
+        assert rounds == [0, 3, 6]
+
+    def test_off_rounds_accumulate_phases_into_the_next_record(self):
+        log = TelemetryLogger(round_every=2)
+        for rnd in range(1, 3):           # rnd 1 skipped, rnd 2 emitted
+            with log.phase("work"):
+                pass
+            log.round(rnd, loss=0.0)
+        (rec,) = log.of_kind("round")
+        assert rec["round"] == 2
+        assert "work" in rec["phases"]    # both rounds' seconds folded in
+
+    def test_round_every_validated(self):
+        with pytest.raises(ValueError, match="round_every"):
+            TelemetryLogger(round_every=0)
