@@ -18,7 +18,15 @@ Four views:
      wire is <= 10% of the dense f32 wire) plus a convergence proxy on the
      stacked consensus cell, with the 10% variant registered through the
      public ``register_codec`` hook (same ``comm.json`` record, key
-     ``sparse``).
+     ``sparse``);
+  6. sparse sweep: rounds-to-consensus-threshold AND mean retention for
+     ``topk_ef`` at k_fraction in {0.5%, 1%, 5%, 10%} on the pure-gossip
+     stacked cell — the replace-with-sparse EF wire does not preserve the
+     network average, so the sweep reports the disagreement crossing
+     together with how much of the initial mean survives at that round;
+     k_fraction buys retention roughly linearly in wire bytes (same
+     ``comm.json`` record, key ``sparse_k_sweep``; the summary.json
+     rounds_to_threshold table picks these rows up).
 """
 from __future__ import annotations
 
@@ -340,6 +348,138 @@ def sparse_convergence(rounds: int = 20, fast: bool = False, n: int = 8,
             "proxy": proxies}
 
 
+def sparse_k_sweep(max_rounds: int = 120, fast: bool = False, n: int = 16,
+                   degree: int = 4, dim: int = 16384,
+                   eps: float = 2e-2) -> dict:
+    """Satellite: topk_ef sparsity sweep — rounds-to-consensus-threshold AND
+    mean retention at k_fraction in {0.5%, 1%, 5%, 10%}, pure gossip.
+
+    Each cell runs the stacked engine with a registered TopKEFCodec variant
+    on the same random client states (no local SGD: the crossing measures
+    the sparse mixing operator + error feedback alone). Two axes per cell:
+
+    * ``rounds_to_threshold`` — first round where the disagreement residual
+      sum ||x_i - mean(x)||^2 drops below ``eps`` of its start;
+    * ``mean_keep_at_rt`` — <mean(x_r), mean(x_0)> / ||mean(x_0)||^2 at
+      that round. Dense gossip keeps this at exactly 1.0; the
+      replace-with-sparse EF wire shrinks unshipped coordinates toward
+      zero, so sparse cells cross the raw disagreement threshold partly by
+      destroying the average. Retention is what k_fraction buys: it grows
+      monotonically with the wire bytes (~0.07 at 0.5% up to ~0.69 at 10%
+      on the default cell), which IS the study's headline — raw crossings
+      alone would crown the sparsest wire for agreeing on a shrunken model.
+
+    Gates: every cell keeps the one-executable guard, wire bytes are
+    strictly monotone in k_fraction and below the dense f32 wire, every
+    cell crosses, the f32 cell keeps the mean exactly, and retention at
+    the crossing is strictly increasing in k_fraction.
+
+    ``dim`` defaults to 16384 so even the 0.5% wire is genuinely lossy —
+    at small dims the pack-padding floor makes the top-k wire larger than
+    the payload and decode(encode(x)) == x bitwise, degenerating every
+    sparse cell into the f32 reference."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import rounds_to_threshold
+    from repro.core import engine as engine_lib, gossip
+    from repro.core.topology import expander_overlay
+    from repro.telemetry import TraceCounter
+
+    fractions = (0.005, 0.01, 0.05, 0.1)
+    max_rounds = max(30, max_rounds // 3) if fast else max_rounds
+    names = {}
+    for frac in fractions:
+        name = f"topk_ef_k{frac:g}".replace(".", "p")
+        if name not in engine_lib.CODECS:
+            engine_lib.register_codec(
+                name, engine_lib.TopKEFCodec(frac, name=name))
+        names[frac] = name
+    # registration above must precede the accounting: wire_bytes_per_round
+    # walks engine_lib.CODECS at call time
+    wire = wire_bytes_per_round(dim, degree)
+    assert all(wire[names[a]] < wire[names[b]]
+               for a, b in zip(fractions, fractions[1:])), wire
+    assert wire[names[fractions[-1]]] < wire["f32"], wire
+
+    spec = gossip.make_gossip_spec(expander_overlay(n, degree, seed=0))
+    r = np.random.default_rng(0)
+    w0 = np.asarray(r.standard_normal((n, dim)), np.float32)
+    init = {"w": jnp.asarray(w0)}
+    mean0 = w0.mean(axis=0, keepdims=True)
+    mean0_sq = float(np.vdot(mean0, mean0))
+
+    def stats(t):
+        w = np.asarray(t["w"])
+        m = w.mean(axis=0, keepdims=True)
+        disagree = float(np.sum(np.square(w - m)))
+        keep = float(np.vdot(m, mean0)) / mean0_sq
+        return disagree, keep
+
+    record = {"eps": eps, "n_clients": n, "degree": degree, "dim": dim,
+              "max_rounds": max_rounds, "cells": {}}
+    for frac in (None,) + fractions:  # None = the dense f32 reference
+        codec = "f32" if frac is None else names[frac]
+        ex = engine_lib.build_gossip_executor(
+            engine_lib.GossipEngineConfig(substrate="stacked", codec=codec),
+            spec)
+        if ex.stateful:
+            step = jax.jit(lambda t, cs, ex=ex: ex(t, codec_state=cs))
+            cstate = ex.init_codec_state(init)
+        else:
+            step = jax.jit(lambda t, ex=ex: ex(t))
+            cstate = None
+        x = init
+        d, kp = stats(x)
+        resids, keeps = [d], [kp]
+        for _ in range(max_rounds):
+            if cstate is None:
+                x = step(x)
+            else:
+                x, cstate = step(x, cstate)
+            d, kp = stats(x)
+            resids.append(d)
+            keeps.append(kp)
+            if d <= eps * resids[0]:
+                break
+        assert TraceCounter.cache_size(step) == 1, codec
+        rt = rounds_to_threshold(resids, eps)
+        label = "f32" if frac is None else f"k{frac:g}"
+        keep_at_rt = keeps[rt] if rt is not None else None
+        record["cells"][label] = {
+            "label": f"sparse_sweep_{label}", "codec": codec,
+            "k_fraction": frac,
+            "rounds_to_threshold": rt,
+            "wire_bytes_per_round": wire[codec],
+            "bytes_to_threshold": (rt * wire[codec] if rt is not None
+                                   else None),
+            "mean_keep_at_rt": (round(keep_at_rt, 4)
+                                if keep_at_rt is not None else None),
+            "mean_keep_last": round(keeps[-1], 4),
+            "resid_first": round(resids[0], 4),
+            "resid_last": round(resids[-1], 6),
+        }
+        emit(f"comm/sparse_k_sweep/{label}/n{n}-d{degree}-dim{dim}", 0.0,
+             f"rounds_to_threshold={rt};"
+             f"wire_bytes_per_round={wire[codec]};"
+             f"bytes_to_threshold="
+             f"{rt * wire[codec] if rt is not None else None};"
+             f"mean_keep_at_rt="
+             f"{None if keep_at_rt is None else round(keep_at_rt, 4)}")
+    cells = record["cells"]
+    assert cells["f32"]["rounds_to_threshold"] is not None
+    assert abs(cells["f32"]["mean_keep_at_rt"] - 1.0) < 1e-3, cells["f32"]
+    keeps_by_k = []
+    for frac in fractions:
+        cell = cells[f"k{frac:g}"]
+        assert cell["rounds_to_threshold"] is not None, (frac, cell)
+        keeps_by_k.append(cell["mean_keep_at_rt"])
+    # retention is the monotone axis: more wire, more of the average kept
+    assert all(a < b for a, b in zip(keeps_by_k, keeps_by_k[1:])), keeps_by_k
+    assert keeps_by_k[-1] < 0.99, keeps_by_k
+    return record
+
+
 def compiled(dryrun_dir: str = "experiments/dryrun") -> None:
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*train_4k*.json"))):
         with open(path) as f:
@@ -363,10 +503,12 @@ def main(fast: bool = False, out_dir: str | None = "experiments/bench") -> None:
     padding = padding_by_arch(out_dir=None)
     overlap = overlap_speedup(rounds=6 if fast else 12, fast=fast)
     sparse = sparse_convergence(fast=fast)
+    sweep = sparse_k_sweep(fast=fast)
     if out_dir:
         _merge_record(out_dir, {"padding_by_arch": padding,
                                 "overlap": overlap,
-                                "sparse": sparse})
+                                "sparse": sparse,
+                                "sparse_k_sweep": sweep})
     compiled()
 
 

@@ -22,7 +22,14 @@ re-runs overwrite it, dryrun-cache style) with the bench JSON schema::
      "n_traces", "expected_traces", "repairs": [{"dead", "n_after"}],
      "plan": [[round, [dead ids]], ...],
      "delayed": {"n_traces", "expected_traces", "rounds_per_sec",
-                 "proxy_sync", "proxy_delayed"}}
+                 "proxy_sync", "proxy_delayed"},
+     "chebyshev": {"eps", "cells": {label: {"rounds_to_threshold",
+                   "bytes_to_threshold", ...}}, "headline"}}
+
+The ``chebyshev`` panel is the sub_rounds=k timing-axis study: rounds- and
+bytes-to-consensus-threshold for ring/expander at k=1 vs k=2 (hard gate:
+k=2 Chebyshev on the ring crosses before the plain ring engine); the
+summary.json rounds_to_threshold table is fed from these rows.
 """
 from __future__ import annotations
 
@@ -35,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, rounds_to_threshold
 from repro.core import dfedavg, engine as engine_lib, failures
 from repro.core.topology import expander_overlay
 from repro.launch.elastic import ElasticTrainer
@@ -178,8 +185,100 @@ def run_delayed(n_clients: int = 16, degree: int = 4, dim: int = 4096,
             "proxy_delayed_quant": proxies["delayed_quant"]}
 
 
+def run_chebyshev(n_clients: int = 16, dim: int = 256, rounds: int = 80,
+                  eps: float = 1e-2, seed: int = 0) -> dict:
+    """Chebyshev timing-axis panel: rounds- and bytes-to-consensus-threshold
+    per (overlay family x sub_rounds) cell, pure gossip (no local SGD, so
+    the crossing measures the mixing operator alone).
+
+    The headline trade under test: does sub_rounds=2 Chebyshev on the CHEAP
+    ring (2 wires/client/sub-round) beat the plain engine on the ring in
+    rounds-to-threshold — the hard gate below — and how does it stand next
+    to the costlier d=4 expander at k=1 in BYTES-to-threshold (recorded,
+    per cell, in the JSON; the summary's rounds_to_threshold table picks
+    these rows up)."""
+    from repro.core import gossip, packing, spectral
+    from repro.overlay import registry
+
+    r = np.random.default_rng(seed)
+    init = {"w": jnp.asarray(r.standard_normal((n_clients, dim)),
+                             jnp.float32)}
+    pack = packing.make_stacked_pack_spec(
+        {"w": jax.ShapeDtypeStruct((dim,), jnp.float32)})
+
+    def resid(t):
+        w = t["w"]
+        return float(jnp.sum(jnp.square(w - w.mean(axis=0, keepdims=True))))
+
+    record = {"eps": eps, "n_clients": n_clients, "dim": dim,
+              "max_rounds": rounds, "cells": {}}
+    for family, k in (("ring", 1), ("ring", 2),
+                      ("expander", 1), ("expander", 2)):
+        overlay, meta = registry.build(family, n_clients, degree=4,
+                                       seed=seed)
+        spec = gossip.make_gossip_spec(overlay)
+        ex = engine_lib.build_gossip_executor(
+            engine_lib.GossipEngineConfig(substrate="stacked",
+                                          sub_rounds=k), spec)
+        # exact wire accounting from the shard_map twin's wire structs
+        # (already k-fold for the sub-round loop)
+        wire_pr = engine_lib.build_gossip_executor(
+            engine_lib.GossipEngineConfig(substrate="shard_map",
+                                          sub_rounds=k),
+            spec, axis_names="client",
+            pack_spec=pack).wire_bytes_per_round()
+        if k > 1:
+            cheby = jnp.asarray(ex.cheby_coeffs())
+            step = jax.jit(lambda t, c, ex=ex: ex(t, cheby=c))
+        else:
+            step = jax.jit(lambda t, ex=ex: ex(t))
+        x = init
+        resids = [resid(x)]
+        for _ in range(rounds):
+            x = step(x, cheby) if k > 1 else step(x)
+            resids.append(resid(x))
+            if resids[-1] <= eps * resids[0]:
+                break
+        rt = rounds_to_threshold(resids, eps)
+        label = f"{family}_k{k}"
+        record["cells"][label] = {
+            "label": label, "family": overlay.name, "sub_rounds": k,
+            "lam": round(meta["lam"], 6),
+            "cheby_lambda": round(spectral.chebyshev_lambda(meta["lam"], k),
+                                  6),
+            "rounds_to_threshold": rt,
+            "wire_bytes_per_round": wire_pr,
+            "bytes_to_threshold": rt * wire_pr if rt is not None else None,
+            "resid_first": round(resids[0], 4),
+            "resid_last": round(resids[-1], 6),
+        }
+        emit(f"elastic/chebyshev/{label}/n{n_clients}", 0.0,
+             f"rounds_to_threshold={rt};"
+             f"bytes_to_threshold={rt * wire_pr if rt is not None else None};"
+             f"lam={meta['lam']:.4f};"
+             f"wire_bytes_per_round={wire_pr}")
+    cells = record["cells"]
+    rk1 = cells["ring_k1"]["rounds_to_threshold"]
+    rk2 = cells["ring_k2"]["rounds_to_threshold"]
+    # the acceptance gate: k=2 Chebyshev on the ring crosses strictly
+    # earlier than the plain ring engine
+    assert rk2 is not None and (rk1 is None or rk2 < rk1), (rk1, rk2)
+    ek1 = cells["expander_k1"]
+    record["headline"] = {
+        "ring_k2_beats_ring_k1_rounds": True,
+        "ring_rounds_k1_vs_k2": [rk1, rk2],
+        "ring_k2_vs_expander_k1_rounds":
+            [rk2, ek1["rounds_to_threshold"]],
+        "ring_k2_vs_expander_k1_bytes":
+            [cells["ring_k2"]["bytes_to_threshold"],
+             ek1["bytes_to_threshold"]],
+    }
+    return record
+
+
 def main(rounds: int = 8, out_dir: str | None = "experiments/bench") -> None:
     rec = run(rounds_per_phase=rounds)
+    rec["chebyshev"] = run_chebyshev()
     for name, ph in rec["phases"].items():
         emit(f"elastic/{name}/n{rec['n_clients']}-d{rec['degree']}",
              ph["seconds"] * 1e6 / ph["rounds"],

@@ -30,7 +30,13 @@ criteria on every push:
     count with the lane-folded int8 top-k wire, per-round wire bytes <= 10%
     of the dense f32 build, the EF residual threading the donated
     ``codec_state`` operand (nonzero after one round), and the same
-    one-executable guard under churn + gate rotation.
+    one-executable guard under churn + gate rotation;
+  * the **Chebyshev** cell (``gossip_sub_rounds=2``): exactly 2*d
+    collective-permutes in the lowered step, the ``gossip_sub_rounds=1``
+    build lowering to HLO *textually identical* to the default packed
+    build (the sub-round plumbing is invisible at k=1), and ONE executable
+    across rounds that vary the traced Chebyshev coefficients alongside
+    churn + gate rotation.
 
 Usage (CI bench-smoke lane):
     PYTHONPATH=src python -m benchmarks.bench_engine_smoke
@@ -167,6 +173,56 @@ def main() -> None:
     emit("engine_smoke/sparse_ef/4x4", dt * 1e6 / rounds,
          f"d_collectives={len(sperms)};wire_ratio_vs_f32={ratio:.4f};"
          f"n_traces={s_traces};rounds={rounds};residual_mass={resid:.3e}")
+
+    # --- Chebyshev cell: sub_rounds=2 through the SAME production step
+    par_c1 = ParallelConfig(clients_per_pod=4, local_steps=2, grad_accum=2,
+                            gossip_impl="ppermute_packed",
+                            gossip_sub_rounds=1)
+    c1 = steps.build_train_step(cfg, shape, mesh, par_c1, dfl)
+    args = [params_lib.shape_structs(c1.param_struct),
+            c1.input_specs["batch"], c1.input_specs["lr"],
+            c1.input_specs["alive"], c1.input_specs["gates"]]
+    assert c1.cheby_coeffs is None and "cheby" not in c1.input_specs
+    assert c1.step_fn.lower(*args).as_text() == texts["packed"], \
+        "sub_rounds=1 no longer lowers identically to the packed build"
+
+    par_c2 = ParallelConfig(clients_per_pod=4, local_steps=2, grad_accum=2,
+                            gossip_impl="ppermute_packed",
+                            gossip_sub_rounds=2)
+    c2 = steps.build_train_step(cfg, shape, mesh, par_c2, dfl)
+    om = np.asarray(c2.cheby_coeffs)
+    assert om.shape == (2,) and om[0] == 1.0, om
+    assert c2.input_specs["cheby"].shape == (2,)
+    args = [params_lib.shape_structs(c2.param_struct),
+            c2.input_specs["batch"], c2.input_specs["lr"],
+            c2.input_specs["alive"], c2.input_specs["gates"],
+            c2.input_specs["cheby"]]
+    cperms = [ln for ln in c2.step_fn.lower(*args).as_text().splitlines()
+              if "collective_permute" in ln]
+    assert len(cperms) == 2 * d, (len(cperms), d)
+
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        alive = (r.random(n) > 0.3).astype(np.float32)
+        if alive.sum() < 2:
+            alive[:] = 1.0
+        gates = np.zeros(d, np.float32)
+        gates[rnd % d] = 1.0
+        # coefficients are step DATA: vary them every round, expect 1 trace
+        cheby = jnp.asarray([1.0, float(om[1]) * (1.0 + 0.05 * rnd)],
+                            jnp.float32)
+        params, _m = c2.step_fn(
+            params, batch, jnp.float32(0.01), jnp.asarray(alive),
+            jnp.asarray(gates), cheby)
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    c_traces = TraceCounter.cache_size(c2.step_fn)
+    assert c_traces == 1, f"chebyshev step retraced: {c_traces}"
+    for leaf in jax.tree.leaves(params):
+        assert bool(jnp.isfinite(jnp.asarray(leaf, jnp.float32)).all())
+    emit("engine_smoke/chebyshev_k2/4x4", dt * 1e6 / rounds,
+         f"kd_collectives={len(cperms)};n_traces={c_traces};"
+         f"rounds={rounds};k1_identity=1")
     print("ENGINE_SMOKE_OK")
 
 

@@ -97,3 +97,16 @@ def run_dfl(params, loss_fn, batch_fn, mixer, rounds: int, dcfg,
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The required CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rounds_to_threshold(series, eps: float = 1e-2):
+    """Rounds-to-consensus-threshold crossing: first index r with
+    ``series[r] <= eps * series[0]`` (series[0] is the pre-mixing value, so
+    the index IS the number of rounds applied); None when never crossed."""
+    if not len(series):
+        return None
+    r0 = series[0]
+    for r, v in enumerate(series):
+        if v <= eps * r0:
+            return r
+    return None

@@ -8,10 +8,13 @@ Mapping to the paper:
   bench_mnist     -> Figs. 4 (IID) and 5 (non-IID)
   bench_lm        -> Fig. 6 (Shakespeare LM)
   bench_failures  -> Figs. 7 & 8 (10%/20% client failures)
-  bench_comm      -> communication-cost panels (+ compiled gossip bytes)
+  bench_comm      -> communication-cost panels (+ compiled gossip bytes,
+                     topk_ef k_fraction sweep: crossing + mean retention)
   bench_kernels   -> Pallas kernel traffic models (TPU target)
-  bench_elastic   -> elastic runtime churn throughput + recompile count
-                     (also writes a JSON record to experiments/bench/)
+  bench_elastic   -> elastic runtime churn throughput + recompile count +
+                     the Chebyshev sub-round panel (rounds/bytes-to-
+                     threshold, ring k=2 vs expander k=1; JSON record to
+                     experiments/bench/)
   bench_overlay   -> overlay-lab Pareto sweep: spectral gap vs degree vs
                      packed mixing rounds/sec per graph family, static and
                      one-peer time-varying (JSON record to experiments/bench/)

@@ -197,6 +197,15 @@ class ParallelConfig:
     # in-flight snapshot of round t-1's post-local-step params, so the wire
     # transfer hides behind a full local-step scan
     gossip_delay: int = 0
+    # Chebyshev multi-round gossip (repro.core.engine sub_rounds axis):
+    # k >= 2 runs k gossip sub-rounds per round with Chebyshev polynomial
+    # weights over the mixing matrix (second-order recurrence; coefficients
+    # from the overlay's lambda via spectral.chebyshev_omegas, shipped as
+    # one more donated traced operand — zero retraces). k*d collectives per
+    # round; 1 = the sync engine, byte-identical HLO. Packed substrates
+    # only; does not compose with gossip_delay=1, screens, or stateful
+    # codecs (engine-config validation rejects those cells).
+    gossip_sub_rounds: int = 1
     # wire codec override (repro.core.engine): "auto" keeps the impl
     # alias's historical codec (f32 for the plain impls, int8_block for the
     # quant impls); any codec in the engine registry (engine.CODECS) names

@@ -88,6 +88,7 @@ __all__ = [
     "SCREEN_SUBSTRATES",
     "STATEFUL_SUBSTRATES",
     "TELEMETRY_SUBSTRATES",
+    "CHEBY_SUBSTRATES",
     "LEGACY_GOSSIP_IMPLS",
     "GossipEngineConfig",
     "GossipExecutor",
@@ -112,7 +113,14 @@ SCREENS = ("none", "norm_clip", "trimmed_mean")
 DELAY_SUBSTRATES = ("shard_map", "stacked")
 SCREEN_SUBSTRATES = ("shard_map", "stacked")
 STATEFUL_SUBSTRATES = ("shard_map", "stacked")
-TELEMETRY_SUBSTRATES = ("shard_map", "stacked")
+# telemetry rides "blocked" too: the metrics-only cell (consensus residual +
+# in-degree) is computable from the device-local rows the blocked round
+# already gathers, with ZERO extra collectives; screens (and hence clip
+# counts) stay stacked/shard_map-only
+TELEMETRY_SUBSTRATES = ("shard_map", "stacked", "blocked")
+# Chebyshev multi-round gossip (sub_rounds > 1): the two packed substrates
+# whose round bodies loop the d-collectives-per-schedule structure
+CHEBY_SUBSTRATES = ("shard_map", "stacked")
 
 # legacy ParallelConfig.gossip_impl strings -> (substrate, codec). The delay
 # axis rides separately (ParallelConfig.gossip_delay); "ppermute_packed_async"
@@ -142,6 +150,23 @@ class GossipEngineConfig:
         kernel row-block tile, the tighter default wire format for quant).
       delay: 0 = synchronous, 1 = pipelined (one-round-delayed snapshot;
         shard_map | stacked only — see DELAY_SUBSTRATES).
+      sub_rounds: k >= 1 gossip sub-rounds per round (the second timing
+        axis). 1 (the default) is the synchronous engine, byte-identical —
+        the sub-round machinery is a build-time branch, exactly like
+        delay=0. k > 1 runs Chebyshev-accelerated multi-round gossip
+        (shard_map | stacked — see CHEBY_SUBSTRATES): each sub-round
+        reuses the round's d-collectives-per-schedule structure and fused
+        reduce kernels on the SAME weight table (k*d collectives total),
+        combined through the second-order recurrence
+        ``x_(j+1) = omega[j] * (W x_j - x_(j-1)) + x_(j-1)`` whose
+        per-sub-round ``omega`` coefficients ship as one more traced
+        operand next to alive/gates (``cheby=`` — derive them from the
+        overlay's lambda via :func:`repro.core.spectral.chebyshev_omegas`
+        or :meth:`GossipExecutor.cheby_coeffs`; varying them retraces
+        nothing). Composes with any stateless codec; delay=1 (the snapshot
+        is one round stale, not one sub-round), screens (per-sub-round
+        order statistics are undefined) and stateful codecs (the EF
+        residual updates once per round) are rejected.
       mix_impl: kernel implementation knob threaded to the fused
         gossip_mix / quant kernels ("auto" | "pallas" | "pallas_interpret" |
         "ref").
@@ -163,13 +188,16 @@ class GossipEngineConfig:
         to an untelemetered build) or a
         :class:`repro.telemetry.metrics.TelemetryConfig`, which makes the
         executor additionally return a RoundMetrics dict of traced values
-        (shard_map | stacked only — see TELEMETRY_SUBSTRATES). Metrics are
-        outputs, never trace structure: no extra collectives, no retraces.
+        (shard_map | stacked | blocked — see TELEMETRY_SUBSTRATES; the
+        blocked cell is metrics-only, measured on device-local rows).
+        Metrics are outputs, never trace structure: no extra collectives,
+        no retraces.
     """
 
     substrate: str = "shard_map"
     codec: str = "f32"
     delay: int = 0
+    sub_rounds: int = 1
     mix_impl: str = "auto"
     screen: str = "none"
     clip_tau: float = 3.0
@@ -203,6 +231,30 @@ class GossipEngineConfig:
                 f"{self.substrate!r}"
                 + (" (the blocked cell is not wired for a carried snapshot "
                    "yet)" if self.substrate == "blocked" else ""))
+        if not isinstance(self.sub_rounds, int) or self.sub_rounds < 1:
+            raise ValueError(
+                f"sub_rounds must be an int >= 1, got {self.sub_rounds!r}")
+        if self.sub_rounds > 1:
+            if self.substrate not in CHEBY_SUBSTRATES:
+                raise ValueError(
+                    "Chebyshev multi-round gossip (sub_rounds > 1) runs on "
+                    f"the {' | '.join(CHEBY_SUBSTRATES)} substrates, got "
+                    f"{self.substrate!r}")
+            if self.delay:
+                raise ValueError(
+                    "sub_rounds > 1 is synchronous; it does not compose "
+                    "with the delayed snapshot (delay=1): the carried wire "
+                    "is one ROUND stale, not one sub-round")
+            if self.screen != "none":
+                raise ValueError(
+                    f"screen={self.screen!r} does not compose with "
+                    "sub_rounds > 1 (per-sub-round order statistics are "
+                    "undefined); screen the k=1 cell instead")
+            if getattr(codec_obj, "stateful", False):
+                raise ValueError(
+                    f"stateful codec {self.codec!r} does not compose with "
+                    "sub_rounds > 1 (its per-client state updates once per "
+                    "round, not per sub-round)")
         if self.substrate == "per_leaf" and self.codec == "int8_block":
             raise ValueError("per-leaf payloads are not tile-aligned; use "
                              "codec='int8' for the per-leaf baseline")
@@ -242,15 +294,14 @@ class GossipEngineConfig:
                 raise ValueError(
                     "round telemetry runs on the "
                     f"{' | '.join(TELEMETRY_SUBSTRATES)} substrates, got "
-                    f"{self.substrate!r}"
-                    + (" (the blocked cell is not wired for metrics yet)"
-                       if self.substrate == "blocked" else ""))
+                    f"{self.substrate!r}")
 
 
 def parse_gossip_impl(gossip_impl: str, delay: int = 0,
                       codec: str = "auto", screen: str = "none",
                       clip_tau: float = 3.0, trim_f: int = 1,
                       telemetry: TelemetryConfig | None = None,
+                      sub_rounds: int = 1,
                       ) -> GossipEngineConfig:
     """Parse a legacy ``gossip_impl`` string (+ the ``gossip_delay`` /
     ``gossip_codec`` / ``gossip_screen`` knobs) into an engine config.
@@ -262,6 +313,9 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
     gossip_codec="int8_block"``. ``screen`` rides the same way: any packed
     alias composes with "norm_clip" / "trimmed_mean" through config alone,
     and ``telemetry`` (a :class:`TelemetryConfig`) with any packed alias.
+    ``sub_rounds`` (ParallelConfig.gossip_sub_rounds) is the Chebyshev
+    multi-round axis — k > 1 composes with any stateless-codec packed
+    alias at delay=0.
     """
     if gossip_impl not in LEGACY_GOSSIP_IMPLS:
         raise ValueError(f"unknown gossip_impl {gossip_impl!r}; available: "
@@ -274,8 +328,9 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
                          f"gossip_impl='ppermute_packed_async', got "
                          f"{gossip_impl!r}")
     return GossipEngineConfig(substrate=substrate, codec=codec, delay=delay,
-                              screen=screen, clip_tau=clip_tau,
-                              trim_f=trim_f, telemetry=telemetry)
+                              sub_rounds=sub_rounds, screen=screen,
+                              clip_tau=clip_tau, trim_f=trim_f,
+                              telemetry=telemetry)
 
 
 # legacy per-knob trainer arguments and their defaults — the shim behind the
@@ -286,6 +341,7 @@ def parse_gossip_impl(gossip_impl: str, delay: int = 0,
 _LEGACY_TRAINER_KNOBS = (
     ("gossip_codec", "f32"),
     ("gossip_delay", 0),
+    ("gossip_sub_rounds", 1),
     ("gossip_block", 0),
     ("gossip_screen", "none"),
     ("screen_tau", 3.0),
@@ -326,6 +382,7 @@ def resolve_trainer_engine(trainer) -> None:
                 "launch.steps.build_train_step from ParallelConfig)")
         trainer.gossip_codec = ecfg.codec
         trainer.gossip_delay = ecfg.delay
+        trainer.gossip_sub_rounds = ecfg.sub_rounds
         trainer.gossip_screen = ecfg.screen
         trainer.screen_tau = ecfg.clip_tau
         trainer.screen_trim = ecfg.trim_f
@@ -745,6 +802,14 @@ class GossipExecutor:
     layout — donated, remapped through splice repair by the same old2new
     row compaction, never trace structure.
 
+    With ``config.sub_rounds = k > 1`` (Chebyshev multi-round gossip) the
+    call takes one more traced operand: ``cheby=...``, the (k,) f32
+    per-sub-round coefficient vector (host-side source:
+    :meth:`cheby_coeffs`, which reads the baked ``spec.lam``). Like
+    alive/gates it is data — recomputing it after a splice repair or
+    sweeping it across rounds retraces nothing. The k=1 cell takes no such
+    operand and IS the sync engine (build-time branch, delay=0 style).
+
     With ``config.telemetry`` set, a RoundMetrics dict of traced values is
     appended as the LAST element of the return tuple (``(mixed, metrics)``
     sync, ``(mixed, new_state, metrics)`` delayed); :meth:`metrics_structs`
@@ -784,7 +849,7 @@ class GossipExecutor:
         return bool(getattr(self.codec, "stateful", False))
 
     def __call__(self, tree: PyTree, *, state=None, codec_state=None,
-                 alive=None, gates=None):
+                 alive=None, gates=None, cheby=None):
         cfg = self.config
         if self.delayed and state is None:
             raise ValueError("delayed executor needs the carried snapshot "
@@ -796,16 +861,29 @@ class GossipExecutor:
         if not self.stateful and codec_state is not None:
             raise ValueError(f"codec {cfg.codec!r} carries no codec state; "
                              "drop the codec_state operand")
+        if cfg.sub_rounds > 1 and cheby is None:
+            raise ValueError(
+                f"sub_rounds={cfg.sub_rounds} needs the (sub_rounds,) "
+                "per-sub-round Chebyshev coefficient operand (build it "
+                "with cheby_coeffs / spectral.chebyshev_omegas)")
+        if cfg.sub_rounds == 1 and cheby is not None:
+            raise ValueError(
+                "cheby coefficients are a sub_rounds > 1 operand; the "
+                "sub_rounds=1 cell is the sync engine — drop the operand")
         if cfg.substrate == "dense":
             return gossip.mix_dense(
                 tree, gossip.gated_mixing_matrix(self.spec, gates, alive))
         if cfg.substrate == "per_leaf":
             return self._per_leaf_round(tree)
         if cfg.substrate == "stacked":
+            if cfg.sub_rounds > 1:
+                return self._stacked_round_cheby(tree, alive, gates, cheby)
             return self._stacked_round(tree, state, codec_state, alive,
                                        gates)
         if cfg.substrate == "blocked":
             return self._blocked_round(tree, alive, gates)
+        if cfg.sub_rounds > 1:
+            return self._shard_map_round_cheby(tree, alive, gates, cheby)
         return self._shard_map_round(tree, state, codec_state, alive, gates)
 
     # ------------------------------------------------- pipelined state
@@ -889,19 +967,35 @@ class GossipExecutor:
             codec.state_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
             for b in range(ps.n_buffers))
 
+    # ------------------------------------------------- cheby coefficients
+    def cheby_coeffs(self):
+        """Host-side (sub_rounds,) f32 Chebyshev coefficient vector for the
+        baked spec's lambda(M) — the value the ``cheby=`` operand ships.
+        Recompute after a splice repair (the rebuilt executor carries the
+        new spec.lam); the shape only depends on ``config.sub_rounds``, so
+        the refreshed values never retrace."""
+        from repro.core import spectral
+
+        return spectral.chebyshev_omegas(self.spec.lam,
+                                         self.config.sub_rounds)
+
     # ----------------------------------------------------- telemetry
     def metrics_structs(self) -> dict:
         """ShapeDtypeStructs of the RoundMetrics this executor returns —
         the key set is fixed by (telemetry, screen, substrate) at build
         time ({} when telemetry is off). Stacked metrics are client-stacked
         arrays; shard_map metrics are per-DEVICE locals (the caller's
-        island sums them host-side — see repro.telemetry.metrics)."""
+        island sums them host-side — see repro.telemetry.metrics); blocked
+        metrics are the device-local (block,)-leading rows (an island
+        out_spec over the client device axis concatenates them back to the
+        stacked layout)."""
         tel = self.config.telemetry
         if tel is None:
             return {}
         out = {}
-        if self.config.substrate == "stacked":
-            n = self.spec.n_clients
+        if self.config.substrate in ("stacked", "blocked"):
+            n = (self.config.block if self.config.substrate == "blocked"
+                 else self.spec.n_clients)
             n_sched = len(self.spec.recv_from)
             if tel.consensus:
                 out["resid_sqnorm"] = jax.ShapeDtypeStruct((n,), jnp.float32)
@@ -925,9 +1019,11 @@ class GossipExecutor:
 
     def wire_bytes_per_round(self) -> int:
         """EXACT wire bytes one client ships per round: one codec wire per
-        live schedule per packed buffer, from the same ``wire_struct``
-        shapes the collectives move (requires a baked ``pack_spec``; the
-        dense reference substrate has no wire => 0)."""
+        live schedule per packed buffer PER SUB-ROUND, from the same
+        ``wire_struct`` shapes the collectives move (requires a baked
+        ``pack_spec``; the dense reference substrate has no wire => 0).
+        ``sub_rounds=k`` multiplies the wire k-fold — the cost side of the
+        Chebyshev rounds-to-threshold trade the benches measure."""
         if self.config.substrate == "dense":
             return 0
         if self.pack_spec is None:
@@ -940,7 +1036,8 @@ class GossipExecutor:
         for b in range(ps.n_buffers):
             st = codec.wire_struct(ps.buffer_struct(b), ps.buffer_blocks(b))
             per_sched += math.prod(st.shape) * jnp.dtype(st.dtype).itemsize
-        return len(gossip._live_schedules(self.spec)) * per_sched
+        return (len(gossip._live_schedules(self.spec)) * per_sched
+                * self.config.sub_rounds)
 
     def _sq(self, pack_spec):
         """Whole-buffer squared-norm closure through the fused per-block
@@ -1130,6 +1227,83 @@ class GossipExecutor:
             ret = ret + (metrics,)
         return ret[0] if len(ret) == 1 else ret
 
+    def _shard_map_round_cheby(self, tree, alive, gates, cheby):
+        """Chebyshev multi-round gossip (sub_rounds = k > 1), shard_map.
+
+        The traced ``cheby`` operand carries the (k,) per-sub-round weights
+        (:func:`repro.core.spectral.chebyshev_omegas`) — plain data, so a
+        splice repair's refreshed lambda never retraces. Each sub-round
+        reuses the sync round's exact d-ppermute + fused-reduce structure
+        (k*d collectives per round, HLO-counted by the anchor tests) and the
+        second-order combine
+
+            x^(j+1) = cheby[j] * (W x^(j) - x^(j-1)) + x^(j-1)
+
+        with x^(-1) := x^(0) runs in f32 on the packed buffers. Weights /
+        contributor vectors are computed once and reused every sub-round —
+        the same W each application, exactly the ``mixing.chebyshev_mix``
+        dense oracle. Telemetry (when on) measures the FIRST sub-round —
+        the wires the k=1 cell would ship — so metrics stay comparable
+        across the sub_rounds axis."""
+        cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
+        pack_spec = self.pack_spec or packing.make_pack_spec(tree)
+        idx = gossip._client_index(self.axis_names)
+        live = gossip._live_schedules(spec)
+        perms = [p for _, p, _, _ in live]
+        weights = gossip._local_raw_weights(spec, idx, len(perms), gates)
+        contrib = (None if alive is None and gates is None
+                   else gossip._local_contrib_vec(spec, idx, live, alive,
+                                                  gates))
+        tcontrib = None
+        if tel is not None:
+            tcontrib = (contrib if contrib is not None
+                        else gossip._local_contrib_vec(spec, idx, live,
+                                                       alive, gates))
+        omg = jnp.asarray(cheby, jnp.float32)
+        metrics = {}
+        if tel is not None and tel.degree:
+            metrics["in_degree"] = jnp.sum(tcontrib[1:])
+            metrics["sched_contrib"] = tcontrib[1:]
+        resid = jnp.float32(0.0)
+        sq = self._sq(pack_spec)
+        out_bufs = []
+        for b, buf in enumerate(packing.pack_tree(tree, pack_spec)):
+            n_blocks = pack_spec.buffer_blocks(b)
+            x_prev = buf.astype(jnp.float32)
+            x_cur = x_prev
+            for j in range(cfg.sub_rounds):
+                xj = x_cur.astype(buf.dtype)
+                wire = codec.encode(xj, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+                received = [jax.lax.ppermute(wire, self.axis_names, perm=p)
+                            for p in perms]
+                if j == 0 and tel is not None and tel.consensus:
+                    for s, rwire in enumerate(received):
+                        dec = codec.decode(rwire, buf.dtype,
+                                           n_blocks=n_blocks,
+                                           block_rows=pack_spec.block_rows)
+                        resid = resid + tcontrib[1 + s] * sq(
+                            dec.astype(jnp.float32)
+                            - xj.astype(jnp.float32))
+                y = codec.reduce(
+                    xj, received, weights, contrib,
+                    edge_weight=float(spec.edge_weight), n_blocks=n_blocks,
+                    block_rows=pack_spec.block_rows,
+                    impl=cfg.mix_impl).astype(jnp.float32)
+                # dead self => y == x^(j) (identity fallback), and the
+                # recurrence fixes the whole orbit: dead clients keep params
+                x_next = omg[j] * (y - x_prev) + x_prev
+                x_prev, x_cur = x_cur, x_next
+            out_bufs.append(x_cur.astype(buf.dtype))
+        if tel is not None and tel.consensus:
+            metrics["resid_sqnorm"] = resid
+        mixed = packing.unpack_tree(tuple(out_bufs), pack_spec)
+        if tel is not None:
+            return mixed, metrics
+        return mixed
+
     def _stacked_round(self, tree, state, cstate, alive, gates):
         cfg, codec, spec = self.config, self.codec, self.spec
         tel = cfg.telemetry
@@ -1216,6 +1390,69 @@ class GossipExecutor:
             metrics["in_degree"] = jnp.sum(tcontrib[:, 1:], axis=1)
             metrics["sched_contrib"] = tcontrib[:, 1:]
         return metrics, tcontrib
+
+    def _stacked_round_cheby(self, tree, alive, gates, cheby):
+        """Chebyshev multi-round gossip (sub_rounds = k > 1), stacked.
+
+        Same contract as :meth:`_shard_map_round_cheby` on the client-
+        stacked substrate: k gather+einsum applications of the one weight
+        table (computed once — the same W each sub-round), the second-order
+        combine in f32, telemetry measured on the first sub-round. The f32
+        cell is the dense-oracle reference: it matches
+        ``mixing.chebyshev_mix(x, gossip.gated_mixing_matrix(spec, gates,
+        alive), cheby)`` to float tolerance."""
+        cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
+        pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
+        w = (gossip._static_weight_table(spec)
+             if alive is None and gates is None
+             else gossip.alive_weight_table(spec, alive, gates))
+        gathers = [jnp.asarray(rf) for rf in spec.recv_from]
+        fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        metrics, tcontrib = self._stacked_metrics_init(alive, gates)
+        resid = jnp.zeros((spec.n_clients,), jnp.float32)
+        sq = jax.vmap(self._sq(pack_spec))
+        omg = jnp.asarray(cheby, jnp.float32)
+        out_bufs = []
+        for b, buf in enumerate(fresh):
+            n_blocks = pack_spec.buffer_blocks(b)
+
+            def enc(x, n_blocks=n_blocks):
+                return codec.encode(x, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows,
+                                    impl=cfg.mix_impl)
+
+            def dec(x, n_blocks=n_blocks, dtype=buf.dtype):
+                return codec.decode(x, dtype, n_blocks=n_blocks,
+                                    block_rows=pack_spec.block_rows)
+
+            x_prev = buf.astype(jnp.float32)
+            x_cur = x_prev
+            for j in range(cfg.sub_rounds):
+                xj = x_cur.astype(buf.dtype)
+                # self row stays the current full-precision iterate; only
+                # the gathered neighbor rows go through the codec wire
+                src = (xj if codec.identity_wire
+                       else jax.vmap(dec)(jax.vmap(enc)(xj)))
+                stack = jnp.stack([xj] + [jnp.take(src, g, axis=0)
+                                          for g in gathers], axis=1)
+                y = jnp.einsum("nk,nk...->n...", w,
+                               stack.astype(jnp.float32))
+                if j == 0 and tel is not None and tel.consensus:
+                    for s in range(len(gathers)):
+                        resid = resid + tcontrib[:, 1 + s] * sq(
+                            stack[:, 1 + s].astype(jnp.float32)
+                            - xj.astype(jnp.float32))
+                x_next = omg[j] * (y - x_prev) + x_prev
+                x_prev, x_cur = x_cur, x_next
+            out_bufs.append(x_cur.astype(buf.dtype))
+        if tel is not None and tel.consensus:
+            metrics["resid_sqnorm"] = resid
+        mixed = jax.vmap(lambda bs: packing.unpack_tree(bs, pack_spec))(
+            tuple(out_bufs))
+        if tel is not None:
+            return mixed, metrics
+        return mixed
 
     def _stacked_round_screened(self, tree, state, alive, gates, pack_spec):
         """Screened stacked round. The gather sources (decoded codec wires /
@@ -1438,8 +1675,16 @@ class GossipExecutor:
         substrate's einsum over the device-local rows of the SAME
         ``alive_weight_table`` — f32 cells are bit-identical to the stacked
         reference on the same overlay, and alive / active-set / gate churn
-        stays plain data."""
+        stays plain data.
+
+        Telemetry (when on) reads the device-local (block,) rows of the
+        contributor table and measures residuals off the ALREADY-gathered
+        candidate stack — zero extra collectives, asserted by the HLO
+        guards in tests/test_telemetry.py. The island's out_spec over the
+        client device axis concatenates the per-device rows back to the
+        (n,)-stacked layout."""
         cfg, codec, spec = self.config, self.codec, self.spec
+        tel = cfg.telemetry
         bs = self.blocked
         pack_spec = self.pack_spec or gossip._stacked_pack_spec(tree)
         b_sz = bs.block
@@ -1448,6 +1693,16 @@ class GossipExecutor:
         w_local = jax.lax.dynamic_slice(w, (row0, 0), (b_sz, w.shape[1]))
         idx_tab = jnp.asarray(bs.gather_flat, jnp.int32)        # (S, n)
         fresh = jax.vmap(lambda t: packing.pack_tree(t, pack_spec))(tree)
+        metrics, tcontrib_local = {}, None
+        if tel is not None:
+            _, tcontrib = gossip.raw_contrib_tables(spec, alive, gates)
+            tcontrib_local = jax.lax.dynamic_slice(
+                tcontrib, (row0, 0), (b_sz, tcontrib.shape[1]))
+            if tel.degree:
+                metrics["in_degree"] = jnp.sum(tcontrib_local[:, 1:], axis=1)
+                metrics["sched_contrib"] = tcontrib_local[:, 1:]
+        resid = jnp.zeros((b_sz,), jnp.float32)
+        vsq = jax.vmap(self._sq(pack_spec))
         out_bufs = []
         for b, buf in enumerate(fresh):
             n_blocks = pack_spec.buffer_blocks(b)
@@ -1481,8 +1736,20 @@ class GossipExecutor:
             out = jnp.einsum("bk,bk...->b...", w_local,
                              stack.astype(jnp.float32))
             out_bufs.append(out.astype(buf.dtype))
-        return jax.vmap(lambda bso: packing.unpack_tree(bso, pack_spec))(
+            if tel is not None and tel.consensus:
+                # residuals off the already-gathered stack: the telemetry
+                # build ships the exact same permutes as the metrics-off one
+                for s in range(spec.degree):
+                    resid = resid + tcontrib_local[:, 1 + s] * vsq(
+                        stack[:, 1 + s].astype(jnp.float32)
+                        - buf.astype(jnp.float32))
+        if tel is not None and tel.consensus:
+            metrics["resid_sqnorm"] = resid
+        mixed = jax.vmap(lambda bso: packing.unpack_tree(bso, pack_spec))(
             tuple(out_bufs))
+        if tel is not None:
+            return mixed, metrics
+        return mixed
 
     def _per_leaf_round(self, tree):
         cfg, codec, spec = self.config, self.codec, self.spec

@@ -12,6 +12,7 @@ from repro.core import spectral
 
 __all__ = [
     "chow_matrix",
+    "chebyshev_mix",
     "metropolis_hastings_matrix",
     "max_degree_matrix",
     "uniform_average_matrix",
@@ -30,6 +31,33 @@ def chow_matrix(adj: np.ndarray, theta: float | None = None) -> np.ndarray:
         theta = spectral.theta_star(lam_max / lam2)
     c = 2.0 / ((1.0 + theta) * lam_max)
     return np.eye(adj.shape[0]) - c * lap
+
+
+def chebyshev_mix(x: np.ndarray, m: np.ndarray,
+                  omegas: np.ndarray) -> np.ndarray:
+    """Dense oracle for k Chebyshev gossip sub-rounds (host numpy, f64).
+
+    ``x`` is the client-stacked value, shape ``(n, ...)``; ``m`` the (n, n)
+    mixing matrix the executor effectively applies (pass
+    :func:`repro.core.gossip.gated_mixing_matrix` to reproduce a masked /
+    gated engine round); ``omegas`` the per-sub-round weights from
+    :func:`repro.core.spectral.chebyshev_omegas`. Implements the executor's
+    recurrence exactly, including the x^(-1) := x^(0) seed:
+
+        x^(j+1) = omegas[j] * (m @ x^(j) - x^(j-1)) + x^(j-1)
+
+    so ``chebyshev_mix(x, m, [1.0])`` is one plain ``m @ x`` round. This is
+    the reference the engine's sub_rounds cells are tested against.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    m = np.asarray(m, dtype=np.float64)
+    flat = x.reshape(x.shape[0], -1)
+    x_prev = flat
+    x_cur = flat
+    for w in np.asarray(omegas, dtype=np.float64):
+        x_next = w * (m @ x_cur - x_prev) + x_prev
+        x_prev, x_cur = x_cur, x_next
+    return x_cur.reshape(x.shape)
 
 
 def metropolis_hastings_matrix(adj: np.ndarray) -> np.ndarray:

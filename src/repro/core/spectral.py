@@ -18,6 +18,8 @@ __all__ = [
     "chow_lambda",
     "mixing_lambda",
     "c_lambda",
+    "chebyshev_omegas",
+    "chebyshev_lambda",
     "ramanujan_bound",
     "ring_kappa_lower_bound",
     "is_connected",
@@ -107,6 +109,56 @@ def c_lambda(lam: float) -> float:
         return float("inf")
     log_inv = math.log(1.0 / lam)
     return 2 * lam * lam + 4 * lam * lam * log_inv + 2 * lam + 2.0 / log_inv
+
+
+def chebyshev_omegas(lam: float, k: int) -> np.ndarray:
+    """Per-sub-round Chebyshev weights for k gossip sub-rounds (f32, (k,)).
+
+    Classical Chebyshev (semi-iterative) acceleration of the fixed mixing
+    matrix M with lambda(M) = lam: write p_j(M) = T_j(M/lam) / T_j(1/lam)
+    (T_j the Chebyshev polynomial), so p_j(1) = 1 (consensus preserved) and
+    |p_j| <= 1/T_j(1/lam) on [-lam, lam] — the square-root-of-kappa speedup
+    over plain M^j. The three-term T recurrence turns into the executor's
+    second-order sub-round recurrence
+
+        x^(j+1) = omega[j] * (M x^(j) - x^(j-1)) + x^(j-1),
+
+    with x^(-1) := x^(0), where ``omega[0] == 1`` exactly (the first
+    sub-round IS the plain mix — how the sub_rounds=1 cell stays the sync
+    engine) and the rest follow omega_{j+1} = 1 / (1 - (lam^2/4) omega_j)
+    seeded at omega_1 = 2 (the T-ratio convention; omega climbs from
+    2/(2 - lam^2) toward 2/(1 + sqrt(1 - lam^2))).
+
+    ``lam`` outside [0, 1) (a disconnected overlay reports lam = 1.0)
+    degenerates to all-ones: k plain gossip rounds, never a blow-up.
+    """
+    if k < 1:
+        raise ValueError(f"sub_rounds k must be >= 1, got {k}")
+    lam = float(lam)
+    out = np.ones(k, dtype=np.float32)
+    if not 0.0 <= lam < 1.0:
+        return out
+    w = 2.0  # omega_1 in the T-ratio recurrence; out[0] stays the plain mix
+    for j in range(1, k):
+        w = 1.0 / (1.0 - 0.25 * lam * lam * w)
+        out[j] = w
+    return out
+
+
+def chebyshev_lambda(lam: float, k: int) -> float:
+    """Effective contraction of k Chebyshev sub-rounds: 1 / T_k(1/lam).
+
+    Compare against plain repetition's lam**k — for gap-limited overlays
+    (lam -> 1) the ratio approaches the square-root-of-kappa speedup.
+    """
+    if k < 1:
+        raise ValueError(f"sub_rounds k must be >= 1, got {k}")
+    if lam <= 0.0:
+        return 0.0
+    if lam >= 1.0:
+        return 1.0
+    # T_k(x) = cosh(k * arccosh(x)) for x >= 1
+    return 1.0 / math.cosh(k * math.acosh(1.0 / lam))
 
 
 def ramanujan_bound(d: int) -> float:

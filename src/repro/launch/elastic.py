@@ -145,6 +145,15 @@ class ElasticTrainer:
     # snapshot (mix_dense_delayed semantics) and the snapshot is carried as
     # trainer state — see _inflight. 0 = synchronous (unchanged path).
     gossip_delay: int = 0
+    # k >= 2 = Chebyshev multi-round gossip: each round runs k gossip
+    # sub-rounds with Chebyshev polynomial weights over the mixing matrix
+    # (engine sub_rounds axis; coefficients from the overlay's lambda via
+    # executor.cheby_coeffs(), shipped as traced data each round — zero
+    # retraces, and a splice repair refreshes them with the rebuilt spec).
+    # 1 = the sync engine round, bit-identical (unchanged path). Stacked
+    # substrate only here; does not compose with delay / screens / stateful
+    # codecs (the engine config rejects those cells).
+    gossip_sub_rounds: int = 1
     # wire codec of the stacked engine round (repro.core.engine): "f32"
     # (default, the exact pre-engine numerics), "int8" / "int8_block"
     # simulate the quantized wire — with gossip_delay=1 this is the
@@ -238,10 +247,6 @@ class ElasticTrainer:
                                  "stacked round; a production step_builder "
                                  "carries its own metrics via "
                                  "ParallelConfig.gossip_telemetry")
-            if self.gossip_block:
-                raise ValueError("telemetry needs a packed substrate "
-                                 "(stacked/shard_map); the blocked round "
-                                 "is not wired for in-graph metrics")
         if self.gossip_delay and self.step_builder is not None:
             # the production pipelined step threads its own in-flight state
             # (mesh-leading-dims layout, primed via TrainSetup.init_inflight)
@@ -330,9 +335,11 @@ class ElasticTrainer:
             self._executor = engine_lib.build_gossip_executor(
                 engine_lib.GossipEngineConfig(
                     substrate="blocked", codec=self.gossip_codec,
-                    delay=self.gossip_delay, screen=self.gossip_screen,
+                    delay=self.gossip_delay,
+                    sub_rounds=self.gossip_sub_rounds,
+                    screen=self.gossip_screen,
                     clip_tau=self.screen_tau, trim_f=self.screen_trim,
-                    block=b_sz), spec, axis_names="clients")
+                    block=b_sz, telemetry=tel), spec, axis_names="clients")
             executor = self._executor
 
             def round_fn(params, batches, lr, alive, gates, attack, akey):
@@ -346,21 +353,55 @@ class ElasticTrainer:
                     return executor(p, alive=alive_vec,
                                     gates=gate_vec if use_plan else None)
 
-                params = mesh_lib.shard_map(
-                    island, mesh, in_specs=(P("clients"), P(), P()),
-                    out_specs=P("clients"))(params, alive, gates)
-                return params, losses, None
+                # telemetry metrics come out of the island device-local
+                # ((block,)-leading rows); the P("clients") out_spec
+                # concatenates them back to the (n,)-stacked layout — no
+                # collective, same permutes as the metrics-off build
+                if use_tel:
+                    params, metrics = mesh_lib.shard_map(
+                        island, mesh, in_specs=(P("clients"), P(), P()),
+                        out_specs=(P("clients"), P("clients")))(
+                        params, alive, gates)
+                else:
+                    params = mesh_lib.shard_map(
+                        island, mesh, in_specs=(P("clients"), P(), P()),
+                        out_specs=P("clients"))(params, alive, gates)
+                    metrics = None
+                return params, losses, metrics
             return jax.jit(round_fn)
 
         self._executor = engine_lib.build_gossip_executor(
             engine_lib.GossipEngineConfig(substrate="stacked",
                                           codec=self.gossip_codec,
                                           delay=self.gossip_delay,
+                                          sub_rounds=self.gossip_sub_rounds,
                                           screen=self.gossip_screen,
                                           clip_tau=self.screen_tau,
                                           trim_f=self.screen_trim,
                                           telemetry=tel), spec)
         executor = self._executor
+
+        if self.gossip_sub_rounds > 1:
+            # Chebyshev multi-round round: the (k,) coefficient vector is
+            # one more traced data argument next to alive/gates (the engine
+            # config has already rejected delay / screens / stateful codecs
+            # for this cell, so this is the only cheby-carrying round_fn)
+            def round_fn(params, batches, lr, alive, gates, attack, akey,
+                         cheby):
+                self.tracer.hit()  # python side effect: runs only on trace
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+                out = executor(params, alive=alive,
+                               gates=gates if use_plan else None,
+                               cheby=cheby)
+                if use_tel:
+                    mixed, metrics = out
+                else:
+                    mixed, metrics = out, None
+                return mixed, losses, metrics
+            return jax.jit(round_fn)
 
         if executor.stateful:
             # stateful codec (topk_ef): the per-client codec state rides
@@ -577,6 +618,14 @@ class ElasticTrainer:
                 params, losses, self._inflight, metrics = self._round(
                     params, self._inflight, batches, lr, alive, gates,
                     attack, akey)
+            elif not self.gossip_block and self.gossip_sub_rounds > 1:
+                # coefficients recomputed from the live executor each round:
+                # a splice repair rebuilt it with the new spec's lambda, and
+                # the (k,) shape is fixed so the refresh never retraces
+                cheby = jnp.asarray(self._executor.cheby_coeffs())
+                params, losses, metrics = self._round(params, batches, lr,
+                                                      alive, gates, attack,
+                                                      akey, cheby)
             else:
                 params, losses, metrics = self._round(params, batches, lr,
                                                       alive, gates, attack,

@@ -137,6 +137,10 @@ class TrainSetup:
     #               codec's state_struct layout; the step RETURNS the
     #               updated state as its LAST output. Prime it once with
     #               init_codec_state(params).
+    #   cheby       (sub_rounds,) f32  gossip_sub_rounds > 1 (Chebyshev
+    #               multi-round gossip) — the per-sub-round coefficient
+    #               vector (``cheby_coeffs`` holds the host value for the
+    #               current overlay; refresh it after a splice repair)
     # input_specs holds a ShapeDtypeStruct per present operand, in call
     # order, so callers can assemble the argument list generically.
     step_fn: Any
@@ -159,6 +163,10 @@ class TrainSetup:
     # exact per-client wire bytes one round ships (0 when untelemetered /
     # no overlay) — the static fact behind metrics["telemetry"]["wire_bytes"]
     wire_bytes_per_round: int = 0
+    # host-side (sub_rounds,) f32 Chebyshev coefficients for the baked
+    # overlay (None unless gossip_sub_rounds > 1) — ship as the "cheby"
+    # operand; same shape forever, so refreshed values never retrace
+    cheby_coeffs: Any = None
 
 
 def _train_rules(caxes: tuple[str, ...], zero3: bool = True) -> dict:
@@ -263,6 +271,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                                         par.gossip_codec, par.gossip_screen,
                                         par.gossip_clip_tau,
                                         par.gossip_trim_f,
+                                        sub_rounds=par.gossip_sub_rounds,
                                         telemetry=(TelemetryConfig()
                                                    if par.gossip_telemetry
                                                    else None))
@@ -324,8 +333,16 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     axis_sizes = tuple(int(dmesh.shape[a]) for a in axis_names)
     lead = (1,) * len(axis_sizes)
     tel_spec = P(*axis_names)
+    # Chebyshev multi-round gossip (sub_rounds > 1): the (k,) coefficient
+    # vector rides as one more donated replicated operand next to
+    # alive/gates — plain data, zero retraces across coefficient refreshes
+    # (a splice repair recomputes it from the rebuilt spec's lambda). The
+    # engine-config validation guarantees the cheby cell is sync (delay=0),
+    # screenless and stateless, so only the plain gossip_fn carries it; a
+    # sub_rounds=1 build keeps the exact historical signature and HLO.
+    use_cheby = executor is not None and run_cfg.sub_rounds > 1
 
-    def gossip_fn(params, alive, gates):
+    def gossip_fn(params, alive, gates, *maybe_cheby):
         if executor is None:
             return params
         if run_cfg.substrate == "dense":
@@ -334,30 +351,34 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
             return executor(params, alive=alive,
                             gates=gates if use_gates else None)
 
-        def body(p, alive_vec, gate_vec):
+        def body(p, alive_vec, gate_vec, *rest):
             local = jax.tree.map(lambda x: x[0], p)       # client-local shard
             # alive + round-plan gates ride into the island replicated; only
             # the packed engine is failure/plan-aware (the per-leaf
             # baseline substrate ignores both, and a static config drops
             # the gate pathway at trace time)
+            kw = dict(alive=alive_vec,
+                      gates=gate_vec if use_gates else None)
+            if use_cheby:
+                kw["cheby"] = rest[0]
             if use_tel:
-                mixed, met = executor(local, alive=alive_vec,
-                                      gates=gate_vec if use_gates else None)
+                mixed, met = executor(local, **kw)
                 return (jax.tree.map(lambda x: x[None], mixed),
                         jax.tree.map(lambda x: x.reshape(lead + x.shape),
                                      met))
             mixed = (executor(local)
                      if run_cfg.substrate == "per_leaf"
-                     else executor(local, alive=alive_vec,
-                                   gates=gate_vec if use_gates else None))
+                     else executor(local, **kw))
             return jax.tree.map(lambda x: x[None], mixed)
 
+        in_specs = (pspecs, P(), P()) + ((P(),) if use_cheby else ())
+        args = (params, alive, gates) + tuple(maybe_cheby)
         if use_tel:
             return mesh_lib.shard_map(
-                body, dmesh, in_specs=(pspecs, P(), P()),
-                out_specs=(pspecs, tel_spec))(params, alive, gates)
-        return mesh_lib.shard_map(body, dmesh, in_specs=(pspecs, P(), P()),
-                                  out_specs=pspecs)(params, alive, gates)
+                body, dmesh, in_specs=in_specs,
+                out_specs=(pspecs, tel_spec))(*args)
+        return mesh_lib.shard_map(body, dmesh, in_specs=in_specs,
+                                  out_specs=pspecs)(*args)
 
     # ---- pipelined gossip state (delay=1): the in-flight snapshot is the
     # per-device *codec wire* of last round's post-local-step shards (the
@@ -518,7 +539,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
     extra_names = (["active"] if use_active else []) \
         + (["attack", "attack_key"] if use_attack else []) \
         + (["inflight"] if use_delay else []) \
-        + (["codec_state"] if use_cstate else [])
+        + (["codec_state"] if use_cstate else []) \
+        + (["cheby"] if use_cheby else [])
 
     def train_step(params, batch, lr, alive, gates, *extra):
         kw = dict(zip(extra_names, extra))
@@ -554,9 +576,13 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
                 else:
                     params, out_state = island
             elif use_tel:
-                params, tel_met = gossip_fn(params, eff_alive, gates)
+                params, tel_met = gossip_fn(
+                    params, eff_alive, gates,
+                    *((kw["cheby"],) if use_cheby else ()))
             else:
-                params = gossip_fn(params, eff_alive, gates)
+                params = gossip_fn(
+                    params, eff_alive, gates,
+                    *((kw["cheby"],) if use_cheby else ()))
         metrics = {"loss": jnp.mean(loss)}
         if use_tel:
             tel_met = dict(tel_met)
@@ -615,6 +641,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         "active": jax.ShapeDtypeStruct((n_cl,), jnp.float32),
         "attack": jax.ShapeDtypeStruct((2, n_cl), jnp.float32),
         "attack_key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        "cheby": jax.ShapeDtypeStruct((run_cfg.sub_rounds,), jnp.float32),
     }
     inflight_shardings = cstate_shardings = None
     for name in extra_names:
@@ -657,7 +684,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, base_mesh: Mesh,
         dfl_mesh=dmesh, n_clients=n_cl, pack_spec=pack_spec,
         gossip_delay=par.gossip_delay if use_delay else 0,
         init_inflight=init_inflight, init_codec_state=init_codec_state,
-        engine_config=run_cfg, wire_bytes_per_round=wire_bytes)
+        engine_config=run_cfg, wire_bytes_per_round=wire_bytes,
+        cheby_coeffs=executor.cheby_coeffs() if use_cheby else None)
 
 
 # ------------------------------------------------------------- serve steps

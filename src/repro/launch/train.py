@@ -67,6 +67,12 @@ class SimTrainer:
     # 1 = pipelined gossip (mix the previous round's packed snapshot,
     # mix_dense_delayed semantics); 0 = synchronous (unchanged)
     gossip_delay: int = 0
+    # k >= 2 = Chebyshev multi-round gossip (engine sub_rounds axis): k
+    # gossip sub-rounds per round with Chebyshev polynomial weights over
+    # the mixing matrix, coefficients shipped as traced data from
+    # executor.cheby_coeffs() — zero retraces, refreshed after repairs.
+    # 1 = the sync engine round, bit-identical (unchanged path).
+    gossip_sub_rounds: int = 1
     # wire codec of the stacked engine round ("f32" | "int8" | "int8_block")
     gossip_codec: str = "f32"
     # Byzantine screen ("none" | "norm_clip" | "trimmed_mean") + its knobs;
@@ -114,10 +120,6 @@ class SimTrainer:
                     f"blocked layout needs "
                     f"{self.overlay.n // self.gossip_block} devices "
                     f"(= n/block), only {len(jax.devices())} visible")
-        if self.telemetry is not None and self.gossip_block:
-            raise ValueError("telemetry needs the stacked substrate; the "
-                             "blocked round is not wired for in-graph "
-                             "metrics")
         self.spec = gossip_lib.make_gossip_spec(self.overlay)
         # shared retrace accounting (emits "compile" events when logging)
         self.tracer = TraceCounter("sim_round", logger=self.logger)
@@ -157,9 +159,12 @@ class SimTrainer:
             self._executor = engine_lib.build_gossip_executor(
                 engine_lib.GossipEngineConfig(
                     substrate="blocked", codec=self.gossip_codec,
-                    delay=self.gossip_delay, screen=self.gossip_screen,
+                    delay=self.gossip_delay,
+                    sub_rounds=self.gossip_sub_rounds,
+                    screen=self.gossip_screen,
                     clip_tau=self.screen_tau, trim_f=self.screen_trim,
-                    block=b_sz), spec, axis_names="clients")
+                    block=b_sz, telemetry=self.telemetry),
+                spec, axis_names="clients")
             executor = self._executor
 
             @partial(jax.jit, static_argnames=())
@@ -174,21 +179,55 @@ class SimTrainer:
                     return executor(p, alive=alive_vec,
                                     gates=gate_vec if use_plan else None)
 
-                params = mesh_lib.shard_map(
-                    island, mesh, in_specs=(P("clients"), P(), P()),
-                    out_specs=P("clients"))(params, alive, gates)
-                return params, losses, None
+                # blocked telemetry: the island returns device-local
+                # (block,)-leading metric rows; the P("clients") out_spec
+                # concatenates them back to the (n,)-stacked layout with
+                # zero extra collectives
+                if use_tel:
+                    params, metrics = mesh_lib.shard_map(
+                        island, mesh, in_specs=(P("clients"), P(), P()),
+                        out_specs=(P("clients"), P("clients")))(
+                        params, alive, gates)
+                else:
+                    params = mesh_lib.shard_map(
+                        island, mesh, in_specs=(P("clients"), P(), P()),
+                        out_specs=P("clients"))(params, alive, gates)
+                    metrics = None
+                return params, losses, metrics
             return round_fn
 
         self._executor = engine_lib.build_gossip_executor(
             engine_lib.GossipEngineConfig(substrate="stacked",
                                           codec=self.gossip_codec,
                                           delay=self.gossip_delay,
+                                          sub_rounds=self.gossip_sub_rounds,
                                           screen=self.gossip_screen,
                                           clip_tau=self.screen_tau,
                                           trim_f=self.screen_trim,
                                           telemetry=self.telemetry), spec)
         executor = self._executor
+
+        if self.gossip_sub_rounds > 1:
+            # Chebyshev multi-round round: the (k,) coefficient vector is
+            # one more traced data argument (the engine config has already
+            # rejected delay / screens / stateful codecs for this cell)
+            @partial(jax.jit, static_argnames=())
+            def round_fn(params, batches, lr, alive, gates, attack, akey,
+                         cheby):
+                self.tracer.hit()  # python side effect: runs only on trace
+                params, losses = jax.vmap(client, in_axes=(0, 0, None))(
+                    params, batches, lr)
+                if use_attack:
+                    params = failures_lib.apply_attack(params, attack, akey)
+                out = executor(params, alive=alive,
+                               gates=gates if use_plan else None,
+                               cheby=cheby)
+                if use_tel:
+                    params, metrics = out
+                else:
+                    params, metrics = out, None
+                return params, losses, metrics
+            return round_fn
 
         if executor.stateful:
             # stateful codec (topk_ef): the per-client codec state rides as
@@ -346,6 +385,14 @@ class SimTrainer:
                     params, self._inflight, batches, lr_t,
                     jnp.asarray(alive_t), self._gates(rnd),
                     attack, akey)
+            elif not self.gossip_block and self.gossip_sub_rounds > 1:
+                # coefficients recomputed from the live executor: a repair
+                # rebuilt it with the new spec's lambda, and the fixed (k,)
+                # shape means the refresh never retraces
+                params, losses, metrics = self._round_fn(
+                    params, batches, lr_t, jnp.asarray(alive_t),
+                    self._gates(rnd), attack, akey,
+                    jnp.asarray(self._executor.cheby_coeffs()))
             else:
                 params, losses, metrics = self._round_fn(
                     params, batches, lr_t, jnp.asarray(alive_t),
@@ -371,7 +418,7 @@ class SimTrainer:
 def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
                 local_steps=3, batch=8, seq=64, lr=0.5, momentum=0.9,
                 ckpt_dir=None, seed=0, drop_fraction=0.0, drop_round=10,
-                round_plan="static", gossip_delay=0,
+                round_plan="static", gossip_delay=0, gossip_sub_rounds=1,
                 gossip_codec="f32", gossip_screen="none",
                 attackers=0, attack_mode="sign_flip",
                 attack_magnitude=1.0, active_set="full", active_k=1,
@@ -418,7 +465,8 @@ def run_char_lm(n_clients=16, rounds=30, topology="expander", degree=4,
     # (x telemetry) as a single cell instead of five loose knobs
     engine = engine_lib.GossipEngineConfig(
         substrate="blocked" if gossip_block else "stacked",
-        codec=gossip_codec, delay=gossip_delay, screen=gossip_screen,
+        codec=gossip_codec, delay=gossip_delay,
+        sub_rounds=gossip_sub_rounds, screen=gossip_screen,
         block=gossip_block,
         telemetry=(telemetry_metrics.TelemetryConfig()
                    if telemetry or telemetry_log else None))
@@ -482,6 +530,10 @@ def main() -> None:
                     help="time-varying round plan (gates-as-data)")
     ap.add_argument("--gossip-delay", type=int, default=0, choices=[0, 1],
                     help="1 = pipelined (one-round-delayed) gossip")
+    ap.add_argument("--gossip-sub-rounds", type=int, default=1,
+                    help="k >= 2: Chebyshev multi-round gossip — k gossip "
+                         "sub-rounds per round with Chebyshev polynomial "
+                         "weights over the mixing matrix (1 = sync engine)")
     ap.add_argument("--gossip-codec", default="f32",
                     choices=list(engine_lib.CODECS),
                     help="wire codec of the engine round (int8_block + "
@@ -525,6 +577,7 @@ def main() -> None:
                        ckpt_dir=args.ckpt_dir,
                        drop_fraction=args.drop_fraction,
                        round_plan=args.plan, gossip_delay=args.gossip_delay,
+                       gossip_sub_rounds=args.gossip_sub_rounds,
                        gossip_codec=args.gossip_codec,
                        gossip_screen=args.gossip_screen,
                        attackers=args.attackers,

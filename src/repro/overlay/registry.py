@@ -43,6 +43,7 @@ __all__ = [
     "get_family",
     "build",
     "overlay_meta",
+    "chebyshev_schedule",
     "blocked_profile",
     "torus_overlay",
     "hypercube_overlay",
@@ -92,10 +93,30 @@ def overlay_meta(overlay: Overlay) -> dict:
     if rep.connected:
         w = overlay.chow_weights()
         meta.update(lam=w.lam, spectral_gap=1.0 - w.lam,
-                    mixing_time_1e3=spectral.mixing_time(w.lam))
+                    mixing_time_1e3=spectral.mixing_time(w.lam),
+                    # effective 2-sub-round contraction (1/T_2(1/lam)) —
+                    # what the Chebyshev sub_rounds=2 timing cell buys,
+                    # next to lam**2 for plain repetition
+                    cheby_lambda_k2=spectral.chebyshev_lambda(w.lam, 2))
     else:
-        meta.update(lam=1.0, spectral_gap=0.0, mixing_time_1e3=float("inf"))
+        meta.update(lam=1.0, spectral_gap=0.0, mixing_time_1e3=float("inf"),
+                    cheby_lambda_k2=1.0)
     return meta
+
+
+def chebyshev_schedule(overlay: Overlay, k: int,
+                       theta: float | None = None) -> np.ndarray:
+    """(k,) f32 Chebyshev sub-round coefficients for an overlay's Chow
+    mixing matrix — the host-side coefficient chooser the trainers feed the
+    engine's ``cheby`` operand from. Uses the SAME lambda(M) the registry
+    metadata reports (``overlay_meta(...)['lam']`` == ``chow_weights().lam``:
+    max(|lambda_2|, |lambda_N|) of M, always in [0, 1) for connected
+    overlays — the sign/normalization convention pinned by
+    tests/test_spectral.py). A lam outside [0, 1) (a badly-chosen theta can
+    push it to 1) degenerates to all-ones — k plain rounds, never a
+    blow-up; disconnected overlays have no Chow matrix and raise here like
+    everywhere else."""
+    return spectral.chebyshev_omegas(overlay.chow_weights(theta).lam, k)
 
 
 def build(name: str, n: int, degree: int = 4, seed: int = 0

@@ -7,6 +7,9 @@ summary record with the headline tables —
 * ``wire_bytes_per_round`` per codec (exact, from the engine's
   ``wire_struct``-derived accounting; recorded by ``bench_telemetry``),
 * ``rounds_per_sec`` per measured cell (every bench row that carries one),
+* ``rounds_to_threshold`` per consensus-crossing cell (every bench row that
+  records one — the Chebyshev panel in ``bench_elastic`` and the sparse
+  k_fraction sweep in ``bench_comm``), with the wire/bytes columns,
 * ``retraces`` per counted cell (every ``n_traces`` a bench recorded, plus
   the ``compile`` events of each run stream),
 * ``consensus`` trajectory per run (the ``resid_sqnorm`` series from the
@@ -106,6 +109,7 @@ def build_summary(bench_dir: str = "experiments/bench",
     (written to ``out`` when given)."""
     benches = load_bench_records(bench_dir)
     rounds_per_sec: dict[str, dict] = {}
+    rounds_to_threshold: dict[str, dict] = {}
     retraces: dict[str, int] = {}
     for bench, record in benches.items():
         for path, d in _walk(record, bench):
@@ -117,6 +121,15 @@ def build_summary(bench_dir: str = "experiments/bench",
                     if extra in d:
                         cell[extra] = d[extra]
                 rounds_per_sec[f"{bench}/{label}"] = cell
+            if "rounds_to_threshold" in d:
+                label = _cell_label(path, d)
+                cell = {"rounds_to_threshold": d["rounds_to_threshold"]}
+                for extra in ("family", "sub_rounds", "codec", "k_fraction",
+                              "lam", "cheby_lambda", "wire_bytes_per_round",
+                              "bytes_to_threshold", "mean_keep_at_rt"):
+                    if extra in d:
+                        cell[extra] = d[extra]
+                rounds_to_threshold[f"{bench}/{label}"] = cell
             if "n_traces" in d:
                 retraces[f"{bench}/{_cell_label(path, d)}"] = d["n_traces"]
     wire_bytes = (benches.get("telemetry") or {}).get("wire_bytes", {})
@@ -125,6 +138,7 @@ def build_summary(bench_dir: str = "experiments/bench",
         "benches": sorted(benches),
         "wire_bytes_per_round": wire_bytes,
         "rounds_per_sec": rounds_per_sec,
+        "rounds_to_threshold": rounds_to_threshold,
         "retraces": retraces,
         "runs": [summarize_run_log(p) for p in logs],
     }

@@ -531,8 +531,12 @@ class TestByzantineScreens:
             engine.GossipEngineConfig(substrate="dense",
                                       telemetry=TelemetryConfig())
         with pytest.raises(ValueError):
-            engine.GossipEngineConfig(substrate="blocked", block=2,
+            engine.GossipEngineConfig(substrate="per_leaf",
                                       telemetry=TelemetryConfig())
+        # the metrics-only blocked cell is legal (TELEMETRY_SUBSTRATES)
+        cfg = engine.GossipEngineConfig(substrate="blocked", block=2,
+                                        telemetry=TelemetryConfig())
+        assert cfg.telemetry is not None
         cfg = engine.parse_gossip_impl("ppermute_packed",
                                        telemetry=TelemetryConfig())
         assert cfg.telemetry == TelemetryConfig()
@@ -807,4 +811,298 @@ class TestShardMapScreens:
                 d = setup.gossip_spec.degree
                 assert len(perms) == d, (gi, screen, len(perms), d)
             print("SCREENED_STEP_HLO_OK")
+        """)
+
+
+class TestChebyshevMultiRound:
+    """Chebyshev-accelerated multi-round gossip (sub_rounds = k > 1, the
+    second timing axis): config validation, the traced (k,) coefficient
+    operand contract, the stacked cell vs the dense ``chebyshev_mix``
+    oracle (incl. alive masks + gates + dead-client identity), consensus
+    acceleration over plain repetition on the ring, k-fold wire
+    accounting, zero retraces under varying coefficients x churn x gates,
+    and — in the slow lane — the shard_map twin plus the production-step
+    anchors (exactly k*d collective-permutes; sub_rounds=1 lowers
+    textually identical to the sync engine)."""
+
+    def test_cheby_config_validation(self):
+        with pytest.raises(ValueError, match="sub_rounds"):
+            engine.GossipEngineConfig(sub_rounds=0)
+        with pytest.raises(ValueError, match="sub_rounds"):
+            engine.GossipEngineConfig(sub_rounds=1.5)
+        for substrate, kw in (("dense", {}), ("per_leaf", {}),
+                              ("blocked", dict(block=4))):
+            with pytest.raises(ValueError, match="sub_rounds > 1"):
+                engine.GossipEngineConfig(substrate=substrate,
+                                          sub_rounds=2, **kw)
+        with pytest.raises(ValueError, match="synchronous"):
+            engine.GossipEngineConfig(substrate="stacked", delay=1,
+                                      sub_rounds=2)
+        for screen in ("norm_clip", "trimmed_mean"):
+            with pytest.raises(ValueError, match="screen"):
+                engine.GossipEngineConfig(substrate="stacked",
+                                          screen=screen, sub_rounds=2)
+        with pytest.raises(ValueError, match="stateful"):
+            engine.GossipEngineConfig(substrate="stacked", codec="topk_ef",
+                                      sub_rounds=2)
+        # the same cells stay legal at k=1 (the sync engine) and the
+        # stateless codecs compose at k>1
+        engine.GossipEngineConfig(substrate="stacked", screen="norm_clip")
+        engine.GossipEngineConfig(substrate="stacked", codec="topk_ef")
+        engine.GossipEngineConfig(substrate="stacked", codec="int8_block",
+                                  sub_rounds=3)
+
+    def test_cheby_operand_contract(self):
+        spec = gossip.make_gossip_spec(topology.ring_overlay(8))
+        x = _tree(8)
+        ex2 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked", sub_rounds=2),
+            spec)
+        with pytest.raises(ValueError, match="cheby"):
+            ex2(x)  # k > 1 needs the (k,) coefficient operand
+        ex1 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked"), spec)
+        with pytest.raises(ValueError, match="cheby"):
+            ex1(x, cheby=jnp.ones((1,), jnp.float32))  # k = 1 must not
+        om = ex2.cheby_coeffs()
+        assert om.shape == (2,) and om.dtype == np.float32
+        assert om[0] == 1.0  # the first sub-round IS the plain mix
+
+    @pytest.mark.parametrize("k", [2, 3])
+    def test_stacked_cheby_matches_dense_oracle(self, k):
+        from repro.core import mixing
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=5)
+        ex = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked", sub_rounds=k),
+            spec)
+        om = ex.cheby_coeffs()
+        alive = jnp.asarray(np.r_[np.ones(7), 0, 1, 1], jnp.float32)
+        gates = jnp.asarray([1., 0., 1., 1.], jnp.float32)
+        for kw in ({}, {"alive": alive}, {"alive": alive, "gates": gates}):
+            got = ex(x, cheby=jnp.asarray(om), **kw)
+            m = np.asarray(gossip.gated_mixing_matrix(
+                spec, kw.get("gates"), kw.get("alive")))
+            for key in x:
+                ref = mixing.chebyshev_mix(np.asarray(x[key]), m, om)
+                np.testing.assert_allclose(np.asarray(got[key]), ref,
+                                           rtol=2e-5, atol=2e-5)
+        # a dead client's identity row survives the whole recurrence
+        # bit-for-bit: y == x^(j) makes every x^(j+1) collapse to x^(0)
+        got = ex(x, cheby=jnp.asarray(om), alive=alive)
+        for key in x:
+            np.testing.assert_array_equal(np.asarray(got[key][7]),
+                                          np.asarray(x[key][7]))
+
+    def test_cheby_beats_plain_repetition_on_the_ring(self):
+        from repro.core import spectral
+        spec = gossip.make_gossip_spec(topology.ring_overlay(8))
+        x = _tree(8, seed=1)
+        ex1 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked"), spec)
+        ex2 = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked", sub_rounds=2),
+            spec)
+        # theory: 1/T_2(1/lam) < lam^2 whenever 0 < lam < 1
+        assert spectral.chebyshev_lambda(spec.lam, 2) < spec.lam ** 2
+
+        def resid(t):
+            return sum(float(jnp.sum(jnp.square(
+                v - v.mean(axis=0, keepdims=True)))) for v in t.values())
+
+        cheb = ex2(x, cheby=jnp.asarray(ex2.cheby_coeffs()))
+        plain = ex1(ex1(x))  # same wire budget: two plain applications
+        assert resid(cheb) < resid(plain) < resid(x)
+
+    def test_wire_bytes_multiply_by_sub_rounds(self):
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10)
+        pack = packing.make_stacked_pack_spec(
+            jax.tree.map(lambda v: v[0], x))
+        wires = {}
+        for k in (1, 2, 3):
+            ex = engine.build_gossip_executor(
+                engine.GossipEngineConfig(substrate="shard_map",
+                                          sub_rounds=k),
+                spec, axis_names="client", pack_spec=pack)
+            wires[k] = ex.wire_bytes_per_round()
+        assert wires[1] > 0
+        assert wires[2] == 2 * wires[1] and wires[3] == 3 * wires[1]
+
+    def test_varying_coefficients_churn_gates_zero_retraces(self):
+        from repro.telemetry import TraceCounter
+        spec = gossip.make_gossip_spec(
+            topology.expander_overlay(10, 4, seed=2))
+        x = _tree(10, seed=3)
+        ex = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked", sub_rounds=2),
+            spec)
+        fn = jax.jit(lambda t, a, g, c: ex(t, alive=a, gates=g, cheby=c))
+        r = np.random.default_rng(0)
+        for t in range(4):
+            alive = (r.random(10) > 0.3).astype(np.float32)
+            if alive.sum() < 2:
+                alive[:] = 1
+            gates = (np.arange(4) != t % 4).astype(np.float32)
+            cheby = jnp.asarray([1.0, 1.0 + 0.1 * t], jnp.float32)
+            x = fn(x, jnp.asarray(alive), jnp.asarray(gates), cheby)
+        assert TraceCounter.cache_size(fn) == 1
+        assert all(bool(jnp.isfinite(v).all()) for v in x.values())
+
+    def test_elastic_trainer_sub_rounds_composes_with_telemetry(self):
+        from repro.core import dfedavg
+        from repro.launch.elastic import ElasticTrainer
+        from repro.overlay import plan as plan_lib
+        from repro.telemetry import TelemetryConfig
+        n = 12
+        tr = ElasticTrainer(
+            overlay=topology.expander_overlay(n, 4, seed=0),
+            loss_fn=lambda p, b: (jnp.mean(jnp.square(p["w"] - b["t"])),
+                                  {}),
+            dcfg=dfedavg.DFedAvgMConfig(local_steps=1, lr=0.2,
+                                        momentum=0.9),
+            plan=plan_lib.OnePeerPlan(),
+            engine=engine.GossipEngineConfig(
+                substrate="stacked", sub_rounds=2,
+                telemetry=TelemetryConfig()))
+        params = {"w": jnp.asarray(
+            np.random.default_rng(1).standard_normal((n, 16)), jnp.float32)}
+        r = np.random.default_rng(0)
+        for rnd in range(4):
+            alive = (r.random(n) > 0.2).astype(np.float32)
+            params, _, _ = tr.observe_heartbeats(alive, params)
+            params, _ = tr.step(
+                params, {"t": jnp.zeros((n, 2, 16), jnp.float32)}, 0.2)
+        assert tr.n_traces == 1  # coefficients + churn + gates are data
+        # telemetry composes: metrics measure the FIRST sub-round only, so
+        # they stay comparable across the sub_rounds axis
+        assert set(tr.last_metrics) == {"resid_sqnorm", "in_degree",
+                                        "sched_contrib"}
+        assert np.isfinite(np.asarray(params["w"])).all()
+
+
+class TestChebyshevSlowLane:
+    def _run(self, code):
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, cwd=".")
+        assert "OK" in out.stdout, out.stdout + out.stderr
+
+    @pytest.mark.slow
+    def test_shard_map_cheby_matches_oracle_and_ships_kd_permutes(self):
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import engine, gossip, mixing, packing, topology
+            from repro.launch.mesh import shard_map
+
+            mesh = jax.make_mesh((8,), ("client",))
+            ov = topology.expander_overlay(8, 4, seed=0)
+            spec = gossip.make_gossip_spec(ov)
+            r = np.random.default_rng(9)
+            x = {"a": jnp.asarray(r.standard_normal((8, 6, 5)), jnp.float32),
+                 "b": jnp.asarray(r.standard_normal((8, 11)), jnp.float32)}
+            alive = jnp.asarray([1., 1., 1., 0., 1., 1., 1., 1.], jnp.float32)
+            gates = jnp.asarray([1., 0., 1., 1.], jnp.float32)
+            locals_ = {"a": jax.ShapeDtypeStruct((6, 5), jnp.float32),
+                       "b": jax.ShapeDtypeStruct((11,), jnp.float32)}
+            pspec = packing.make_pack_spec(locals_)
+            specs = jax.tree.map(lambda _: P("client"), x)
+            put = lambda t: jax.device_put(t, jax.tree.map(
+                lambda _: NamedSharding(mesh, P("client")), t))
+            for k in (2, 3):
+                ex = engine.build_gossip_executor(
+                    engine.GossipEngineConfig(substrate="shard_map",
+                                              sub_rounds=k),
+                    spec, axis_names="client", pack_spec=pspec)
+                om = ex.cheby_coeffs()
+
+                def body(t, a, g, c):
+                    local = jax.tree.map(lambda v: v[0], t)
+                    mixed = ex(local, alive=a, gates=g, cheby=c)
+                    return jax.tree.map(lambda v: v[None], mixed)
+
+                fn = jax.jit(shard_map(body, mesh,
+                                       in_specs=(specs, P(), P(), P()),
+                                       out_specs=specs))
+                args = (put(x), alive, gates, jnp.asarray(om))
+                got = fn(*args)
+                m = np.asarray(gossip.gated_mixing_matrix(spec, gates,
+                                                          alive))
+                for key in x:
+                    ref = mixing.chebyshev_mix(np.asarray(x[key]), m, om)
+                    np.testing.assert_allclose(np.asarray(got[key]), ref,
+                                               rtol=2e-5, atol=2e-5)
+                text = fn.lower(*args).as_text()
+                perms = [l for l in text.splitlines()
+                         if "collective_permute" in l]
+                assert len(perms) == k * spec.degree, (k, len(perms))
+            print("SHARD_MAP_CHEBY_OK")
+        """)
+
+    @pytest.mark.slow
+    def test_production_step_ships_kd_permutes_and_k1_identity(self):
+        """Acceptance, in lowered HLO on the production step: sub_rounds=k
+        ships exactly k*d collective-permutes, wire accounting multiplies
+        by k, the (k,) cheby operand threads as one more donated traced
+        input, and sub_rounds=1 lowers TEXTUALLY IDENTICAL to the default
+        sync engine (zero-cost axis)."""
+        self._run("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax
+            from repro.configs import registry
+            from repro.configs.base import ShapeConfig, ParallelConfig, DFLConfig
+            from repro.launch import steps
+            from repro.models import params as P
+
+            mesh = jax.make_mesh((4, 4), ("data", "model"))
+            cfg = registry.reduced("qwen2.5-3b")
+            shape = ShapeConfig("t", 64, 8, "train")
+            texts, wires = {}, {}
+            for k in (1, 2, 3):
+                par = ParallelConfig(clients_per_pod=4, local_steps=2,
+                                     grad_accum=2,
+                                     gossip_impl="ppermute_packed",
+                                     gossip_sub_rounds=k)
+                setup = steps.build_train_step(cfg, shape, mesh, par,
+                                               DFLConfig(degree=2))
+                args = [P.shape_structs(setup.param_struct),
+                        setup.input_specs["batch"],
+                        setup.input_specs["lr"],
+                        setup.input_specs["alive"],
+                        setup.input_specs["gates"]]
+                if k > 1:
+                    om = np.asarray(setup.cheby_coeffs)
+                    assert om.shape == (k,) and om[0] == 1.0
+                    assert setup.input_specs["cheby"].shape == (k,)
+                    args.append(setup.input_specs["cheby"])
+                else:
+                    assert setup.cheby_coeffs is None
+                    assert "cheby" not in setup.input_specs
+                texts[k] = setup.step_fn.lower(*args).as_text()
+                wires[k] = setup.wire_bytes_per_round
+                d = setup.gossip_spec.degree
+                perms = [l for l in texts[k].splitlines()
+                         if "collective_permute" in l]
+                assert len(perms) == k * d, (k, len(perms), d)
+            assert wires[2] == 2 * wires[1] and wires[3] == 3 * wires[1]
+            # the k=1 cell IS the sync engine, byte for byte
+            par0 = ParallelConfig(clients_per_pod=4, local_steps=2,
+                                  grad_accum=2,
+                                  gossip_impl="ppermute_packed")
+            setup0 = steps.build_train_step(cfg, shape, mesh, par0,
+                                            DFLConfig(degree=2))
+            args0 = [P.shape_structs(setup0.param_struct),
+                     setup0.input_specs["batch"],
+                     setup0.input_specs["lr"],
+                     setup0.input_specs["alive"],
+                     setup0.input_specs["gates"]]
+            assert texts[1] == setup0.step_fn.lower(*args0).as_text()
+            print("CHEBY_STEP_HLO_OK")
         """)

@@ -133,3 +133,92 @@ else:
     @pytest.mark.parametrize("lam", [0.01, 0.37, 0.5, 0.93, 0.99])
     def test_mixing_time_consistent(lam):
         _check_mixing_time_consistent(lam)
+
+
+# --------------------------------------------------- Chebyshev acceleration
+class TestChebyshevCoefficients:
+    """The sub_rounds=k coefficient chooser (spectral.chebyshev_omegas /
+    chebyshev_lambda) and the registry convention it leans on: the lambda
+    the registry reports IS mixing_lambda of the Chow matrix —
+    max(|lambda_2|, |lambda_N|), in [0, 1) for every connected overlay."""
+
+    def _overlays(self):
+        from repro.overlay import registry
+        return [registry.build("ring", 16)[0],
+                registry.build("expander", 16, degree=4, seed=0)[0],
+                registry.build("random_regular", 16, degree=4, seed=1)[0]]
+
+    def test_registry_lambda_sign_and_normalization(self):
+        from repro.overlay import registry
+        for ov in self._overlays():
+            meta = registry.overlay_meta(ov)
+            w = ov.chow_weights()
+            # one lambda, three spellings: the registry record, the Chow
+            # weights, and the empirical spectrum of the mixing matrix
+            assert meta["lam"] == w.lam
+            lam_emp = spectral.mixing_lambda(ov.mixing_matrix())
+            assert lam_emp == pytest.approx(w.lam, abs=1e-9)
+            assert 0.0 <= w.lam < 1.0  # the sign/normalization pin
+            assert meta["spectral_gap"] == pytest.approx(1.0 - w.lam)
+            # and the k=2 record is the Chebyshev contraction of THAT lam
+            assert meta["cheby_lambda_k2"] == pytest.approx(
+                spectral.chebyshev_lambda(w.lam, 2))
+            assert meta["cheby_lambda_k2"] < w.lam ** 2
+
+    def test_chebyshev_schedule_matches_spectral(self):
+        from repro.overlay import registry
+        for ov in self._overlays():
+            for k in (1, 2, 4):
+                om = registry.chebyshev_schedule(ov, k)
+                np.testing.assert_array_equal(
+                    om, spectral.chebyshev_omegas(ov.chow_weights().lam, k))
+                assert om.shape == (k,) and om.dtype == np.float32
+                assert om[0] == 1.0
+
+    def test_omegas_recurrence_and_degenerate_lambda(self):
+        # T-ratio recurrence: omega_{j+1} = 1/(1 - (lam^2/4) omega_j),
+        # seeded at omega_1 = 2; our omegas[0] = 1 is the plain first round
+        lam = 0.8
+        om = spectral.chebyshev_omegas(lam, 4)
+        w = 2.0
+        for j in range(1, 4):
+            w = 1.0 / (1.0 - 0.25 * lam * lam * w)
+            assert om[j] == pytest.approx(w, rel=1e-6)
+        # lam outside [0, 1) degenerates to plain repetition, never a blowup
+        for bad in (-0.5, 1.0, 1.5):
+            np.testing.assert_array_equal(
+                spectral.chebyshev_omegas(bad, 3), np.ones(3, np.float32))
+        assert spectral.chebyshev_lambda(1.0, 2) == 1.0
+        assert spectral.chebyshev_lambda(0.0, 2) == 0.0
+
+
+def _check_chebyshev_contraction(lam, k):
+    """Property: on any consensus-style spectrum, k Chebyshev sub-rounds
+    contract the worst mode by 1/T_k(1/lam) — strictly beating lam^k plain
+    repetition — and preserve the consensus (all-ones) mode exactly."""
+    eff = spectral.chebyshev_lambda(lam, k)
+    if k == 1:
+        assert eff == pytest.approx(lam)
+    else:
+        assert eff < lam ** k * (1 + 1e-9)
+    # exact on a 2x2 toy whose nontrivial eigenvalue is exactly lam:
+    # m = [[(1+lam)/2, (1-lam)/2], [(1-lam)/2, (1+lam)/2]]
+    m = 0.5 * np.array([[1 + lam, 1 - lam], [1 - lam, 1 + lam]])
+    om = spectral.chebyshev_omegas(lam, k)
+    x = np.array([1.0, -1.0])  # pure worst-mode deviation
+    y = mixing.chebyshev_mix(x, m, om)
+    assert abs(y[0]) == pytest.approx(eff, abs=1e-6)
+    ones = mixing.chebyshev_mix(np.ones(2), m, om)
+    np.testing.assert_allclose(ones, 1.0, atol=1e-12)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(lam=st.floats(0.05, 0.98), k=st.integers(1, 6))
+    def test_chebyshev_contraction(lam, k):
+        _check_chebyshev_contraction(lam, k)
+else:
+    @pytest.mark.parametrize("lam,k", [(0.05, 1), (0.37, 2), (0.74, 2),
+                                       (0.9, 3), (0.98, 6)])
+    def test_chebyshev_contraction(lam, k):
+        _check_chebyshev_contraction(lam, k)

@@ -295,12 +295,179 @@ class TestElasticTelemetry:
             ElasticTrainer(overlay=ov, loss_fn=_quad_loss, dcfg=dcfg,
                            step_builder=lambda spec, tr: None,
                            telemetry=TelemetryConfig())
-        with pytest.raises(ValueError, match="blocked"):
+        # blocked + telemetry is now a supported (metrics-only) cell, but
+        # Chebyshev sub-rounds still don't ride the blocked substrate
+        with pytest.raises(ValueError, match="sub_rounds > 1"):
             ElasticTrainer(overlay=ov, loss_fn=_quad_loss, dcfg=dcfg,
-                           gossip_block=8, telemetry=TelemetryConfig())
+                           engine=engine.GossipEngineConfig(
+                               substrate="blocked", block=8, sub_rounds=2))
         with pytest.raises(TypeError, match="TelemetryConfig"):
             ElasticTrainer(overlay=ov, loss_fn=_quad_loss, dcfg=dcfg,
                            telemetry=True)
+
+
+# ---------------------------------------------- blocked-substrate metrics
+class TestBlockedTelemetry:
+    """Satellite: the metrics-only blocked telemetry cell. Consensus
+    residual + in-degree are measured on the device-local (B,)-leading rows
+    the blocked round already gathers; the island's P("clients") out_spec
+    concatenates them back to the (n,)-stacked layout. Validated against
+    the stacked-telemetry oracle, with the zero-extra-collectives contract
+    asserted in lowered HLO (slow lane)."""
+
+    def _blocked_island(self, spec, block, tel):
+        from jax.sharding import Mesh
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import shard_map
+
+        ex = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="blocked", block=block,
+                                      telemetry=tel),
+            spec, axis_names="clients")
+        mesh = Mesh(np.asarray(jax.devices()[:spec.n_clients // block]),
+                    ("clients",))
+
+        def body(t, a, g):
+            return ex(t, alive=a, gates=g)
+
+        out_specs = ((P("clients"), P("clients")) if tel is not None
+                     else P("clients"))
+        return jax.jit(shard_map(body, mesh,
+                                 in_specs=(P("clients"), P(), P()),
+                                 out_specs=out_specs))
+
+    def test_blocked_metrics_match_stacked_oracle(self):
+        n = 12
+        spec = gossip.make_gossip_spec(topology.expander_overlay(n, 4,
+                                                                 seed=0))
+        x = _tree(n, seed=3)
+        stacked = engine.build_gossip_executor(
+            engine.GossipEngineConfig(substrate="stacked",
+                                      telemetry=TelemetryConfig()), spec)
+        fn = self._blocked_island(spec, n, TelemetryConfig())
+        for t in range(3):
+            alive = (np.random.default_rng(t).random(n) > 0.3
+                     ).astype(np.float32)
+            if alive.sum() < 2:
+                alive[:] = 1
+            gates = np.zeros(spec.degree, np.float32)
+            gates[t % spec.degree] = 1.0
+            ref_mixed, ref = stacked(x, alive=jnp.asarray(alive),
+                                     gates=jnp.asarray(gates))
+            got_mixed, met = fn(x, jnp.asarray(alive), jnp.asarray(gates))
+            for k in x:   # telemetry-on blocked round == stacked round
+                np.testing.assert_array_equal(np.asarray(got_mixed[k]),
+                                              np.asarray(ref_mixed[k]))
+            assert met["resid_sqnorm"].shape == (n,)
+            assert met["sched_contrib"].shape == (n, spec.degree)
+            np.testing.assert_allclose(np.asarray(met["resid_sqnorm"]),
+                                       np.asarray(ref["resid_sqnorm"]),
+                                       rtol=2e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(met["in_degree"]),
+                                       np.asarray(ref["in_degree"]),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(met["sched_contrib"]),
+                                       np.asarray(ref["sched_contrib"]),
+                                       rtol=1e-6)
+
+    def test_trainer_blocked_telemetry_zero_retraces(self):
+        n = 8
+        tr = ElasticTrainer(
+            overlay=topology.expander_overlay(n, 4, seed=0),
+            loss_fn=_quad_loss,
+            dcfg=dfedavg.DFedAvgMConfig(local_steps=1, lr=0.2, momentum=0.9),
+            plan=plan_lib.OnePeerPlan(),
+            engine=engine.GossipEngineConfig(
+                substrate="blocked", block=n,
+                telemetry=TelemetryConfig()))
+        params = {"w": _tree(n, shapes=((16,),))["p0"]}
+        r = np.random.default_rng(0)
+        for rnd in range(4):
+            alive = (r.random(n) > 0.2).astype(np.float32)
+            params, _, _ = tr.observe_heartbeats(alive, params)
+            params, _ = tr.step(
+                params, {"t": jnp.zeros((n, 2, 16), jnp.float32)}, 0.2)
+        assert tr.n_traces == 1  # metrics + churn + gates are all data
+        met = tr.last_metrics
+        assert set(met) == {"resid_sqnorm", "in_degree", "sched_contrib"}
+        assert met["resid_sqnorm"].shape == (n,)
+        assert met["in_degree"].shape == (n,)
+        assert met["sched_contrib"].shape == (n, tr.overlay.degree)
+        for v in met.values():
+            assert np.isfinite(np.asarray(v)).all()
+
+    @pytest.mark.slow
+    def test_blocked_telemetry_ships_zero_extra_collectives(self):
+        """Acceptance, in lowered HLO on a real 4-device blocked layout:
+        telemetry ON ships exactly the same count of EVERY collective kind
+        as OFF (the cross-block permutes included), and the cross-device
+        metrics still match the stacked oracle."""
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import Mesh, PartitionSpec as P
+            from repro.core import engine, gossip, topology
+            from repro.launch.mesh import shard_map
+            from repro.telemetry import TelemetryConfig
+
+            n, b = 16, 4
+            spec = gossip.make_gossip_spec(
+                topology.expander_overlay(n, 4, seed=0))
+            r = np.random.default_rng(0)
+            tree = {"a": jnp.asarray(r.standard_normal((n, 6, 5)),
+                                     jnp.float32),
+                    "b": jnp.asarray(r.standard_normal((n, 11)),
+                                     jnp.float32)}
+            alive = jnp.asarray((np.random.default_rng(1).random(n) > 0.25)
+                                .astype(np.float32))
+            gates = jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32)
+            mesh = Mesh(np.asarray(jax.devices()[: n // b]), ("clients",))
+            texts, outs = {}, {}
+            for tel in (False, True):
+                ex = engine.build_gossip_executor(
+                    engine.GossipEngineConfig(
+                        substrate="blocked", block=b,
+                        telemetry=TelemetryConfig() if tel else None),
+                    spec, axis_names="clients")
+                def body(t, a, g, ex=ex):
+                    return ex(t, alive=a, gates=g)
+                out_specs = ((P("clients"), P("clients")) if tel
+                             else P("clients"))
+                fn = jax.jit(shard_map(body, mesh,
+                                       in_specs=(P("clients"), P(), P()),
+                                       out_specs=out_specs))
+                texts[tel] = fn.lower(tree, alive, gates).as_text()
+                outs[tel] = fn(tree, alive, gates)
+            KINDS = ("collective-permute", "all-reduce", "all-gather",
+                     "reduce-scatter", "all-to-all")
+            counts = {tel: {k: texts[tel].count(k) for k in KINDS}
+                      for tel in (False, True)}
+            assert counts[True] == counts[False], counts
+            perms = [l for l in texts[True].splitlines()
+                     if "collective_permute" in l]
+            assert len(perms) > 0  # the expander DOES cross blocks
+            mixed_t, met = outs[True]
+            for k in tree:
+                assert np.array_equal(np.asarray(mixed_t[k]),
+                                      np.asarray(outs[False][k]))
+            ex_s = engine.build_gossip_executor(
+                engine.GossipEngineConfig(substrate="stacked",
+                                          telemetry=TelemetryConfig()),
+                spec)
+            _, ref = ex_s(tree, alive=alive, gates=gates)
+            np.testing.assert_allclose(np.asarray(met["resid_sqnorm"]),
+                                       np.asarray(ref["resid_sqnorm"]),
+                                       rtol=2e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(met["in_degree"]),
+                                       np.asarray(ref["in_degree"]),
+                                       rtol=1e-6)
+            print("BLOCKED_TEL_OK n_perms=", len(perms))
+        """)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, cwd=".")
+        assert "BLOCKED_TEL_OK" in out.stdout, out.stdout + out.stderr
 
 
 # ------------------------------------------------------------- the report
